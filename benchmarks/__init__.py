@@ -1,0 +1,1 @@
+"""Benchmark suite — see ``benchmarks.run``."""

@@ -1,0 +1,54 @@
+"""Paper Fig 6: communication/computation breakdown of the join operator.
+
+Times the full distributed join, its shuffle stage alone, and the local
+sort-merge alone, per parallelism — reproducing the paper's observation
+that communication dominates join wall time as parallelism grows.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import CylonEnv, DistTable
+from repro.dataframe import join, join_local, shuffle
+
+from .common import make_table_data, record, time_fn
+
+
+def run(rows_per_rank: int = 50_000) -> None:
+    n_dev = len(jax.devices())
+    sizes = [p for p in (2, 4, 8) if p <= n_dev]
+    for p in sizes:
+        rows = rows_per_rank * p
+        ld, rd = make_table_data(rows, seed=0), make_table_data(rows, seed=1)
+        env = CylonEnv(jax.devices()[:p])
+        lt = DistTable.from_numpy(ld, p)
+        rt = DistTable.from_numpy(rd, p)
+
+        def full(e=env, l=lt, r=rt):
+            def prog(ctx, a, b):
+                out, *_ = join(a, b, ctx.comm, on="k",
+                               out_capacity=a.capacity * 4)
+                return out
+            return e.run(prog, l, r, key=("full", p)).row_counts
+
+        def comm_only(e=env, l=lt, r=rt):
+            def prog(ctx, a, b):
+                sa, _ = shuffle(a, ctx.comm, key_cols=["k"])
+                sb, _ = shuffle(b, ctx.comm, key_cols=["k"])
+                return sa, sb
+            return e.run(prog, l, r, key=("comm", p))[0].row_counts
+
+        def compute_only(e=env, l=lt, r=rt):
+            def prog(ctx, a, b):
+                return join_local(a, b, "k", out_capacity=a.capacity * 4)
+            return e.run(prog, l, r, key=("local", p)).row_counts
+
+        t_full = time_fn(full)
+        t_comm = time_fn(comm_only)
+        t_comp = time_fn(compute_only)
+        record("join_breakdown(Fig6)", f"full_p{p}", t_full, parallelism=p)
+        record("join_breakdown(Fig6)", f"shuffle_p{p}", t_comm,
+               parallelism=p, comm_fraction=round(t_comm / t_full, 3))
+        record("join_breakdown(Fig6)", f"local_join_p{p}", t_comp,
+               parallelism=p)

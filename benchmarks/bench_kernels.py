@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (interpret-mode correctness timing + ref compare).
+
+On this CPU container Pallas kernels execute in interpret mode, so the
+numbers quantify the *oracle agreement* and interpret overhead, not TPU
+speed; the dry-run roofline covers the TPU-side projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import (attention_ref, flash_attention, radix_partition,
+                           radix_partition_ref, segmented_sum,
+                           segmented_sum_ref, ssd_scan, ssd_scan_ref)
+
+from .common import record, time_fn
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    seg = jnp.asarray(np.sort(rng.integers(0, 512, 4096)).astype(np.int32))
+    vals = jnp.asarray(rng.random((4096, 4)).astype(np.float32))
+    t_k = time_fn(lambda: segmented_sum(seg, vals, 512), iters=3)
+    t_r = time_fn(lambda: segmented_sum_ref(seg, vals, 512), iters=3)
+    err = float(jnp.abs(segmented_sum(seg, vals, 512)
+                        - segmented_sum_ref(seg, vals, 512)).max())
+    record("kernels", "segmented_sum_interp", t_k, max_err=err)
+    record("kernels", "segmented_sum_ref", t_r)
+
+    dest = jnp.asarray(rng.integers(0, 64, 8192).astype(np.int32))
+    t_k = time_fn(lambda: radix_partition(dest, 64), iters=3)
+    t_r = time_fn(lambda: radix_partition_ref(dest, 64), iters=3)
+    ok = all(bool(jnp.array_equal(a, b)) for a, b in
+             zip(radix_partition(dest, 64), radix_partition_ref(dest, 64)))
+    record("kernels", "radix_partition_interp", t_k, exact=ok)
+    record("kernels", "radix_partition_ref", t_r)
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    t_k = time_fn(lambda: flash_attention(q, k, v), iters=3)
+    t_r = time_fn(lambda: attention_ref(q, k, v), iters=3)
+    err = float(jnp.abs(flash_attention(q, k, v)
+                        - attention_ref(q, k, v)).max())
+    record("kernels", "flash_attention_interp", t_k, max_err=err)
+    record("kernels", "flash_attention_ref", t_r)
+
+    x = jnp.asarray(rng.standard_normal((4, 512, 32)), jnp.float32)
+    dt = jnp.asarray(rng.random((4, 512, 1)) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-rng.random((4, 1)) - 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4, 512, 16)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((4, 512, 16)), jnp.float32)
+    t_k = time_fn(lambda: ssd_scan(x, dt, a, b, c), iters=3)
+    t_r = time_fn(lambda: ssd_scan_ref(x, dt, a, b, c), iters=3)
+    err = float(jnp.abs(ssd_scan(x, dt, a, b, c)[0]
+                        - ssd_scan_ref(x, dt, a, b, c)[0]).max())
+    record("kernels", "ssd_scan_interp", t_k, max_err=err)
+    record("kernels", "ssd_scan_ref", t_r)

@@ -1,0 +1,72 @@
+"""Paper §V-C serial performance: local operators vs numpy reference.
+
+The paper credits CylonFlow's superior *sequential* performance to native
+C++ execution over Arrow data; the analogue here is jit-compiled XLA
+columnar kernels vs interpreted numpy.  One device, no communication.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dataframe import Table, groupby_local, join_local, sort_local
+
+from .common import make_table_data, record, time_fn
+
+
+def numpy_join(l, r, on="k"):
+    import numpy as np
+    order = np.argsort(r[on], kind="stable")
+    rk = r[on][order]
+    lo = np.searchsorted(rk, l[on], "left")
+    hi = np.searchsorted(rk, l[on], "right")
+    counts = hi - lo
+    total = counts.sum()
+    li = np.repeat(np.arange(len(l[on])), counts)
+    offs = (lo.repeat(counts)
+            + (np.arange(total) - np.repeat(counts.cumsum() - counts, counts)))
+    return {**{k: v[li] for k, v in l.items()},
+            **{f"{k}_r": v[order][offs] for k, v in r.items() if k != on}}
+
+
+def numpy_groupby(d, key="k", val="v0"):
+    uk, inv = np.unique(d[key], return_inverse=True)
+    sums = np.zeros(len(uk), np.float64)
+    np.add.at(sums, inv, d[val])
+    return uk, sums
+
+
+def run(rows: int = 200_000) -> None:
+    ld = make_table_data(rows, seed=0)
+    rd = make_table_data(rows, seed=1)
+    lt = Table.from_arrays(ld)
+    rt = Table.from_arrays(rd)
+
+    out_cap = rows * 4
+    jit_join = jax.jit(lambda a, b: join_local(a, b, "k", out_capacity=out_cap))
+    record("local_ops(V-C)", f"join_xla_{rows}",
+           time_fn(jit_join, lt, rt), rows=rows)
+    t0 = time.perf_counter()
+    numpy_join(ld, rd)
+    record("local_ops(V-C)", f"join_numpy_{rows}",
+           time.perf_counter() - t0, rows=rows)
+
+    jit_gb = jax.jit(lambda a: groupby_local(a, ["k"], {"v0": ["sum"]}))
+    record("local_ops(V-C)", f"groupby_xla_{rows}",
+           time_fn(jit_gb, lt), rows=rows)
+    t0 = time.perf_counter()
+    numpy_groupby(ld)
+    record("local_ops(V-C)", f"groupby_numpy_{rows}",
+           time.perf_counter() - t0, rows=rows)
+
+    jit_sort = jax.jit(lambda a: sort_local(a, ["k"]))
+    record("local_ops(V-C)", f"sort_xla_{rows}",
+           time_fn(jit_sort, lt), rows=rows)
+    t0 = time.perf_counter()
+    np.sort(ld["k"], kind="stable")
+    record("local_ops(V-C)", f"sort_numpy_{rows}",
+           time.perf_counter() - t0, rows=rows)

@@ -1,0 +1,66 @@
+"""Paper Fig 8: strong scaling of join / groupby / sort.
+
+Fixed global rows, parallelism 1..8, comparing:
+  * ``bsp``  — the CylonFlow execution model (this paper's contribution),
+  * ``amt``  — the Dask-DDF-style baseline (per-operator dispatch +
+    allgather-then-select object-store shuffle).
+
+Also measures groupby with and without partial-aggregation pushdown at the
+paper's 90% cardinality worst case vs a 1% low-cardinality case.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.dataframe import groupby, join, sort
+
+from .common import make_table_data, record, time_fn
+
+
+def run(global_rows: int = 200_000) -> None:
+    n_dev = len(jax.devices())
+    sizes = [p for p in (1, 2, 4, 8) if p <= n_dev]
+    ld = make_table_data(global_rows, seed=0)
+    rd = make_table_data(global_rows, seed=1)
+
+    for p in sizes:
+        env = CylonEnv(jax.devices()[:p])
+        lt = DistTable.from_numpy(ld, p)
+        rt = DistTable.from_numpy(rd, p)
+
+        plans = {
+            "join": Plan.scan("l").join(Plan.scan("r"), on="k",
+                                        out_capacity=lt.capacity * 4),
+            "groupby": Plan.scan("l").groupby(["k"], {"v0": ["sum"]}),
+            "sort": Plan.scan("l").sort(["k"]),
+        }
+        for opname, plan in plans.items():
+            for mode in ("bsp", "amt"):
+                def do(pl=plan, m=mode):
+                    return execute(pl, env, {"l": lt, "r": rt},
+                                   mode=m).row_counts
+                record("strong_scaling(Fig8)", f"{opname}_{mode}_p{p}",
+                       time_fn(do, iters=3), op=opname, mode=mode,
+                       parallelism=p, rows=global_rows)
+
+    # partial-aggregation pushdown (coalescing direction of the paper)
+    p = min(8, n_dev)
+    env = CylonEnv(jax.devices()[:p])
+    for card, tag in ((0.9, "hi_card"), (0.01, "lo_card")):
+        data = make_table_data(global_rows, cardinality=card, seed=2)
+        t = DistTable.from_numpy(data, p)
+
+        def do(pre: bool, t=t, env=env):
+            def prog(ctx, a):
+                out, _ = groupby(a, ctx.comm, ["k"], {"v0": ["sum"]},
+                                 pre_aggregate=pre)
+                return out
+            return env.run(prog, t, key=("pre", pre, tag)).row_counts
+
+        for pre in (True, False):
+            record("strong_scaling(Fig8)",
+                   f"groupby_preagg[{pre}]_{tag}_p{p}",
+                   time_fn(do, pre, iters=3), cardinality=card,
+                   pre_aggregate=pre, parallelism=p)

@@ -1,0 +1,65 @@
+"""Shared benchmark utilities (timing, data generation, CSV output).
+
+Benchmarks run on the CPU backend with 8 placeholder devices (set by
+``benchmarks.run`` before jax initializes).  Wall times on CPU measure
+*relative* behaviour (scaling shape, schedule overheads, dispatch counts)
+— the TPU roofline numbers live in the dry-run, not here.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+RESULTS: List[Dict] = []
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kwargs) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def record(bench: str, case: str, seconds: float, **extra) -> None:
+    row = {"bench": bench, "case": case, "seconds": round(seconds, 6),
+           **extra}
+    RESULTS.append(row)
+    extras = " ".join(f"{k}={v}" for k, v in extra.items())
+    print(f"{bench:24s} {case:32s} {seconds * 1e3:10.2f} ms  {extras}",
+          flush=True)
+
+
+def make_table_data(rows: int, cardinality: float = 0.9, seed: int = 0,
+                    value_cols: int = 1) -> Dict[str, np.ndarray]:
+    """Paper §V data recipe: uniform int64->int32 keys, 90% cardinality."""
+    rng = np.random.default_rng(seed)
+    n_unique = max(1, int(rows * cardinality))
+    data = {"k": rng.integers(0, n_unique, rows).astype(np.int32)}
+    for i in range(value_cols):
+        data[f"v{i}"] = rng.random(rows).astype(np.float32)
+    return data
+
+
+def dump_csv(path: Optional[str] = None) -> str:
+    keys = ["bench", "case", "seconds"]
+    extra_keys = sorted({k for r in RESULTS for k in r} - set(keys))
+    lines = [",".join(keys + extra_keys)]
+    for r in RESULTS:
+        lines.append(",".join(str(r.get(k, "")) for k in keys + extra_keys))
+    out = "\n".join(lines)
+    if path:
+        with open(path, "w") as f:
+            f.write(out + "\n")
+    return out

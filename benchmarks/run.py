@@ -1,0 +1,62 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+Modules (paper artifact -> bench):
+  Fig 6 comm/compute breakdown of join  -> bench_join_breakdown
+  Fig 7 OpenMPI vs Gloo vs UCX/UCC      -> bench_communicators
+  Fig 8 strong scaling + pre-agg        -> bench_strong_scaling
+  Fig 9 pipeline of operators           -> bench_pipeline
+  §V-C serial performance               -> bench_local_ops
+  kernels (interpret vs oracle)         -> bench_kernels
+  beyond-paper MoE-dispatch-as-shuffle  -> bench_moe_shuffle
+
+The 8-device XLA_FLAGS above is set before jax initializes (scaling
+benches need parallelism); the dry-run (512 devices) is a separate entry
+point, and unit tests see the plain 1-device backend.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller row counts (CI-speed)")
+    ap.add_argument("--csv", default="bench_results.csv")
+    args = ap.parse_args()
+
+    from . import (bench_communicators, bench_join_breakdown, bench_kernels,
+                   bench_local_ops, bench_moe_shuffle, bench_pipeline,
+                   bench_strong_scaling)
+    from .common import RESULTS, dump_csv
+
+    scale = 4 if args.quick else 1
+    suites = {
+        "local_ops": lambda: bench_local_ops.run(200_000 // scale),
+        "communicators": lambda: bench_communicators.run(50_000 // scale),
+        "join_breakdown": lambda: bench_join_breakdown.run(50_000 // scale),
+        "strong_scaling": lambda: bench_strong_scaling.run(200_000 // scale),
+        "pipeline": lambda: bench_pipeline.run(100_000 // scale),
+        "kernels": bench_kernels.run if not args.quick else bench_kernels.run,
+        "moe_shuffle": bench_moe_shuffle.run,
+    }
+    t0 = time.time()
+    for name, fn in suites.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        fn()
+    print(f"\n{len(RESULTS)} results in {time.time() - t0:.1f}s")
+    dump_csv(args.csv)
+    print(f"csv -> {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

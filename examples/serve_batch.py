@@ -1,0 +1,54 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Batched serving example: prefill + synchronized decode on a small model.
+
+Loads a reduced qwen3-family config, runs batched generation (greedy and
+sampled), and verifies the decode path against a full-forward replay.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import transformer
+from repro.serve import ServeEngine
+
+cfg = get_smoke_config("qwen3-8b")
+params = transformer.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+
+B, S0, NEW = 8, 32, 48
+engine = ServeEngine(cfg, params, cache_len=S0 + NEW)
+rng = np.random.default_rng(0)
+prompts = rng.integers(0, cfg.vocab_size, (B, S0)).astype(np.int32)
+
+t0 = time.time()
+res = engine.generate(prompts, max_new_tokens=NEW, temperature=0.0)
+dt = time.time() - t0
+print(f"greedy: {B}x{res.steps} tokens in {dt:.2f}s "
+      f"({B * res.steps / dt:.1f} tok/s incl. compile)")
+
+t0 = time.time()
+res2 = engine.generate(prompts, max_new_tokens=NEW, temperature=0.8, seed=1)
+dt = time.time() - t0
+print(f"sampled: {B}x{res2.steps} tokens in {dt:.2f}s "
+      f"({B * res2.steps / dt:.1f} tok/s cached)")
+
+# verify: greedy decode must match argmax of a full forward at each step
+full = np.concatenate([prompts, res.tokens[:, :, 0]
+                       if res.tokens.ndim == 3 else res.tokens], axis=1)
+h, _ = transformer.forward(params, cfg, {"tokens": jnp.asarray(full)})
+w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+logits = jnp.einsum("bsd,vd->bsv", h, w.astype(jnp.bfloat16)
+                    ).astype(jnp.float32)
+ok = True
+for t in range(res.steps):
+    expect = np.asarray(jnp.argmax(logits[:, S0 - 1 + t], -1))
+    got = res.tokens[:, t, 0] if res.tokens.ndim == 3 else res.tokens[:, t]
+    ok &= bool((expect == got).all())
+print(f"greedy decode == full-forward argmax replay: {ok}")

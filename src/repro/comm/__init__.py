@@ -1,0 +1,21 @@
+"""Modular communicator layer (paper §IV-B): swappable collective schedules."""
+
+from .communicator import (
+    Communicator,
+    available_communicators,
+    get_communicator,
+    register_communicator,
+)
+from .xla import XlaCommunicator
+from .ring import RingCommunicator
+from .bruck import BruckCommunicator
+
+__all__ = [
+    "Communicator",
+    "XlaCommunicator",
+    "RingCommunicator",
+    "BruckCommunicator",
+    "available_communicators",
+    "get_communicator",
+    "register_communicator",
+]

@@ -1,0 +1,98 @@
+"""Bruck / recursive-doubling collective schedules (the UCC analogue).
+
+Latency-optimal algorithms: ``all_to_all`` is the Bruck algorithm
+(⌈log₂p⌉ steps, each moving half the buffer) [Bruck et al., IEEE TPDS'97,
+the paper's ref 16]; ``all_gather``/``all_reduce`` use recursive doubling
+when p is a power of two and fall back to ring otherwise — mirroring how
+UCC/tuned-MPI select an algorithm per collective and message size.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .communicator import Communicator, register_communicator
+from .ring import RingCommunicator, _shift_perm
+
+
+@register_communicator
+class BruckCommunicator(Communicator):
+    name = "bruck"
+
+    def __init__(self, axis: str):
+        super().__init__(axis)
+        self._ring = RingCommunicator(axis)
+
+    # ------------------------------------------------------------------ #
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        p = self.size()
+        r = self.rank()
+        if p == 1:
+            return x
+        # Phase 1 — local rotation: slot i holds the block destined to rank
+        # (r + i) % p ("relative destination i").
+        idx = (r + jnp.arange(p)) % p
+        b = jnp.take(x, idx, axis=0)
+        # Phase 2 — log steps: slot-i blocks must travel distance i; move the
+        # slots with bit k set by +2^k each step.
+        nsteps = max(1, math.ceil(math.log2(p)))
+        for k in range(nsteps):
+            dist = 1 << k
+            if dist >= p and p > 1 and (p & (p - 1)) == 0:
+                break
+            sel = [i for i in range(p) if (i >> k) & 1]
+            if not sel:
+                continue
+            send = b[jnp.asarray(sel)]
+            got = self.ppermute(send, _shift_perm(p, dist))
+            b = b.at[jnp.asarray(sel)].set(got)
+        # Phase 3 — slot i now holds the block from rank (r - i) % p destined
+        # to us; reorder to rank-major.
+        out_idx = (r - jnp.arange(p)) % p
+        return jnp.take(b, out_idx, axis=0)
+
+    # ------------------------------------------------------------------ #
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        p = self.size()
+        if p & (p - 1):  # not a power of two -> ring
+            return self._ring.all_gather(x)
+        r = self.rank()
+        if p == 1:
+            return x[None]
+        buf = x[None]
+        k = 0
+        while (1 << k) < p:
+            dist = 1 << k
+            perm = [(s, s ^ dist) for s in range(p)]
+            got = self.ppermute(buf, perm)
+            buf = jnp.concatenate([buf, got], axis=0)  # buf[m] = rank (r ^ m)
+            k += 1
+        idx = r ^ jnp.arange(p)
+        return jnp.take(buf, idx, axis=0)
+
+    # ------------------------------------------------------------------ #
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        p = self.size()
+        if p & (p - 1):
+            return self._ring.all_reduce(x)
+        v = x
+        k = 0
+        while (1 << k) < p:
+            dist = 1 << k
+            perm = [(s, s ^ dist) for s in range(p)]
+            v = v + self.ppermute(v, perm)
+            k += 1
+        return v
+
+    # ------------------------------------------------------------------ #
+    def reduce_scatter(self, x: jax.Array) -> jax.Array:
+        # Small-payload regime: allreduce-then-slice (latency optimal).
+        p = self.size()
+        r = self.rank()
+        if p == 1:
+            return x[0]
+        full = self.all_reduce(x)
+        return jax.lax.dynamic_index_in_dim(full, r, axis=0, keepdims=False)

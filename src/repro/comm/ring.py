@@ -1,0 +1,97 @@
+"""Ring collective schedules built from ``ppermute`` (the Gloo analogue).
+
+Bandwidth-optimal, latency O(p).  Every step is a neighbour exchange on the
+ring, so on a TPU torus each step maps onto a single ICI hop.  The (p-1)
+steps are unrolled into the HLO, so this backend targets modest axis sizes
+(the measured benchmarks use p ≤ 8 on CPU, p = 16 structurally); production
+meshes default to ``xla``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .communicator import Communicator, register_communicator
+
+
+def _shift_perm(p: int, k: int = 1):
+    """Permutation sending rank s -> rank (s+k) % p (receive from s-k)."""
+    return [(s, (s + k) % p) for s in range(p)]
+
+
+def _dyn_block(x: jax.Array, i) -> jax.Array:
+    """x[(i,)] with a traced index, keeping the block dims."""
+    return jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False)
+
+
+@register_communicator
+class RingCommunicator(Communicator):
+    name = "ring"
+
+    # ------------------------------------------------------------------ #
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        p = self.size()
+        r = self.rank()
+        if p == 1:
+            return x[None]
+        # rel[k] = block originating at rank (r - k) % p
+        rel = [x]
+        cur = x
+        perm = _shift_perm(p, 1)
+        for _ in range(1, p):
+            cur = self.ppermute(cur, perm)
+            rel.append(cur)
+        stacked = jnp.stack(rel)
+        # out[j] = block from rank j = rel[(r - j) % p]
+        idx = (r - jnp.arange(p)) % p
+        return jnp.take(stacked, idx, axis=0)
+
+    # ------------------------------------------------------------------ #
+    def reduce_scatter(self, x: jax.Array) -> jax.Array:
+        # x: (p, m, ...) block-major; rank r ends with sum_i x_i[r].
+        p = self.size()
+        r = self.rank()
+        if p == 1:
+            return x[0]
+        perm = _shift_perm(p, 1)
+        # Token for chunk j starts at rank (j+1)%p and travels the full ring,
+        # accumulating each host's contribution for chunk j on the way.
+        v = _dyn_block(x, (r - 1) % p)
+        for t in range(1, p):
+            v = self.ppermute(v, perm)
+            v = v + _dyn_block(x, (r - 1 - t) % p)
+        return v  # token now carries chunk r, fully reduced
+
+    # ------------------------------------------------------------------ #
+    def all_reduce(self, x: jax.Array) -> jax.Array:
+        p = self.size()
+        if p == 1:
+            return x
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1)
+        n = flat.shape[0]
+        chunk = -(-n // p)  # ceil
+        pad = chunk * p - n
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+        blocks = flat.reshape(p, chunk)
+        mine = self.reduce_scatter(blocks)          # (chunk,)
+        full = self.all_gather(mine).reshape(-1)     # (p*chunk,)
+        return full[:n].reshape(shape)
+
+    # ------------------------------------------------------------------ #
+    def all_to_all(self, x: jax.Array) -> jax.Array:
+        # Pairwise-exchange schedule: at step k every rank sends its block
+        # (r+k)%p directly to rank (r+k)%p; p-1 steps.
+        p = self.size()
+        r = self.rank()
+        if p == 1:
+            return x
+        rel = [_dyn_block(x, r)]  # rel[k] = block received from rank (r-k)%p
+        for k in range(1, p):
+            send = _dyn_block(x, (r + k) % p)
+            rel.append(self.ppermute(send, _shift_perm(p, k)))
+        stacked = jnp.stack(rel)
+        idx = (r - jnp.arange(p)) % p  # out[j] = rel[(r-j)%p]
+        return jnp.take(stacked, idx, axis=0)

@@ -1,0 +1,44 @@
+"""Assigned-architecture configs (one module per arch + smoke variants).
+
+``get_config(arch)`` / ``get_smoke_config(arch)`` resolve the public arch ids
+(e.g. ``"llama3.2-3b"``).  Every full config matches the assignment block
+verbatim; smoke configs are same-family reductions for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen3-32b": "qwen3_32b",
+    "gemma-7b": "gemma_7b",
+    "qwen3-8b": "qwen3_8b",
+    "mamba2-780m": "mamba2_780m",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "llava-next-34b": "llava_next_34b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "musicgen-large": "musicgen_large",
+}
+
+ARCHS: List[str] = list(_MODULES)
+
+
+def _module(arch: str):
+    try:
+        name = _MODULES[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; known: {ARCHS}") from None
+    return importlib.import_module(f".{name}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE

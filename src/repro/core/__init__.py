@@ -1,0 +1,16 @@
+"""The paper's primary contribution: pseudo-BSP DDF execution on device meshes.
+
+Pieces: ``CylonEnv`` (stateful BSP environment), ``CylonExecutor`` (actor-gang
+resource partitioning), ``Plan``/``execute`` (logical plan + coalescing, with
+the AMT baseline mode), ``CylonStore`` (downstream hand-off + repartition).
+"""
+
+from .env import AXIS, CylonEnv, DevicePool, DistTable, EnvContext
+from .actor import CylonExecutor
+from .plan import Plan, execute
+from .store import CylonStore, repartition
+
+__all__ = [
+    "AXIS", "CylonEnv", "CylonExecutor", "CylonStore", "DevicePool",
+    "DistTable", "EnvContext", "Plan", "execute", "repartition",
+]

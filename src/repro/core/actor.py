@@ -1,0 +1,49 @@
+"""CylonExecutor: actor-gang resource partitioning (paper §IV-A).
+
+Mirrors the paper's API surface:
+
+  * ``start_executable``  — install a stateful executable on the gang,
+  * ``execute_cylon``     — run a method of the installed executable,
+  * ``run_cylon``         — run a free function against the env.
+
+An executor reserves ``parallelism`` devices from a ``DevicePool`` (the
+analogue of Ray placement groups / Dask worker selection) and owns a
+``CylonEnv`` whose communicator + compiled-program cache persist across
+submissions — the stateful pseudo-BSP environment.  Independent executors on
+disjoint partitions give the paper's application-level parallelism.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from .env import CylonEnv, DevicePool
+
+
+class CylonExecutor:
+    def __init__(self, parallelism: int, pool: Optional[DevicePool] = None,
+                 communicator: str = "xla", axis: str = "df"):
+        pool = pool or DevicePool()
+        self.devices = pool.reserve(parallelism)
+        self.env = CylonEnv(self.devices, communicator=communicator, axis=axis)
+        self._executable = None
+
+    @property
+    def parallelism(self) -> int:
+        return self.env.parallelism
+
+    # -- the paper's three endpoints ------------------------------------ #
+    def start_executable(self, executable_cls: Callable, *args, **kwargs):
+        """Instantiate a stateful executable inside the gang."""
+        self._executable = executable_cls(*args, **kwargs)
+        return self._executable
+
+    def execute_cylon(self, method_name: str, *dist_args, **kw):
+        if self._executable is None:
+            raise RuntimeError("no executable installed; call start_executable")
+        method = getattr(self._executable, method_name)
+        return self.env.run(method, *dist_args, **kw)
+
+    def run_cylon(self, fn: Callable, *dist_args, **kw):
+        """Run ``fn(ctx, *tables)`` on the gang (ctx carries the communicator)."""
+        return self.env.run(fn, *dist_args, **kw)

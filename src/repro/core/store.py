@@ -1,0 +1,67 @@
+"""CylonStore: sharing DDF results with downstream applications (paper §IV-C).
+
+Keyed store of distributed tables.  ``get`` with a different target
+parallelism triggers the repartition routine the paper calls out: rows are
+re-split across the new gang.  The store is the hand-off point between data
+preprocessing executors and the training application (see
+``repro.data.pipeline`` / ``examples/train_e2e.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from .env import CylonEnv, DistTable
+
+
+class CylonStore:
+    def __init__(self):
+        self._data: Dict[str, DistTable] = {}
+        self._cv = threading.Condition()
+
+    def put(self, key: str, table: DistTable) -> None:
+        with self._cv:
+            self._data[key] = table
+            self._cv.notify_all()
+
+    def get(self, key: str, target_parallelism: Optional[int] = None,
+            capacity: Optional[int] = None, timeout: Optional[float] = None
+            ) -> DistTable:
+        """Fetch (blocking, like the paper's example) + repartition if needed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while key not in self._data:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"CylonStore.get({key!r}) timed out")
+                self._cv.wait(timeout=remaining)
+            table = self._data[key]
+        if target_parallelism is None or target_parallelism == table.parallelism:
+            return table
+        return repartition(table, target_parallelism, capacity)
+
+    def keys(self):
+        return sorted(self._data)
+
+    def delete(self, key: str) -> None:
+        with self._cv:
+            self._data.pop(key, None)
+
+
+def repartition(table: DistTable, parallelism: int,
+                capacity: Optional[int] = None) -> DistTable:
+    """Re-split a distributed table across a different gang size.
+
+    Host-staged (gather + rescatter): correctness-first, used at application
+    boundaries where the paper stages through NFS / the object store anyway.
+    """
+    data = table.to_numpy()
+    n = len(next(iter(data.values()))) if data else 0
+    per = -(-max(n, 1) // parallelism)
+    cap = capacity or max(8, -(-per // 8) * 8)
+    return DistTable.from_numpy(data, parallelism, capacity=cap)

@@ -1,0 +1,7 @@
+"""Data layer: synthetic corpus + DDF preprocessing -> training batches."""
+
+from .pipeline import (CorpusConfig, batches_from_table, preprocess,
+                       source_weights, synth_corpus)
+
+__all__ = ["CorpusConfig", "batches_from_table", "preprocess",
+           "source_weights", "synth_corpus"]

@@ -1,0 +1,25 @@
+"""Distributed dataframe engine (the paper's HP-DDF, adapted to JAX/TPU)."""
+
+from .table import Table, concat_tables
+from .ops_local import (
+    add_scalar,
+    filter_rows,
+    groupby_local,
+    hash_columns,
+    join_local,
+    join_overflow,
+    map_columns,
+    sort_local,
+)
+from .shuffle import ShuffleStats, default_bucket_capacity, shuffle
+from .groupby import groupby
+from .join import join
+from .sort import repartition_balanced, sort
+
+__all__ = [
+    "Table", "concat_tables",
+    "add_scalar", "filter_rows", "groupby_local", "hash_columns",
+    "join_local", "join_overflow", "map_columns", "sort_local",
+    "ShuffleStats", "default_bucket_capacity", "shuffle",
+    "groupby", "join", "sort", "repartition_balanced",
+]

@@ -1,0 +1,30 @@
+"""Distributed equi-join: co-hash shuffle of both sides + local sort-merge.
+
+Mirrors the paper's Fig 2 decomposition: hash-partition (communication
+sub-operator) + local join (core local operator).  Both sides use the same
+key hash so co-partitioned rows land on the same rank.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from ..comm import Communicator
+from .ops_local import join_local
+from .shuffle import ShuffleStats, shuffle
+from .table import Table
+
+
+def join(
+    left: Table,
+    right: Table,
+    comm: Communicator,
+    on: str,
+    out_capacity: Optional[int] = None,
+    **shuffle_kw,
+) -> Tuple[Table, ShuffleStats, ShuffleStats]:
+    """Distributed inner join over the comm axis (inside shard_map)."""
+    l_sh, l_stats = shuffle(left, comm, key_cols=[on], **shuffle_kw)
+    r_sh, r_stats = shuffle(right, comm, key_cols=[on], **shuffle_kw)
+    out = join_local(l_sh, r_sh, on, out_capacity=out_capacity)
+    return out, l_stats, r_stats

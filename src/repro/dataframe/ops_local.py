@@ -1,0 +1,228 @@
+"""Local (per-partition) DDF sub-operators.
+
+These are the "core local operator" / "auxiliary local operators" of the
+paper's sub-operator decomposition (§III-B, Fig 2).  All are pure jnp and
+static-shape; the TPU adaptation replaces C++ hash tables with sort-based
+vectorized algorithms (see DESIGN.md §2).  The compute hot spots have Pallas
+kernel twins in ``repro.kernels`` selected via ``repro.dataframe.ops`` — the
+jnp versions here double as their oracles.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import Table, _sentinel_for
+
+# ---------------------------------------------------------------------- #
+# Hashing (murmur3-style finalizer) — used for shuffle partitioning
+# ---------------------------------------------------------------------- #
+
+
+def _mix32(h: jax.Array) -> jax.Array:
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_columns(table: Table, key_cols: Sequence[str]) -> jax.Array:
+    """Combined 32-bit hash of the key columns (row-wise)."""
+    h = jnp.full((table.capacity,), 0x9E3779B9, jnp.uint32)
+    for name in key_cols:
+        v = table.columns[name]
+        if jnp.issubdtype(v.dtype, jnp.floating):
+            bits = jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.uint32)
+        else:
+            bits = v.astype(jnp.uint32)
+        h = _mix32(h ^ _mix32(bits) + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2))
+    return h
+
+
+# ---------------------------------------------------------------------- #
+# Sort keys with invalid rows pushed to the end
+# ---------------------------------------------------------------------- #
+
+
+def _order_keys(table: Table, by: Sequence[str]) -> Tuple[jax.Array, ...]:
+    """Key arrays for lexsort, with padding rows forced to sort last."""
+    valid = table.valid_mask()
+    keys = []
+    for name in by:
+        v = table.columns[name]
+        keys.append(jnp.where(valid, v, _sentinel_for(v.dtype)))
+    # jnp.lexsort sorts by the LAST key first; keep caller order = major first.
+    return tuple(reversed(keys)) + (jnp.where(valid, 0, 1).astype(jnp.int32),)
+
+
+def sort_local(table: Table, by: Sequence[str]) -> Table:
+    """Stable multi-key sort of the valid prefix (padding stays at the end)."""
+    keys = _order_keys(table, by)
+    # validity flag is the most-major key so padding sorts last.
+    order = jnp.lexsort(keys[:-1] + (keys[-1],))
+    return table.take(order, table.row_count)
+
+
+# ---------------------------------------------------------------------- #
+# Filter / projection / elementwise
+# ---------------------------------------------------------------------- #
+
+
+def filter_rows(table: Table, pred: Callable[[Table], jax.Array]) -> Table:
+    """Keep rows where ``pred`` is True; recompact."""
+    keep = pred(table) & table.valid_mask()
+    # stable compaction: order by (!keep)
+    order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)
+    return table.take(order, jnp.sum(keep).astype(jnp.int32))
+
+
+def add_scalar(table: Table, value, cols: Optional[Sequence[str]] = None) -> Table:
+    """The paper's pipeline terminal op: add a scalar to value columns."""
+    names = cols or table.column_names
+    out = dict(table.columns)
+    for n in names:
+        out[n] = table.columns[n] + jnp.asarray(value, table.columns[n].dtype)
+    return Table(out, table.row_count)
+
+
+def map_columns(table: Table, fn: Callable[[jax.Array], jax.Array],
+                cols: Sequence[str]) -> Table:
+    out = dict(table.columns)
+    for n in cols:
+        out[n] = fn(table.columns[n])
+    return Table(out, table.row_count)
+
+
+# ---------------------------------------------------------------------- #
+# Local groupby: sort + segment reduce
+# ---------------------------------------------------------------------- #
+
+_AGG_INIT = {
+    "sum": lambda d: jnp.zeros((), d),
+    "count": lambda d: jnp.zeros((), jnp.int32),
+    "min": lambda d: _sentinel_for(d),
+    "max": lambda d: (-_sentinel_for(d) if jnp.issubdtype(d, jnp.floating)
+                      else jnp.asarray(jnp.iinfo(d).min, d)),
+}
+
+
+def groupby_local(table: Table, keys: Sequence[str],
+                  aggs: Mapping[str, Sequence[str]]) -> Table:
+    """Group by ``keys``; ``aggs`` maps value column -> list of agg names.
+
+    Output columns: keys plus ``f"{col}_{agg}"``.  Mean is decomposed into
+    sum+count by the distributed layer so partial aggregates compose.
+    """
+    sorted_t = sort_local(table, keys)
+    valid = sorted_t.valid_mask()
+    # segment ids: new segment where any key changes (within valid prefix)
+    change = jnp.zeros((table.capacity,), bool)
+    for name in keys:
+        v = sorted_t.columns[name]
+        change = change | jnp.concatenate([jnp.ones((1,), bool), v[1:] != v[:-1]])
+    change = change & valid
+    seg_ids = jnp.cumsum(change.astype(jnp.int32)) - 1  # 0-based, padding -> last
+    seg_ids = jnp.where(valid, seg_ids, table.capacity - 1)
+    num_groups = jnp.sum(change).astype(jnp.int32)
+
+    out_cols: Dict[str, jax.Array] = {}
+    cap = table.capacity
+    for name in keys:
+        v = sorted_t.columns[name]
+        # first row of each segment carries the key
+        out_cols[name] = jnp.zeros((cap,), v.dtype).at[seg_ids].set(
+            jnp.where(valid, v, jnp.zeros((), v.dtype)), mode="drop")
+    for col, agg_names in aggs.items():
+        v = sorted_t.columns[col]
+        for agg in agg_names:
+            if agg == "sum":
+                vv = jnp.where(valid, v, jnp.zeros((), v.dtype))
+                r = jax.ops.segment_sum(vv, seg_ids, num_segments=cap)
+            elif agg == "count":
+                r = jax.ops.segment_sum(valid.astype(jnp.int32), seg_ids,
+                                        num_segments=cap)
+            elif agg == "min":
+                vv = jnp.where(valid, v, _sentinel_for(v.dtype))
+                r = jax.ops.segment_min(vv, seg_ids, num_segments=cap)
+            elif agg == "max":
+                lo = _AGG_INIT["max"](v.dtype)
+                vv = jnp.where(valid, v, lo)
+                r = jax.ops.segment_max(vv, seg_ids, num_segments=cap)
+            else:
+                raise ValueError(f"unsupported agg {agg!r}")
+            out_cols[f"{col}_{agg}"] = r
+    out = Table(out_cols, num_groups)
+    return out.mask_padding()
+
+
+# ---------------------------------------------------------------------- #
+# Local join: sort-merge with bounded output capacity
+# ---------------------------------------------------------------------- #
+
+
+def join_local(left: Table, right: Table, on: str,
+               out_capacity: Optional[int] = None,
+               suffix: str = "_r") -> Table:
+    """Inner equi-join via sort + searchsorted (vectorized merge).
+
+    Output capacity is static: ``out_capacity`` (default: left.capacity).
+    Row ``o`` of the output is derived by rank-searching the cumulative
+    match counts — O(cap log cap), no data-dependent shapes.
+    """
+    out_cap = out_capacity or left.capacity
+    ls = sort_local(left, [on])
+    rs = sort_local(right, [on])
+    lvalid = ls.valid_mask()
+    lkey = jnp.where(lvalid, ls.columns[on], _sentinel_for(ls.columns[on].dtype))
+    rkey_raw = rs.columns[on]
+    rvalid = rs.valid_mask()
+    rkey = jnp.where(rvalid, rkey_raw, _sentinel_for(rkey_raw.dtype))
+
+    # For each left row: range of matches in right.
+    lo = jnp.searchsorted(rkey, lkey, side="left")
+    hi = jnp.searchsorted(rkey, lkey, side="right")
+    hi = jnp.minimum(hi, right.row_count)  # sentinel rows never match
+    counts = jnp.where(lvalid, jnp.maximum(hi - lo, 0), 0)
+    cum = jnp.cumsum(counts)
+    total = cum[-1] if counts.shape[0] else jnp.asarray(0, jnp.int32)
+
+    out_idx = jnp.arange(out_cap, dtype=jnp.int32)
+    # left row owning output slot o: first l with cum[l] > o
+    l_row = jnp.searchsorted(cum, out_idx, side="right")
+    l_row_c = jnp.minimum(l_row, left.capacity - 1)
+    start = jnp.where(l_row_c > 0, cum[l_row_c - 1], 0)
+    k = out_idx - start
+    r_row = jnp.minimum(lo[l_row_c] + k, right.capacity - 1)
+    valid_out = out_idx < jnp.minimum(total, out_cap)
+
+    cols: Dict[str, jax.Array] = {}
+    for name in ls.column_names:
+        cols[name] = jnp.take(ls.columns[name], l_row_c, axis=0)
+    for name in rs.column_names:
+        if name == on:
+            continue
+        tgt = name if name not in cols else name + suffix
+        cols[tgt] = jnp.take(rs.columns[name], r_row, axis=0)
+    out = Table(cols, jnp.minimum(total, out_cap).astype(jnp.int32))
+    return out.mask_padding()
+
+
+def join_overflow(left: Table, right: Table, on: str, out_capacity: int) -> jax.Array:
+    """Number of join result rows dropped by the static output capacity."""
+    ls = sort_local(left, [on])
+    rs = sort_local(right, [on])
+    lvalid = ls.valid_mask()
+    lkey = jnp.where(lvalid, ls.columns[on], _sentinel_for(ls.columns[on].dtype))
+    rkey = jnp.where(rs.valid_mask(), rs.columns[on],
+                     _sentinel_for(rs.columns[on].dtype))
+    lo = jnp.searchsorted(rkey, lkey, side="left")
+    hi = jnp.minimum(jnp.searchsorted(rkey, lkey, side="right"), rs.row_count)
+    total = jnp.sum(jnp.where(lvalid, jnp.maximum(hi - lo, 0), 0))
+    return jnp.maximum(total - out_capacity, 0)

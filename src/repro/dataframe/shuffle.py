@@ -1,0 +1,171 @@
+"""Distributed shuffle: capacity-based all-to-all (the paper's core comm op).
+
+MPI AllToAllv sends exact per-destination byte counts; XLA collectives are
+static-shape.  The adaptation (DESIGN.md §2) is the MoE-capacity idiom:
+
+  1. hash keys -> destination rank (or take explicit destinations),
+  2. counts exchange (tiny all_to_all) for observability + receive counts,
+  3. rows are bucketed into a ``(p, bucket_capacity)`` send buffer
+     (sort-by-destination + rank-within-bucket; overflow rows are dropped
+     and *counted* — ``ShuffleStats.send_dropped``),
+  4. ONE data all_to_all per packed buffer (4-byte columns are bitcast and
+     packed into a single ``(p, cap, ncols)`` uint32 buffer so the shuffle
+     issues a single large collective — the "fewer, larger messages"
+     optimization the paper attributes to tuned MPI algorithms),
+  5. receive-side compaction back to a fixed-capacity ``Table``.
+
+The sample-based repartitioner (``sort.py`` splitters, paper §VI future
+work) exists to keep bucket skew bounded so capacity factors stay small.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..comm import Communicator
+from .ops_local import hash_columns
+from .table import Table
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShuffleStats:
+    """Per-rank observability for one shuffle (all traced arrays)."""
+
+    sent_counts: jax.Array   # (p,) rows sent to each rank (post-capacity)
+    recv_counts: jax.Array   # (p,) rows received from each rank
+    send_dropped: jax.Array  # () rows dropped by send-bucket capacity
+    recv_dropped: jax.Array  # () rows dropped by receive-table capacity
+
+    def tree_flatten(self):
+        return (self.sent_counts, self.recv_counts, self.send_dropped,
+                self.recv_dropped), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def default_bucket_capacity(capacity: int, p: int, factor: float = 2.0) -> int:
+    """Per-destination bucket size: balanced share × skew headroom, 8-aligned."""
+    return max(8, _round_up(int(-(-capacity // p) * factor), 8))
+
+
+def _pack_u32(cols: Dict[str, jax.Array], names) -> jax.Array:
+    """Bitcast 4-byte columns to uint32 and stack: (cap,) xN -> (cap, N)."""
+    parts = []
+    for n in names:
+        v = cols[n]
+        if v.dtype == jnp.float32:
+            v = jax.lax.bitcast_convert_type(v, jnp.uint32)
+        elif v.dtype in (jnp.int32, jnp.uint32):
+            v = v.view(jnp.uint32) if hasattr(v, "view") else jax.lax.bitcast_convert_type(v, jnp.uint32)
+        else:
+            raise TypeError(n)
+        parts.append(v)
+    return jnp.stack(parts, axis=-1)
+
+
+def _unpack_u32(buf: jax.Array, names, dtypes) -> Dict[str, jax.Array]:
+    out = {}
+    for i, n in enumerate(names):
+        v = buf[..., i]
+        if dtypes[n] == jnp.float32:
+            v = jax.lax.bitcast_convert_type(v, jnp.float32)
+        else:
+            v = v.astype(dtypes[n])
+        out[n] = v
+    return out
+
+
+def shuffle(
+    table: Table,
+    comm: Communicator,
+    key_cols: Optional[Sequence[str]] = None,
+    dest: Optional[jax.Array] = None,
+    bucket_capacity: Optional[int] = None,
+    out_capacity: Optional[int] = None,
+    capacity_factor: float = 2.0,
+    pack: bool = True,
+) -> Tuple[Table, ShuffleStats]:
+    """Repartition rows across the comm axis by key hash or explicit dest.
+
+    Must run inside a shard_map region over ``comm.axis``.
+    """
+    p = comm.size()
+    cap = table.capacity
+    bucket_cap = bucket_capacity or default_bucket_capacity(cap, p, capacity_factor)
+    out_cap = out_capacity or cap
+    valid = table.valid_mask()
+
+    if dest is None:
+        if not key_cols:
+            raise ValueError("need key_cols or dest")
+        h = hash_columns(table, key_cols)
+        dest = (h % jnp.uint32(p)).astype(jnp.int32)
+    dest = jnp.where(valid, dest, p)  # invalid rows -> overflow bin p
+
+    # --- bucketize: stable sort rows by destination ---------------------- #
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = jnp.take(dest, order)
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    bucket_start = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+    rank_in_bucket = pos - bucket_start
+
+    raw_counts = jax.ops.segment_sum(
+        jnp.ones((cap,), jnp.int32), dest, num_segments=p + 1)[:p]
+    sent_counts = jnp.minimum(raw_counts, bucket_cap)
+    send_dropped = jnp.sum(raw_counts - sent_counts)
+
+    in_bucket = (sorted_dest < p) & (rank_in_bucket < bucket_cap)
+    slot = jnp.where(in_bucket, sorted_dest * bucket_cap + rank_in_bucket,
+                     p * bucket_cap)  # out-of-range -> dropped by mode="drop"
+
+    names = table.column_names
+    dtypes = {n: table.columns[n].dtype for n in names}
+    four_byte = [n for n in names
+                 if dtypes[n] in (jnp.float32, jnp.int32, jnp.uint32)
+                 and table.columns[n].ndim == 1]
+    packables = four_byte if pack else []
+    singles = [n for n in names if n not in packables]
+
+    recv_cols: Dict[str, jax.Array] = {}
+
+    def _scatter(col_sorted: jax.Array) -> jax.Array:
+        buf = jnp.zeros((p * bucket_cap,) + col_sorted.shape[1:], col_sorted.dtype)
+        return buf.at[slot].set(col_sorted, mode="drop")
+
+    if packables:
+        packed = _pack_u32(table.columns, packables)          # (cap, N)
+        packed = jnp.take(packed, order, axis=0)
+        buf = _scatter(packed).reshape(p, bucket_cap, len(packables))
+        got = comm.all_to_all(buf).reshape(p * bucket_cap, len(packables))
+        recv_cols.update(_unpack_u32(got, packables, dtypes))
+    for n in singles:
+        col = jnp.take(table.columns[n], order, axis=0)
+        buf = _scatter(col).reshape((p, bucket_cap) + col.shape[1:])
+        got = comm.all_to_all(buf)
+        recv_cols[n] = got.reshape((p * bucket_cap,) + col.shape[1:])
+
+    recv_counts = comm.exchange_counts(sent_counts)
+
+    # --- receive-side compaction ----------------------------------------- #
+    ridx = jnp.arange(p * bucket_cap, dtype=jnp.int32)
+    r_valid = (ridx % bucket_cap) < jnp.take(recv_counts, ridx // bucket_cap)
+    order2 = jnp.argsort(jnp.where(r_valid, 0, 1), stable=True)[:out_cap]
+    total_recv = jnp.sum(recv_counts)
+    new_count = jnp.minimum(total_recv, out_cap).astype(jnp.int32)
+    out_cols = {n: jnp.take(v, order2, axis=0) for n, v in recv_cols.items()}
+
+    out = Table(out_cols, new_count).mask_padding()
+    stats = ShuffleStats(sent_counts, recv_counts, send_dropped,
+                         jnp.maximum(total_recv - out_cap, 0))
+    return out, stats

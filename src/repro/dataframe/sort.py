@@ -1,0 +1,78 @@
+"""Distributed sort: sample sort (splitter-based range partition + local sort).
+
+This is also the paper's §VI "sample-based repartitioning" for skew/straggler
+mitigation: the splitters are sampled quantiles, so output partitions are
+balanced even on skewed keys.  ``repartition_balanced`` exposes that use
+directly (used by the training data pipeline for straggler mitigation).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..comm import Communicator
+from .ops_local import sort_local
+from .shuffle import ShuffleStats, shuffle
+from .table import Table, _sentinel_for
+
+
+def _sample_splitters(key: jax.Array, row_count: jax.Array,
+                      comm: Communicator, samples: int) -> jax.Array:
+    """Gather per-rank key samples and return p-1 global splitters."""
+    p = comm.size()
+    cap = key.shape[0]
+    skey = jnp.sort(jnp.where(jnp.arange(cap) < row_count, key,
+                              _sentinel_for(key.dtype)))
+    # evenly spaced positions within the valid prefix
+    n_local = jnp.minimum(row_count, samples)
+    idx = (jnp.arange(samples) * jnp.maximum(row_count, 1)) // jnp.maximum(samples, 1)
+    idx = jnp.minimum(idx, jnp.maximum(row_count - 1, 0)).astype(jnp.int32)
+    local = jnp.where(jnp.arange(samples) < n_local, jnp.take(skey, idx),
+                      _sentinel_for(key.dtype))
+    allsamp = comm.all_gather(local).reshape(-1)          # (p*samples,)
+    total_valid = jax.lax.psum(n_local, comm.axis)
+    ssorted = jnp.sort(allsamp)
+    qpos = ((jnp.arange(1, p) * total_valid) // p).astype(jnp.int32)
+    qpos = jnp.minimum(qpos, p * samples - 1)
+    return jnp.take(ssorted, qpos)                        # (p-1,)
+
+
+def sort(
+    table: Table,
+    comm: Communicator,
+    by: Sequence[str],
+    samples: int = 64,
+    **shuffle_kw,
+) -> Tuple[Table, ShuffleStats]:
+    """Globally sort by ``by[0]`` across ranks (full lexsort within rank).
+
+    Rank r holds the r-th contiguous key range; within a rank rows are
+    lex-sorted by all of ``by``.  (Distributed tie order across ranks follows
+    the primary key only — the paper's benchmark sorts single int columns.)
+    """
+    key = table.columns[by[0]]
+    splitters = _sample_splitters(key, table.row_count, comm, samples)
+    dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    shuffled, stats = shuffle(table, comm, dest=dest, **shuffle_kw)
+    return sort_local(shuffled, by), stats
+
+
+def repartition_balanced(
+    table: Table,
+    comm: Communicator,
+    key_col: str,
+    samples: int = 64,
+    **shuffle_kw,
+) -> Tuple[Table, ShuffleStats]:
+    """Sample-based repartition (paper §VI): balance rows across ranks.
+
+    Range-partitions on sampled quantiles of ``key_col`` without the final
+    local sort — used for skew/straggler mitigation in long pipelines.
+    """
+    key = table.columns[key_col]
+    splitters = _sample_splitters(key, table.row_count, comm, samples)
+    dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    return shuffle(table, comm, dest=dest, **shuffle_kw)

@@ -1,0 +1,163 @@
+"""Columnar table with static capacity — the TPU adaptation of Arrow partitions.
+
+The paper's partitions are Arrow tables whose length varies per worker.  XLA
+programs need static shapes, so a partition here is a set of fixed-capacity
+column arrays plus a traced ``row_count``; rows ``[0, row_count)`` are valid
+and **compacted to the front** (every operator maintains this invariant).
+This mirrors Arrow's data/validity buffer split with the validity buffer
+degenerated to a prefix length, which is what the sort-based local operators
+naturally produce.
+
+``Table`` is a pytree, so it flows through ``jax.jit`` / ``jax.shard_map``
+directly.  Inside a shard_map region ``row_count`` has shape ``()``; the
+driver-side distributed holder (``core.env``) stacks one ``Table`` per shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel ordering values used to push invalid rows to the end of sorts.
+_INT_SENTINEL = np.iinfo(np.int32).max
+_FLOAT_SENTINEL = np.inf
+
+
+def _sentinel_for(dtype) -> jnp.ndarray:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(_FLOAT_SENTINEL, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    """One partition: dict of (capacity,)-shaped columns + valid row count."""
+
+    columns: Dict[str, jax.Array]
+    row_count: jax.Array  # int32 scalar (traced)
+
+    # ------------------------------------------------------------------ #
+    # pytree protocol
+    # ------------------------------------------------------------------ #
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.row_count,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols = dict(zip(names, children[:-1]))
+        return cls(columns=cols, row_count=children[-1])
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_arrays(cls, data: Mapping[str, jax.Array], capacity: Optional[int] = None,
+                    row_count: Optional[jax.Array] = None) -> "Table":
+        """Build a table from equal-length dense arrays, padding to capacity."""
+        data = {k: jnp.asarray(v) for k, v in data.items()}
+        n = next(iter(data.values())).shape[0]
+        for k, v in data.items():
+            if v.shape[0] != n:
+                raise ValueError(f"column {k!r} length {v.shape[0]} != {n}")
+        capacity = capacity or n
+        if capacity < n:
+            raise ValueError(f"capacity {capacity} < rows {n}")
+        cols = {}
+        for k, v in data.items():
+            pad = capacity - n
+            if pad:
+                v = jnp.concatenate([v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+            cols[k] = v
+        rc = jnp.asarray(n if row_count is None else row_count, jnp.int32)
+        return cls(cols, rc)
+
+    @classmethod
+    def empty_like(cls, other: "Table", capacity: Optional[int] = None) -> "Table":
+        cap = capacity or other.capacity
+        cols = {k: jnp.zeros((cap,) + v.shape[1:], v.dtype) for k, v in other.columns.items()}
+        return cls(cols, jnp.asarray(0, jnp.int32))
+
+    # ------------------------------------------------------------------ #
+    # basic properties
+    # ------------------------------------------------------------------ #
+    @property
+    def capacity(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def column_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.row_count
+
+    def col(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    # ------------------------------------------------------------------ #
+    # structural ops (no communication)
+    # ------------------------------------------------------------------ #
+    def select(self, names: Sequence[str]) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.row_count)
+
+    def with_column(self, name: str, values: jax.Array) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = values
+        return Table(cols, self.row_count)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        cols = {mapping.get(k, k): v for k, v in self.columns.items()}
+        return Table(cols, self.row_count)
+
+    def take(self, idx: jax.Array, new_count: jax.Array) -> "Table":
+        """Gather rows by index (invalid slots may point anywhere)."""
+        cols = {k: jnp.take(v, idx, axis=0) for k, v in self.columns.items()}
+        return Table(cols, jnp.asarray(new_count, jnp.int32))
+
+    def mask_padding(self) -> "Table":
+        """Zero out the padding region (canonicalises sentinel garbage)."""
+        m = self.valid_mask()
+        cols = {}
+        for k, v in self.columns.items():
+            mm = m.reshape((-1,) + (1,) * (v.ndim - 1))
+            cols[k] = jnp.where(mm, v, jnp.zeros((), v.dtype))
+        return Table(cols, self.row_count)
+
+    # ------------------------------------------------------------------ #
+    # host-side conversion (not jittable)
+    # ------------------------------------------------------------------ #
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        n = int(self.row_count)
+        return {k: np.asarray(v)[:n] for k, v in self.columns.items()}
+
+
+def concat_tables(tables: Sequence[Table], capacity: Optional[int] = None) -> Table:
+    """Concatenate partitions (compacted), padding to ``capacity``."""
+    names = tables[0].column_names
+    total_cap = sum(t.capacity for t in tables)
+    capacity = capacity or total_cap
+    cols = {}
+    counts = jnp.stack([t.row_count for t in tables])
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    total = jnp.sum(counts)
+    for name in names:
+        stacked = jnp.concatenate([t.columns[name] for t in tables], axis=0)
+        # compaction: position of row i of table t is offsets[t] + i
+        out = jnp.zeros((capacity,) + stacked.shape[1:], stacked.dtype)
+        pos = 0
+        for t_idx, t in enumerate(tables):
+            idx = jnp.arange(t.capacity, dtype=jnp.int32)
+            dest = offsets[t_idx] + idx
+            valid = idx < counts[t_idx]
+            dest = jnp.where(valid, dest, capacity)  # out-of-range drops
+            out = out.at[dest].set(t.columns[name][idx], mode="drop")
+            pos += t.capacity
+        cols[name] = out
+    return Table(cols, jnp.asarray(total, jnp.int32))

@@ -1,0 +1,41 @@
+"""Trace-time build flags (cost-accounting controls for the dry-run).
+
+XLA's ``HloCostAnalysis`` counts a while-loop body ONCE (no trip-count
+multiplication), so scanned programs under-report flops/bytes/collectives.
+The dry-run therefore lowers *counting builds* with every scan unrolled at
+one and two periods of depth and extrapolates per-period costs (see
+``launch/dryrun.py``).  These flags switch the scans to unrolled form at
+trace time; production/training builds leave them off.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class _Flags:
+    unroll_layers: bool = False   # layer-period scan -> unrolled
+    unroll_inner: bool = False    # CE chunks + attention kv blocks -> unrolled
+
+
+FLAGS = _Flags()
+
+
+@contextlib.contextmanager
+def unrolled_scans(layers: bool = True, inner: bool = True):
+    old = (FLAGS.unroll_layers, FLAGS.unroll_inner)
+    FLAGS.unroll_layers, FLAGS.unroll_inner = layers, inner
+    try:
+        yield
+    finally:
+        FLAGS.unroll_layers, FLAGS.unroll_inner = old
+
+
+def scan_unroll_layers() -> int:
+    return True if FLAGS.unroll_layers else 1
+
+
+def scan_unroll_inner() -> int:
+    return True if FLAGS.unroll_inner else 1

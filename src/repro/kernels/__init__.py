@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+Each kernel ships as ``<name>/<name>.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``<name>/ops.py`` (jit'd wrapper with padding + backend dispatch)
+and ``<name>/ref.py`` (pure-jnp oracle).  On CPU (this container) kernels run
+under ``interpret=True``; on TPU they compile via Mosaic.
+
+  segmented_reduce  groupby aggregation (one-hot MXU matmul over row blocks)
+  radix_partition   shuffle bucketize (scan-over-blocks running histogram)
+  flash_attention   causal GQA attention (online softmax, kv-sequential grid)
+  ssd_scan          Mamba-2 SSD chunked scan (VMEM-resident state)
+"""
+
+from .segmented_reduce import segmented_sum, segmented_sum_ref
+from .radix_partition import radix_partition, radix_partition_ref
+from .flash_attention import attention_ref, flash_attention
+from .ssd_scan import ssd_scan, ssd_scan_chunked_jnp, ssd_scan_ref
+
+__all__ = [
+    "segmented_sum", "segmented_sum_ref",
+    "radix_partition", "radix_partition_ref",
+    "flash_attention", "attention_ref",
+    "ssd_scan", "ssd_scan_chunked_jnp", "ssd_scan_ref",
+]

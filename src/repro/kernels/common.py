@@ -1,0 +1,16 @@
+"""Shared Pallas kernel utilities."""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret(interpret=None) -> bool:
+    """Kernels target TPU; on CPU (this container) run in interpret mode."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m

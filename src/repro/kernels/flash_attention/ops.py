@@ -1,0 +1,42 @@
+"""Jit'd public wrapper: (B, H, S, D) layout, padding, backend dispatch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, round_up
+from .flash_attention import flash_attention_pallas
+from .ref import attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_kernel: bool = True,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Causal GQA attention. q: (B, Hq, Sq, D); k,v: (B, Hkv, Sk, D)."""
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    bq = min(block_q, round_up(sq, 8))
+    bk = min(block_k, round_up(sk, 8))
+    sq_p, sk_p = round_up(sq, bq), round_up(sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    if sk_p != sk:
+        # mask padded keys by pushing them outside every causal window; for
+        # non-causal, fold the pad mask into k by a large negative bias trick
+        # is unavailable here, so fall back to ref for non-causal + padding.
+        if not causal:
+            return attention_ref(q, k, v, causal=causal, scale=scale)
+    out = flash_attention_pallas(
+        qp.reshape(b * hq, sq_p, d), kp.reshape(b * hkv, sk_p, d),
+        vp.reshape(b * hkv, sk_p, d), num_q_heads=hq, num_kv_heads=hkv,
+        causal=causal, scale=scale, block_q=bq, block_k=bk,
+        interpret=default_interpret(interpret))
+    return out.reshape(b, hq, sq_p, d)[:, :, :sq]

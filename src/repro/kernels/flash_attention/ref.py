@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: quadratic GQA attention."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: Optional[float] = None
+                  ) -> jax.Array:
+    """q: (B, Hq, Sq, D); k,v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

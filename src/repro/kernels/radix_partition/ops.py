@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the radix-partition kernel (pads + dispatches)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, round_up
+from .radix_partition import radix_partition_pallas
+from .ref import radix_partition_ref
+
+
+def radix_partition(dest: jax.Array, num_buckets: int, block_rows: int = 256,
+                    use_kernel: bool = True,
+                    interpret: Optional[bool] = None):
+    """(ranks, hist) for destination buckets; kernel fast path + jnp fallback."""
+    if not use_kernel:
+        return radix_partition_ref(dest, num_buckets)
+    n = dest.shape[0]
+    n_pad = round_up(max(n, block_rows), block_rows)
+    # padded rows need a bucket strictly above every real bucket — round up
+    # PAST num_buckets when rows are padded so the pad bucket never collides
+    # with real bucket num_buckets-1.
+    nb_pad = round_up(max(num_buckets + (1 if n_pad != n else 0), 128), 128)
+    d = dest
+    if n_pad != n:
+        d = jnp.concatenate(
+            [d, jnp.full((n_pad - n,), nb_pad - 1, dest.dtype)])
+    ranks, hist = radix_partition_pallas(
+        d, nb_pad, block_rows=block_rows,
+        interpret=default_interpret(interpret))
+    return ranks[:n], hist[:num_buckets]

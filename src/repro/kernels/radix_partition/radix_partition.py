@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: stable radix partition (shuffle's bucketize hot spot).
+
+Computes, for every row's destination bucket, its stable rank *within* that
+bucket plus the global bucket histogram — exactly what the capacity-based
+shuffle needs to scatter rows into its ``(p, bucket_cap)`` send buffer
+(`repro.dataframe.shuffle`).  A GPU implementation would use atomics; the
+TPU formulation exploits the *sequential* grid: a VMEM scratch carries the
+running per-bucket counts across row blocks (a scan over blocks), and ranks
+inside a block come from an exclusive cumsum over the block's one-hot
+destination matrix — all VPU/MXU-friendly dense ops.
+
+  rank[i]  = running[dest_i] + (# earlier rows in this block with dest_i)
+  hist     = running counts after the last block
+
+Block sizes: R rows × NB buckets one-hot (256×1024 i32 = 1 MiB) well inside
+VMEM; NB is padded to a multiple of 128 lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dest_ref, rank_ref, hist_ref, running_ref):
+    rb = pl.program_id(0)
+
+    @pl.when(rb == 0)
+    def _init():
+        running_ref[...] = jnp.zeros_like(running_ref)
+
+    dest = dest_ref[...]                      # (R, 1) int32
+    r, nb = dest.shape[0], running_ref.shape[1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (r, nb), 1)
+    onehot = (cols == dest).astype(jnp.int32)  # (R, NB)
+    # stable rank within block: exclusive cumsum down the rows
+    excl = jnp.cumsum(onehot, axis=0) - onehot
+    in_block = jnp.sum(excl * onehot, axis=1, keepdims=True)       # (R, 1)
+    carried = jnp.sum(running_ref[...] * onehot, axis=1, keepdims=True)
+    rank_ref[...] = carried + in_block
+    running_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+
+    @pl.when(rb == pl.num_programs(0) - 1)
+    def _fin():
+        hist_ref[...] = running_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "block_rows",
+                                             "interpret"))
+def radix_partition_pallas(dest: jax.Array, num_buckets: int,
+                           block_rows: int = 256,
+                           interpret: bool = True):
+    """dest: (n,) int32 in [0, num_buckets) -> (ranks (n,), hist (num_buckets,)).
+
+    n must be a multiple of block_rows and num_buckets of 128 (ops.py pads;
+    padded rows use bucket num_buckets-1 and their ranks are discarded).
+    """
+    n = dest.shape[0]
+    assert n % block_rows == 0 and num_buckets % 128 == 0
+    grid = (n // block_rows,)
+    ranks, hist = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, 1), lambda rb: (rb, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, 1), lambda rb: (rb, 0)),
+            pl.BlockSpec((1, num_buckets), lambda rb: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_buckets), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, num_buckets), jnp.int32)],
+        interpret=interpret,
+    )(dest.reshape(-1, 1))
+    return ranks[:, 0], hist[0]

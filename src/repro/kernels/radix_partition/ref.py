@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the radix-partition kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def radix_partition_ref(dest: jax.Array, num_buckets: int):
+    """Stable within-bucket ranks + histogram (sort-based, like shuffle.py)."""
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = jnp.take(dest, order)
+    start = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+    rank_sorted = jnp.arange(n, dtype=jnp.int32) - start.astype(jnp.int32)
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    hist = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), dest,
+                               num_segments=num_buckets)
+    return ranks, hist

@@ -1,0 +1,5 @@
+from .ops import segmented_sum
+from .ref import segmented_sum_ref
+from .segmented_reduce import segmented_sum_pallas
+
+__all__ = ["segmented_sum", "segmented_sum_ref", "segmented_sum_pallas"]

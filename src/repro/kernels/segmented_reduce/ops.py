@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for the segmented-sum kernel (pads + dispatches)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, round_up
+from .ref import segmented_sum_ref
+from .segmented_reduce import segmented_sum_pallas
+
+
+def segmented_sum(seg_ids: jax.Array, values: jax.Array, num_segments: int,
+                  block_rows: int = 256, block_segments: int = 512,
+                  use_kernel: bool = True,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Segment sums with TPU-kernel fast path and jnp fallback.
+
+    seg_ids (n,) int32 in [0, num_segments); values (n,) or (n, C).
+    """
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    if not use_kernel:
+        out = segmented_sum_ref(seg_ids, values, num_segments)
+        return out[:, 0] if squeeze else out
+    n, c = values.shape
+    n_pad = round_up(max(n, block_rows), block_rows)
+    s_pad = round_up(max(num_segments, block_segments), block_segments)
+    if n_pad != n:
+        # zero-valued padding rows cannot perturb any segment sum
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.zeros((n_pad - n,), seg_ids.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((n_pad - n, c), values.dtype)])
+    out = segmented_sum_pallas(seg_ids, values, s_pad,
+                               block_rows=block_rows,
+                               block_segments=block_segments,
+                               interpret=default_interpret(interpret))
+    out = out[:num_segments]
+    return out[:, 0] if squeeze else out

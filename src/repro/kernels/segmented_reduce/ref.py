@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the segmented-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_sum_ref(seg_ids: jax.Array, values: jax.Array,
+                      num_segments: int) -> jax.Array:
+    """Reference: jax.ops.segment_sum per value column."""
+    return jax.ops.segment_sum(values, seg_ids.astype(jnp.int32),
+                               num_segments=num_segments)

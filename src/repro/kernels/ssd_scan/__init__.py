@@ -1,0 +1,5 @@
+from .ops import ssd_scan, ssd_scan_chunked_jnp
+from .ref import ssd_scan_ref
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["ssd_scan", "ssd_scan_chunked_jnp", "ssd_scan_ref", "ssd_scan_pallas"]

@@ -1,0 +1,94 @@
+"""Jit'd public wrapper for the SSD scan (padding + backend dispatch).
+
+Also exports ``ssd_scan_chunked_jnp`` — the same chunked algorithm in pure
+jnp.  It is used by the mamba2/jamba model stacks for the *dry-run* path
+(Pallas TPU kernels cannot compile on the CPU backend) and doubles as a
+second oracle for the kernel.
+
+Both paths return ``(y, h_final)`` where ``h_final: (BH, N, P)`` is the SSD
+state after the last timestep — the prefill→decode hand-off.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..common import default_interpret, round_up
+from .ref import ssd_scan_ref
+from .ssd_scan import ssd_scan_pallas
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, chunk: int = 128, use_kernel: bool = True,
+             interpret: Optional[bool] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan; x: (BH, T, P); dt: (BH, T, 1); a: (BH, 1); b,c: (BH, T, N).
+
+    Returns (y: (BH, T, P), h_final: (BH, N, P)).
+    """
+    if not use_kernel:
+        return ssd_scan_chunked_jnp(x, dt, a, b, c, chunk=chunk)
+    bh, t, p = x.shape
+    ch = min(chunk, round_up(t, 8))
+    t_pad = round_up(t, ch)
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0))
+        # dt=0 padding is inert: decay=1, no state update, y discarded
+        x, dt, b, c = (jnp.pad(v, pad) for v in (x, dt, b, c))
+    y, h = ssd_scan_pallas(x, dt, a, b, c, chunk=ch,
+                           interpret=default_interpret(interpret))
+    return y[:, :t], h
+
+
+def ssd_scan_chunked_jnp(x: jax.Array, dt: jax.Array, a: jax.Array,
+                         b: jax.Array, c: jax.Array, chunk: int = 128
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD in pure jnp (dry-run path; same math as the kernel)."""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    ch = min(chunk, t)
+    t_pad = round_up(t, ch)
+    if t_pad != t:
+        pad = ((0, 0), (0, t_pad - t), (0, 0))
+        x, dt, b, c = (jnp.pad(v, pad) for v in (x, dt, b, c))
+    nc = t_pad // ch
+
+    xc = x.reshape(bh, nc, ch, p).astype(jnp.float32)
+    dtc = dt.reshape(bh, nc, ch, 1).astype(jnp.float32)
+    bc = b.reshape(bh, nc, ch, n).astype(jnp.float32)
+    cc = c.reshape(bh, nc, ch, n).astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    adt = af.reshape(bh, 1, 1, 1) * dtc
+    cum = jnp.cumsum(adt, axis=2)                        # (BH, NC, L, 1)
+    seg = cum - jnp.swapaxes(cum, 2, 3)                  # (BH, NC, L, L)
+    mask = jnp.tril(jnp.ones((ch, ch), bool))
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, seg, 0.0)), 0.0)
+    scores = jnp.einsum("zntk,znsk->znts", cc, bc)
+    y_intra = jnp.einsum("znts,znsp->zntp", scores * decay, xc * dtc)
+
+    total = cum[:, :, -1:, :]                            # (BH, NC, 1, 1)
+    w = dtc * jnp.exp(total - cum)                       # (BH, NC, L, 1)
+    h_in = jnp.einsum("znsk,znsp->znkp", bc * w, xc)     # per-chunk injection
+
+    def carry(h, inp):
+        tot, hin = inp                                   # tot: (BH, 1, 1)
+        h_out = jnp.exp(tot[:, :, 0])[..., None] * h + hin  # (BH, N, P)
+        return h_out, h
+    tot_seq = jnp.moveaxis(total, 1, 0)                  # (NC, BH, 1, 1)
+    hin_seq = jnp.moveaxis(h_in, 1, 0)                   # (NC, BH, N, P)
+    # NOTE: deliberately NOT unrolled under the dry-run counting flags —
+    # the carry body is tiny elementwise work (the heavy SSD einsums are
+    # batched outside this scan), while unrolling T/chunk copies of it
+    # makes the SPMD partitioner intractably slow on deep hybrid stacks.
+    # Undercount from the rolled body is <0.1% of any cell's terms.
+    h_final, h_starts = jax.lax.scan(
+        carry, jnp.zeros((bh, n, p), jnp.float32), (tot_seq, hin_seq))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)              # (BH, NC, N, P)
+    y_inter = jnp.exp(cum) * jnp.einsum("zntk,znkp->zntp", cc, h_starts)
+
+    y = (y_intra + y_inter).reshape(bh, t_pad, p)[:, :t]
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: naive SSD recurrence (O(T) scan over time)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (BH, T, P); dt: (BH, T, 1); a: (BH, 1); b, c: (BH, T, N).
+
+    Returns (y: (BH, T, P), h_final: (BH, N, P)).
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+
+    def per_seq(xs, dts, a_s, bs, cs):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(a_s[0] * dtt[0])
+            h = decay * h + dtt[0] * jnp.outer(bt, xt)   # (N, P)
+            return h, ct @ h
+        h0 = jnp.zeros((n, p), jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (xs.astype(jnp.float32),
+                                         dts.astype(jnp.float32),
+                                         bs.astype(jnp.float32),
+                                         cs.astype(jnp.float32)))
+        return ys, hT
+
+    out, h = jax.vmap(per_seq)(x, dt, a, b, c)
+    return out.astype(x.dtype), h

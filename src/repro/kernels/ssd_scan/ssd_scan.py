@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+Implements the SSD chunk recurrence [arXiv:2405.21060] for diagonal A (one
+scalar decay per head):
+
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t xᵀ_t          (h: N×P)
+    y_t = C_tᵀ h_t
+
+The chunked form turns the recurrence into MXU matmuls: within a chunk of
+length L the intra-chunk term is ``((C Bᵀ) ⊙ M) (X ⊙ dt)`` with decay mask
+``M[t,s] = exp(cum_t − cum_s)·[t ≥ s]``, and the carried state advances as
+
+    h_end = exp(cum_L) · h_start + (B ⊙ dt·exp(cum_L − cum))ᵀ X.
+
+TPU mapping: grid = (batch·heads, chunks) with chunks innermost (sequential),
+so the (N×P) state lives in VMEM scratch across chunk steps — the classic
+scan-over-blocks pattern.  All heavy ops are (L×N)(N×P) / (L×L)(L×P) matmuls.
+VMEM per step at L=128, N=128, P=64 f32 ≈ 0.4 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)    # (L, 1)
+    a = a_ref[0, 0].astype(jnp.float32)   # scalar decay rate (< 0)
+    bmat = b_ref[0].astype(jnp.float32)   # (L, N)
+    cmat = c_ref[0].astype(jnp.float32)   # (L, N)
+
+    adt = a * dt                          # (L, 1)
+    cum = jnp.cumsum(adt, axis=0)         # inclusive
+    l = x.shape[0]
+
+    # intra-chunk: ((C Bᵀ) ⊙ M) (X ⊙ dt)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+    seg = cum - cum.T                     # cum_t - cum_s  (t row, s col)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    mask = rows >= cols
+    decay = jnp.where(mask, jnp.exp(jnp.where(mask, seg, 0.0)), 0.0)
+    y_intra = jax.lax.dot_general(scores * decay, x * dt,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: exp(cum_t) · C_t h_start
+    h = h_ref[...]                        # (N, P)
+    y_inter = jnp.exp(cum) * jax.lax.dot_general(
+        cmat, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h_end = exp(cum_L)·h + (B ⊙ dt·exp(cum_L − cum))ᵀ X
+    total = cum[l - 1:l]                  # (1, 1)
+    w = dt * jnp.exp(total - cum)         # (L, 1)
+    h_ref[...] = jnp.exp(total[0, 0]) * h + jax.lax.dot_general(
+        bmat * w, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, chunk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """SSD scan over flattened (batch·heads) sequences.
+
+    x: (BH, T, P); dt: (BH, T, 1); a: (BH, 1); b, c: (BH, T, N).
+    T must be a multiple of ``chunk`` (ops.py pads).  Returns
+    (y: (BH, T, P), h_final: (BH, N, P)) — the final state feeds decode.
+    """
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0
+    grid = (bh, t // chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, 1), lambda i, ci: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, ci: (i, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, ci: (i, ci, 0)),
+            pl.BlockSpec((1, n, p), lambda i, ci: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,10 @@
+"""Launchers: mesh construction, multi-pod dry-run, roofline, drivers.
+
+NOTE: ``dryrun`` must only be imported as a program entry point (it forces a
+512-device placeholder backend before jax initializes); this package
+``__init__`` deliberately does not import it.
+"""
+
+from .mesh import make_local_mesh, make_production_mesh, rules_for_mesh
+
+__all__ = ["make_local_mesh", "make_production_mesh", "rules_for_mesh"]

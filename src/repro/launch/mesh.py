@@ -1,0 +1,72 @@
+"""Production mesh construction + sharding-rule presets.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state; the dry-run driver forces
+the 512-device placeholder backend *before* calling it.
+
+Axis semantics:
+  pod    — outer data-parallel axis across pods (its own collective domain;
+           gradient reduction is hierarchical: reduce-scatter inside the pod,
+           all-reduce across pods, all-gather inside the pod — GSPMD emits
+           this from the (pod, data) batch sharding automatically).
+  data   — FSDP/data-parallel inside one pod.
+  model  — TP/EP/SP: attention heads & FFN columns, MoE experts, sequence-
+           sharded activations between blocks, and sequence-sharded KV for
+           decode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..models.layers import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(parallelism: Optional[int] = None,
+                    model: int = 1) -> jax.sharding.Mesh:
+    """Small CPU mesh for tests/benchmarks: (data, model)."""
+    n = parallelism or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def _axis_sizes(mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1), sizes.get("data", 1)
+
+
+def rules_for_mesh(mesh: jax.sharding.Mesh) -> ShardingRules:
+    """Training rules: ZeRO-3 over data × SP/EP/vocab over model
+    (weights replicated over model; ``tp`` dims resolve to None)."""
+    names = mesh.axis_names
+    ms, ds = _axis_sizes(mesh)
+    if "pod" in names:
+        return ShardingRules(batch=("pod", "data"), fsdp="data",
+                             model="model", model_size=ms, data_size=ds)
+    if "data" in names and "model" in names:
+        return ShardingRules(batch="data", fsdp="data", model="model",
+                             model_size=ms, data_size=ds)
+    # single-axis mesh (dataframe engine's df axis): no model parallelism
+    return ShardingRules(batch=names[0], fsdp=names[0], model=None)
+
+
+def serve_rules_for_mesh(mesh: jax.sharding.Mesh) -> ShardingRules:
+    """Serving rules: Megatron TP over model (fsdp=None, tp_weights=True) —
+    at decode, ZeRO-style weight gathers would ship the whole model over ICI
+    per token; TP reads only the local shard and psums tiny (B, 1, D)
+    activations instead."""
+    names = mesh.axis_names
+    ms, ds = _axis_sizes(mesh)
+    if "pod" in names:
+        return ShardingRules(batch=("pod", "data"), fsdp=None, model="model",
+                             tp_weights=True, model_size=ms, data_size=ds)
+    return ShardingRules(batch="data", fsdp=None, model="model",
+                         tp_weights=True, model_size=ms, data_size=ds)

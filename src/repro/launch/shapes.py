@@ -1,0 +1,89 @@
+"""The assigned input-shape cells + per-arch eligibility + input specs.
+
+Every cell is lowered from ``ShapeDtypeStruct`` stand-ins — weak-type
+correct, shardable, zero device allocation (the dry-run never materializes
+a 34B-parameter model on this CPU container).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..models.config import SHAPES, ModelConfig
+from ..configs.llava_next_34b import PATCHES_LARGE, PATCHES_SMALL
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    kind: str              # train | prefill | decode
+    global_batch: int
+    seq_len: int
+    eligible: bool
+    skip_reason: Optional[str] = None
+
+
+def cell(arch: str, shape: str) -> Cell:
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    eligible, reason = True, None
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        eligible = False
+        reason = ("pure full-attention decoder: 512k dense-KV decode is "
+                  "defined by the brief to require sub-quadratic attention "
+                  "(see DESIGN.md §7)")
+    return Cell(arch, shape, info["kind"], info["global_batch"],
+                info["seq_len"], eligible, reason)
+
+
+def all_cells() -> List[Cell]:
+    return [cell(a, s) for a in ARCHS for s in SHAPES]
+
+
+def vlm_patches(cfg: ModelConfig, seq_len: int) -> int:
+    return PATCHES_SMALL if seq_len <= 4096 else PATCHES_LARGE
+
+
+def train_batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one training batch."""
+    b, s = global_batch, seq_len
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        shape = (b, s, cfg.num_codebooks)
+        return {"tokens": jax.ShapeDtypeStruct(shape, i32),
+                "labels": jax.ShapeDtypeStruct(shape, i32)}
+    if cfg.family == "vlm":
+        p = vlm_patches(cfg, s)
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                 jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s - p), i32),
+            "labels": jax.ShapeDtypeStruct((b, s - p), i32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int
+                        ) -> Dict[str, jax.ShapeDtypeStruct]:
+    specs = train_batch_specs(cfg, global_batch, seq_len)
+    specs.pop("labels")
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, global_batch: int
+                       ) -> Tuple[jax.ShapeDtypeStruct, jax.ShapeDtypeStruct]:
+    """(tokens, pos) stand-ins for one decode step."""
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        tok = jax.ShapeDtypeStruct((global_batch, 1, cfg.num_codebooks), i32)
+    else:
+        tok = jax.ShapeDtypeStruct((global_batch, 1), i32)
+    return tok, jax.ShapeDtypeStruct((global_batch,), i32)

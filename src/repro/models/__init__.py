@@ -1,0 +1,18 @@
+"""Model zoo: composable blocks + the generic decoder stack.
+
+``config``     — ModelConfig / MoEConfig / MLAConfig / SSMConfig + SHAPES
+``layers``     — RMSNorm, RoPE, gated MLP, sharding rules
+``attention``  — GQA (+qk-norm) and MLA, full-seq + decode
+``mamba2``     — SSD mixer, full-seq + decode
+``moe``        — sort-based grouped capacity dispatch (+ einsum oracle)
+``transformer``— stack assembly, loss, prefill/decode, param/cache specs
+"""
+
+from .config import MLAConfig, ModelConfig, MoEConfig, SHAPES, SSMConfig
+from .layers import NO_SHARDING, ShardingRules
+from . import transformer
+
+__all__ = [
+    "MLAConfig", "ModelConfig", "MoEConfig", "SHAPES", "SSMConfig",
+    "NO_SHARDING", "ShardingRules", "transformer",
+]

@@ -1,0 +1,332 @@
+"""Attention blocks: GQA (+qk-norm), MLA, decode paths, impl selection.
+
+Three interchangeable implementations for full-sequence attention:
+
+  * ``dense``   — quadratic reference (small seqs / tests)
+  * ``chunked`` — online-softmax lax.scan over KV blocks: differentiable,
+                  O(S·block) memory, compiles on any backend (the dry-run
+                  path; XLA CPU cannot lower Mosaic kernels)
+  * ``flash``   — the Pallas kernel (TPU runtime)
+
+``auto`` picks dense below 2k keys, else chunked on CPU / flash on TPU.
+Decode (single query against a cache) is pure jnp; with the KV sequence axis
+sharded over the ``model`` mesh axis, GSPMD turns the softmax reductions into
+the flash-decoding-style distributed combine (psum of partial max/sum).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import attention_ref, flash_attention
+from .. import flags
+from .config import ModelConfig
+from .layers import (NO_SHARDING, Params, ShardingRules, apply_rope, constrain,
+                     dense_init, rmsnorm, rmsnorm_init)
+
+
+# ---------------------------------------------------------------------- #
+# Chunked (online softmax) attention — differentiable, any backend
+# ---------------------------------------------------------------------- #
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, scale: Optional[float] = None,
+                      block_k: int = 512,
+                      rules: ShardingRules = NO_SHARDING) -> jax.Array:
+    """q: (B, Hq, Sq, D); k: (B, Hkv, Sk, D); v: (B, Hkv, Sk, Dv).
+
+    Dv may differ from D (MLA value heads are narrower than qk heads).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    group = hq // hkv
+    bk = min(block_k, sk)
+    if sk % bk:
+        pad = bk - sk % bk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        sk_p = sk + pad
+    else:
+        sk_p = sk
+    nkb = sk_p // bk
+    kb = jnp.moveaxis(k.reshape(b, hkv, nkb, bk, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nkb, bk, dv), 2, 0)
+
+    # grouped-query layout: (B, Hkv, G, Sq, D) — K/V are never head-repeated
+    # (a materialized repeat triples the K/V cotangent collectives under SP)
+    qf = q.reshape(b, hkv, group, sq, d).astype(jnp.float32)
+    qpos = jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ki, kc, vc = inp
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc) * scale
+        kpos = ki * bk + jnp.arange(bk)
+        if causal:
+            mask = qpos[:, None] >= kpos[None, :]
+        else:
+            mask = jnp.ones((sq, bk), bool)
+        mask = mask & (kpos < sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    # the scan carry must start sequence-sharded: a zeros-init carry has no
+    # sharding for GSPMD to propagate, and a replicated (B, H, Sq, D) f32
+    # running state costs ~40 GB/device at jamba scale (EXPERIMENTS §Perf)
+    def _c(x):
+        return constrain(x, rules, "batch", None, None, "model", None)
+    init = (_c(jnp.full((b, hkv, group, sq, 1), -1e30, jnp.float32)),
+            _c(jnp.zeros((b, hkv, group, sq, 1), jnp.float32)),
+            _c(jnp.zeros((b, hkv, group, sq, dv), jnp.float32)))
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nkb), kb, vb),
+                                  unroll=flags.scan_unroll_inner())
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def attention_impl(q, k, v, causal: bool = True, scale=None,
+                   impl: str = "auto",
+                   rules: ShardingRules = NO_SHARDING) -> jax.Array:
+    if impl == "auto":
+        if k.shape[2] <= 2048:
+            impl = "dense"
+        else:
+            impl = "flash" if jax.default_backend() == "tpu" else "chunked"
+    if impl == "dense":
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, scale=scale,
+                                 rules=rules)
+    if impl == "flash":
+        return flash_attention(q, k, v, causal=causal, scale=scale)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------- #
+# GQA block
+# ---------------------------------------------------------------------- #
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), 0, dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), 0, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def gqa_specs(cfg: ModelConfig, rules: ShardingRules) -> Params:
+    s = {
+        "wq": rules.logical("fsdp", "tp"),
+        "wk": rules.logical("fsdp", "tp"),
+        "wv": rules.logical("fsdp", "tp"),
+        "wo": rules.logical("tp", "fsdp"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": rules.logical(None)}
+        s["k_norm"] = {"scale": rules.logical(None)}
+    return s
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)  # (B, H, S, hd)
+
+
+def gqa_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, rules: ShardingRules = NO_SHARDING,
+                  impl: str = "auto") -> jax.Array:
+    """Full-sequence causal attention. x: (B, S, D)."""
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(x @ params["wq"], hq, hd)
+    k = _split_heads(x @ params["wk"], hkv, hd)
+    v = _split_heads(x @ params["wv"], hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    # Sequence-parallel attention: q stays sequence-sharded over 'model'
+    # (propagated from the SP block input); K/V are explicitly gathered
+    # over 'model' — constraining the small bf16 K/V here stops GSPMD from
+    # gathering the 4x-larger f32 block input instead.  No head-dim
+    # constraints — head counts (24, 8, 56...) rarely divide the model
+    # axis and padded head sharding forces catastrophic remat collectives.
+    q = constrain(q, rules, "batch", None, "model", None)
+    k = constrain(k, rules, "batch", None, None, None)
+    v = constrain(v, rules, "batch", None, None, None)
+    o = attention_impl(q, k, v, causal=True, impl=impl, rules=rules)
+    o = o.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], hq * hd)
+    return o @ params["wo"]
+
+
+def gqa_decode(params: Params, x: jax.Array, k_cache: jax.Array,
+               v_cache: jax.Array, pos: jax.Array, cfg: ModelConfig,
+               rules: ShardingRules = NO_SHARDING
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); caches: (B, Hkv, S, hd); pos: (B,)."""
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    b = x.shape[0]
+    q = _split_heads(x @ params["wq"], hq, hd)           # (B, Hq, 1, hd)
+    k_new = _split_heads(x @ params["wk"], hkv, hd)      # (B, Hkv, 1, hd)
+    v_new = _split_heads(x @ params["wv"], hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k_new = rmsnorm(params["k_norm"], k_new, cfg.norm_eps)
+    q = apply_rope(q, pos[:, None, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None, None], cfg.rope_theta)
+
+    # cache write at pos (same pos for all batch rows in this framework)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos[0], axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos[0], axis=2)
+
+    s_max = k_cache.shape[2]
+    group = hq // hkv
+    # grouped-query einsum — no materialized K/V head repeat
+    qg = q.reshape(b, hkv, group, hd).astype(jnp.float32)      # (B,Hkv,G,hd)
+    kk = k_cache.astype(jnp.float32)
+    vv = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg, kk) / math.sqrt(hd)
+    mask = jnp.arange(s_max)[None, None, None, :] <= pos[0]
+    scores = jnp.where(mask, scores, -1e30)
+    # softmax over the (possibly model-sharded) cache axis: GSPMD inserts the
+    # distributed max/sum combine (flash-decoding style)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vv).astype(x.dtype)
+    o = o.reshape(b, 1, hq * hd)
+    return o @ params["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------- #
+# MLA block (DeepSeek-V2): compressed-latent KV
+# ---------------------------------------------------------------------- #
+def mla_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    m = cfg.mla
+    d, hq = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, hq * qd), 0, dtype),
+        "w_dkv": dense_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            0, dtype),
+        "w_uk": dense_init(ks[2], (m.kv_lora_rank, hq * m.qk_nope_head_dim),
+                           0, dtype),
+        "w_uv": dense_init(ks[3], (m.kv_lora_rank, hq * m.v_head_dim),
+                           0, dtype),
+        "wo": dense_init(ks[4], (hq * m.v_head_dim, d), 0, dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+    }
+
+
+def mla_specs(cfg: ModelConfig, rules: ShardingRules) -> Params:
+    return {
+        "wq": rules.logical("fsdp", "tp"),
+        "w_dkv": rules.logical("fsdp", None),
+        "w_uk": rules.logical(None, "tp"),
+        "w_uv": rules.logical(None, "tp"),
+        "wo": rules.logical("tp", "fsdp"),
+        "kv_norm": {"scale": rules.logical(None)},
+    }
+
+
+def mla_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, rules: ShardingRules = NO_SHARDING,
+                  impl: str = "auto") -> jax.Array:
+    """Full-sequence MLA. x: (B, S, D)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    hq = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = (x @ params["wq"]).reshape(b, s, hq, nope + rope_d).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]                               # (B, S, lora+rope)
+    c_kv, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, None], positions[:, None, :],
+                        cfg.rope_theta)                     # (B, 1, S, rope_d)
+
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, hq, nope).transpose(0, 2, 1, 3)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, hq, vd).transpose(0, 2, 1, 3)
+
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, hq, s, rope_d))], axis=-1)
+    qq = constrain(qq, rules, "batch", None, "model", None)  # SP queries
+    kk = constrain(kk, rules, "batch", None, None, None)     # gathered K/V
+    v = constrain(v, rules, "batch", None, None, None)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    # v head dim != qk head dim -> dense/chunked path (kernel assumes equal D)
+    o = attention_impl(qq, kk, v, causal=True, scale=scale,
+                       impl="chunked" if impl in ("auto", "flash") and s > 2048
+                       else ("dense" if impl in ("auto", "flash") else impl),
+                       rules=rules)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * vd)
+    return o @ params["wo"]
+
+
+def mla_decode(params: Params, x: jax.Array, ckv_cache: jax.Array,
+               pos: jax.Array, cfg: ModelConfig,
+               rules: ShardingRules = NO_SHARDING
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Absorbed-MLA decode: score in the latent space, cache only c_kv+rope.
+
+    x: (B, 1, D); ckv_cache: (B, S, lora+rope).  This is MLA's point: the
+    cache is rank-compressed (576 floats/token vs Hkv·hd·2).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    hq = cfg.num_heads
+    nope, rope_d, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    lora = m.kv_lora_rank
+
+    q = (x @ params["wq"]).reshape(b, hq, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+
+    ckv_new = x[:, 0] @ params["w_dkv"]                    # (B, lora+rope)
+    c_new = rmsnorm(params["kv_norm"], ckv_new[..., :lora], cfg.norm_eps)
+    r_new = apply_rope(ckv_new[..., None, lora:], pos[:, None],
+                       cfg.rope_theta)[..., 0, :]
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, jnp.concatenate([c_new, r_new], -1)[:, None].astype(
+            ckv_cache.dtype), pos[0], axis=1)
+
+    c_all = ckv_cache[..., :lora].astype(jnp.float32)      # (B, S, lora)
+    r_all = ckv_cache[..., lora:].astype(jnp.float32)      # (B, S, rope_d)
+
+    # absorb W_uk into q: (B, Hq, nope) @ (lora, Hq*nope) -> (B, Hq, lora)
+    w_uk = params["w_uk"].reshape(lora, hq, nope).astype(jnp.float32)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32), w_uk)
+    scores = jnp.einsum("bhl,bsl->bhs", q_lat, c_all)
+    scores += jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32), r_all)
+    scores = scores / math.sqrt(nope + rope_d)
+    mask = jnp.arange(ckv_cache.shape[1])[None, None, :] <= pos[0]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", p, c_all)             # (B, Hq, lora)
+    w_uv = params["w_uv"].reshape(lora, hq, vd).astype(jnp.float32)
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv).astype(x.dtype)
+    return o.reshape(b, 1, hq * vd) @ params["wo"], ckv_cache

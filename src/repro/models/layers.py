@@ -1,0 +1,188 @@
+"""Shared neural-net building blocks (pure-pytree params, GSPMD-sharded).
+
+No flax/optax in this environment; parameters are nested dicts of arrays and
+every block is ``apply(params, x, ...)``.  Sharding is expressed through
+``ShardingRules`` which maps logical axes -> mesh axes; ``spec_for`` builds
+the PartitionSpec tree for a param tree (used by train/serve/launch), and
+``constrain`` applies activation sharding constraints inside jit (no-op when
+no mesh axes are configured, e.g. in single-device tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------- #
+# Sharding rules: logical axes -> mesh axes
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical->physical axis mapping.
+
+    Two weight schemes share one spec vocabulary (see DESIGN.md §5):
+
+    * **train** (``tp_weights=False``): ZeRO-3 — weights sharded over
+      ``fsdp`` only and *replicated over model*; the model axis carries
+      sequence-parallel activations, expert parallelism, and the vocab-
+      parallel embedding.  Weight ``tp`` dims resolve to ``None``.
+    * **serve** (``tp_weights=True``): Megatron TP — weight ``tp`` dims
+      resolve to the model axis so decode reads only the local shard and
+      psums tiny (B, 1, D) activations instead of gathering weights
+      per token.
+
+    ``model`` in a spec always means the physical model axis (experts,
+    vocab, sequence/KV sharding); ``tp`` means "model axis iff serving".
+    """
+
+    batch: Union[str, Tuple[str, ...], None] = None   # ('pod','data')
+    fsdp: Union[str, None] = None                     # 'data'
+    model: Union[str, None] = None                    # 'model'
+    tp_weights: bool = False
+    model_size: int = 1                               # physical axis sizes
+    data_size: int = 1
+
+    def logical(self, *axes: Optional[str]) -> P:
+        """Build a PartitionSpec from logical axis names."""
+        out = []
+        for a in axes:
+            if a is None:
+                out.append(None)
+            elif a == "batch":
+                out.append(self.batch)
+            elif a == "fsdp":
+                out.append(self.fsdp)
+            elif a == "model":
+                out.append(self.model)
+            elif a == "tp":
+                out.append(self.model if self.tp_weights else None)
+            else:
+                raise ValueError(a)
+        return P(*out)
+
+    @property
+    def enabled(self) -> bool:
+        return any(x is not None for x in (self.batch, self.fsdp, self.model))
+
+
+NO_SHARDING = ShardingRules()
+
+
+def constrain(x: jax.Array, rules: ShardingRules, *axes: Optional[str]):
+    """Activation sharding constraint (identity when rules disabled)."""
+    if not rules.enabled:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.logical(*axes))
+
+
+# ---------------------------------------------------------------------- #
+# Initializers
+# ---------------------------------------------------------------------- #
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------- #
+# RMSNorm
+# ---------------------------------------------------------------------- #
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- #
+# Rotary position embedding
+# ---------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------- #
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), 0, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), 0, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), 0, dtype),
+    }
+
+
+def mlp_specs(rules: ShardingRules) -> Params:
+    return {
+        "w_gate": rules.logical("fsdp", "tp"),
+        "w_up": rules.logical("fsdp", "tp"),
+        "w_down": rules.logical("tp", "fsdp"),
+    }
+
+
+def mlp(params: Params, x: jax.Array, act: str = "silu",
+        rules: ShardingRules = NO_SHARDING) -> jax.Array:
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(gate.astype(jnp.float32), approximate=True
+                        ).astype(x.dtype) * up
+    else:
+        raise ValueError(act)
+    # Scheme-aware hidden sharding: under ZeRO+SP (training) the hidden is
+    # sequence-sharded — an ff-over-'model' constraint would force a partial
+    # down-proj + full-activation all-reduce per layer.  Under TP (serving,
+    # S=1) it is the opposite: the hidden MUST stay ff-sharded or GSPMD
+    # all-gathers the full weight matrices per decoded token.
+    if rules.tp_weights:
+        h = constrain(h, rules, "batch", None, "model")
+    else:
+        h = constrain(h, rules, "batch", "model", None)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------- #
+# Cross-entropy (fp32 logits, optional z-loss)
+# ---------------------------------------------------------------------- #
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          z_loss: float = 1e-4) -> jax.Array:
+    """logits (..., V) any float dtype; labels (...) int32. Mean over all."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return jnp.mean(loss)

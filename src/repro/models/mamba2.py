@@ -1,0 +1,164 @@
+"""Mamba-2 (SSD) block: in_proj -> causal conv -> SSD scan -> gated norm -> out.
+
+Train/prefill uses the chunked SSD (Pallas kernel on TPU, chunked-jnp on
+CPU/dry-run — both validated against the naive recurrence oracle).  Decode
+carries a constant-size state (heads × N × P) + a (d_conv-1) conv tail, which
+is why the SSM archs are the ones eligible for the 500k-context cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd_scan import ssd_scan, ssd_scan_chunked_jnp
+from .config import ModelConfig
+from .layers import (NO_SHARDING, Params, ShardingRules, constrain,
+                     dense_init, rmsnorm, rmsnorm_init)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return s, d_in, n_heads
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    s, d_in, nh = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (d_in), x (d_in), B (N), C (N), dt (nh)]
+    proj_out = 2 * d_in + 2 * s.d_state + nh
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, proj_out), 0, dtype),
+        "conv": (jax.random.normal(ks[1], (s.d_conv, d_in), jnp.float32)
+                 * 0.1).astype(dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),        # A = -exp(a_log) in (-1,0]
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus -> small dt
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "w_out": dense_init(ks[3], (d_in, cfg.d_model), 0, dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig, rules: ShardingRules) -> Params:
+    return {
+        "w_in": rules.logical("fsdp", "tp"),
+        "conv": rules.logical(None, "tp"),
+        "a_log": rules.logical(None),
+        "dt_bias": rules.logical(None),
+        "d_skip": rules.logical(None),
+        "norm": {"scale": rules.logical(None)},
+        "w_out": rules.logical("tp", "fsdp"),
+    }
+
+
+def _split_proj(proj, cfg):
+    s, d_in, nh = _dims(cfg)
+    z = proj[..., :d_in]
+    x = proj[..., d_in:2 * d_in]
+    bmat = proj[..., 2 * d_in:2 * d_in + s.d_state]
+    cmat = proj[..., 2 * d_in + s.d_state:2 * d_in + 2 * s.d_state]
+    dt = proj[..., 2 * d_in + 2 * s.d_state:]
+    return z, x, bmat, cmat, dt
+
+
+def mamba_forward(params: Params, u: jax.Array, cfg: ModelConfig,
+                  rules: ShardingRules = NO_SHARDING,
+                  impl: str = "auto", return_state: bool = False):
+    """Full-sequence SSD. u: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns (ssm_state (B, nh, N, P),
+    conv_state (B, d_conv-1, d_in)) — the prefill→decode hand-off.
+    """
+    s_cfg, d_in, nh = _dims(cfg)
+    b, t, _ = u.shape
+    proj = u @ params["w_in"]
+    z, x_raw, bmat, cmat, dt = _split_proj(proj, cfg)
+
+    # causal depthwise conv over time (kernel d_conv)
+    pad = jnp.pad(x_raw, ((0, 0), (s_cfg.d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + t] * params["conv"][i][None, None]
+               for i in range(s_cfg.d_conv))
+    x = jax.nn.silu(conv.astype(jnp.float32)).astype(u.dtype)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(params["a_log"])                                     # (nh,)
+
+    # reshape to (B*nh, T, P): heads scan independently
+    xh = x.reshape(b, t, nh, s_cfg.head_dim).transpose(0, 2, 1, 3) \
+          .reshape(b * nh, t, s_cfg.head_dim)
+    dth = dt.transpose(0, 2, 1).reshape(b * nh, t, 1)
+    ah = jnp.tile(a[None, :], (b, 1)).reshape(b * nh, 1)
+    bh = jnp.repeat(bmat.astype(jnp.float32), nh, axis=0).reshape(
+        b, nh, t, s_cfg.d_state)[:, :].reshape(b * nh, t, s_cfg.d_state) \
+        if False else jnp.broadcast_to(
+            bmat[:, None].astype(jnp.float32),
+            (b, nh, t, s_cfg.d_state)).reshape(b * nh, t, s_cfg.d_state)
+    ch = jnp.broadcast_to(cmat[:, None].astype(jnp.float32),
+                          (b, nh, t, s_cfg.d_state)
+                          ).reshape(b * nh, t, s_cfg.d_state)
+
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "chunked"
+    if impl == "kernel":
+        y, h_fin = ssd_scan(xh.astype(jnp.float32), dth, ah, bh, ch,
+                            chunk=s_cfg.chunk)
+    else:
+        y, h_fin = ssd_scan_chunked_jnp(xh.astype(jnp.float32), dth, ah, bh,
+                                        ch, chunk=s_cfg.chunk)
+    # D skip (per head)
+    y = y.reshape(b, nh, t, s_cfg.head_dim) \
+        + params["d_skip"][None, :, None, None] * xh.reshape(
+            b, nh, t, s_cfg.head_dim)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_in).astype(u.dtype)
+
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                                ).astype(u.dtype), cfg.norm_eps)
+    if rules.tp_weights:  # TP hidden (serving) vs SP hidden (training)
+        y = constrain(y, rules, "batch", None, "model")
+    else:
+        y = constrain(y, rules, "batch", "model", None)
+    out = y @ params["w_out"]
+    if not return_state:
+        return out
+    ssm_state = h_fin.reshape(b, nh, s_cfg.d_state, s_cfg.head_dim)
+    conv_state = pad[:, t:t + s_cfg.d_conv - 1]   # last d_conv-1 raw inputs
+    return out, ssm_state, conv_state
+
+
+def mamba_decode(params: Params, u: jax.Array, ssm_state: jax.Array,
+                 conv_state: jax.Array, cfg: ModelConfig,
+                 rules: ShardingRules = NO_SHARDING
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token step. u: (B, 1, D); ssm_state: (B, nh, N, P);
+    conv_state: (B, d_conv-1, d_in)."""
+    s_cfg, d_in, nh = _dims(cfg)
+    b = u.shape[0]
+    proj = u[:, 0] @ params["w_in"]
+    z, x, bmat, cmat, dt = _split_proj(proj, cfg)
+
+    # conv with cached tail
+    window = jnp.concatenate([conv_state, x[:, None]], axis=1)  # (B, d_conv, d_in)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                      params["conv"].astype(jnp.float32))
+    x = jax.nn.silu(conv).astype(u.dtype)
+    conv_state = window[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, nh)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(a[None] * dt)                                     # (B, nh)
+
+    xh = x.reshape(b, nh, s_cfg.head_dim).astype(jnp.float32)
+    inject = dt[..., None, None] * jnp.einsum(
+        "bn,bhp->bhnp", bmat.astype(jnp.float32), xh)
+    ssm_state = decay[..., None, None] * ssm_state + inject
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), ssm_state)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, d_in).astype(u.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                                ).astype(u.dtype), cfg.norm_eps)
+    return (y @ params["w_out"])[:, None], ssm_state, conv_state

@@ -1,0 +1,5 @@
+"""Serving layer: batched prefill/decode engine over the model zoo."""
+
+from .engine import GenerationResult, ServeEngine
+
+__all__ = ["GenerationResult", "ServeEngine"]

@@ -1,0 +1,87 @@
+"""Minimal batched serving engine: prefill → synchronized decode.
+
+Host-side driver over the model's ``prefill`` / ``decode_step``:
+
+* fixed-size request batches with a shared prompt length per batch, which
+  matches the framework's uniform-position decode contract (``pos``
+  identical across the batch; see ``transformer.decode_step``),
+* greedy or temperature sampling,
+* stop on EOS or ``max_new_tokens``.
+
+The jitted step is cached on the engine (stateful reuse — the same
+pseudo-BSP idea the paper applies to dataframe operators: initialize the
+environment once, submit many steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..models.layers import NO_SHARDING, ShardingRules
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, <=max_new_tokens)
+    steps: int
+    prefill_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, cache_len: int,
+                 rules: ShardingRules = NO_SHARDING,
+                 eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self.rules = rules
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(p, cfg, b, cache_len, rules))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos,
+                                                         rules),
+            donate_argnums=(1,))   # KV caches update in place
+
+    def _sample(self, logits: jax.Array, key, temperature: float):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> GenerationResult:
+        """prompts: (B, S0) int32 (or (B, S0, K) for audio)."""
+        cfg = self.cfg
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, s0 = prompts.shape[0], prompts.shape[1]
+        assert s0 + max_new_tokens <= self.cache_len
+        batch = {"tokens": prompts}
+        logits, caches = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+
+        out: List[jax.Array] = []
+        finished = np.zeros((b,), bool)
+        tok = None
+        for step in range(max_new_tokens):
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub, temperature)       # (B,) / (B,K)
+            out.append(tok)
+            if self.eos_id is not None:
+                finished |= np.asarray(tok).reshape(b, -1)[:, 0] == self.eos_id
+                if finished.all():
+                    break
+            pos = jnp.full((b,), s0 + step, jnp.int32)
+            step_tok = tok.reshape((b, 1) if tok.ndim == 1 else (b, 1, -1))
+            logits, caches = self._decode(self.params, caches, step_tok, pos)
+        tokens = np.stack([np.asarray(t) for t in out], axis=1)
+        return GenerationResult(tokens=tokens, steps=len(out),
+                                prefill_len=s0)

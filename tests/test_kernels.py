@@ -1,0 +1,108 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (attention_ref, flash_attention, radix_partition,
+                           radix_partition_ref, segmented_sum,
+                           segmented_sum_ref, ssd_scan, ssd_scan_chunked_jnp,
+                           ssd_scan_ref)
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------- #
+# segmented_sum
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,segs,cols", [(64, 5, 1), (500, 37, 3),
+                                         (1024, 512, 2), (300, 1, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_segmented_sum_sweep(n, segs, cols, dtype):
+    seg = jnp.asarray(np.sort(RNG.integers(0, segs, n)).astype(np.int32))
+    if dtype == jnp.float32:
+        vals = jnp.asarray(RNG.random((n, cols)).astype(np.float32))
+    else:
+        vals = jnp.asarray(RNG.integers(-50, 50, (n, cols)).astype(np.int32))
+    got = segmented_sum(seg, vals, segs)
+    want = segmented_sum_ref(seg, vals, segs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_segmented_sum_1d():
+    seg = jnp.asarray(np.sort(RNG.integers(0, 9, 100)).astype(np.int32))
+    vals = jnp.asarray(RNG.random(100).astype(np.float32))
+    got = segmented_sum(seg, vals, 9)
+    want = segmented_sum_ref(seg, vals, 9)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    assert got.shape == (9,)
+
+
+# ---------------------------------------------------------------------- #
+# radix_partition
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,buckets", [(17, 3), (256, 16), (1000, 128),
+                                       (513, 7), (2048, 1024)])
+def test_radix_partition_sweep(n, buckets):
+    dest = jnp.asarray(RNG.integers(0, buckets, n).astype(np.int32))
+    r1, h1 = radix_partition(dest, buckets)
+    r2, h2 = radix_partition_ref(dest, buckets)
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(h1, h2)
+    # histogram property
+    np.testing.assert_array_equal(
+        np.asarray(h1), np.bincount(np.asarray(dest), minlength=buckets))
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (1, 4, 4, 128, 128, 64),    # MHA square
+    (2, 8, 2, 256, 256, 64),    # GQA
+    (1, 4, 1, 128, 128, 128),   # MQA
+    (1, 2, 2, 100, 100, 32),    # non-multiple seq (padding path)
+    (1, 4, 2, 128, 384, 64),    # cross lengths (kv longer)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, hq, sq, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, sk, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, sk, d)), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=True)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=atol)
+
+
+def test_flash_attention_non_causal():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 128, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-3)
+
+
+# ---------------------------------------------------------------------- #
+# ssd scan
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("bh,t,p,n,chunk", [
+    (2, 64, 16, 8, 32), (3, 256, 16, 8, 64), (1, 100, 8, 4, 32),
+    (4, 128, 64, 128, 128),
+])
+def test_ssd_scan_sweep(bh, t, p, n, chunk):
+    x = jnp.asarray(RNG.standard_normal((bh, t, p)), jnp.float32)
+    dt = jnp.asarray(RNG.random((bh, t, 1)) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-RNG.random((bh, 1)) - 0.05, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((bh, t, n)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((bh, t, n)), jnp.float32)
+    y_ref, h_ref = ssd_scan_ref(x, dt, a, b, c)
+    y_k, h_k = ssd_scan(x, dt, a, b, c, chunk=chunk)
+    y_j, h_j = ssd_scan_chunked_jnp(x, dt, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(y_k, y_ref, atol=3e-3)
+    np.testing.assert_allclose(y_j, y_ref, atol=3e-3)
+    np.testing.assert_allclose(h_k, h_ref, atol=3e-3)
+    np.testing.assert_allclose(h_j, h_ref, atol=3e-3)

@@ -1,0 +1,67 @@
+"""Local DDF operators vs numpy oracles (unit + hypothesis property)."""
+
+import collections
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.dataframe import Table, groupby_local, join_local, join_overflow
+
+
+def _mk(keys, vals, cap_extra=0):
+    keys = np.asarray(keys, np.int32)
+    vals = np.asarray(vals, np.float32)
+    return Table.from_arrays({"k": keys, "v": vals},
+                             capacity=len(keys) + cap_extra)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=40),
+       st.lists(st.integers(0, 15), min_size=1, max_size=40))
+def test_join_local_row_count_and_sums(lk, rk):
+    lt = _mk(lk, np.arange(len(lk)))
+    rt = Table.from_arrays({"k": np.asarray(rk, np.int32),
+                            "w": np.ones(len(rk), np.float32)})
+    out_cap = 4 * (len(lk) + len(rk)) * 4
+    out = join_local(lt, rt, "k", out_capacity=out_cap).to_numpy()
+    rmap = collections.Counter(rk)
+    expect = sum(rmap[k] for k in lk)
+    assert len(out["k"]) == expect
+    # each left row appears exactly count[k] times
+    vmap = collections.Counter(out["v"].tolist())
+    for i, k in enumerate(lk):
+        if rmap[k]:
+            assert vmap[float(i)] == rmap[k]
+
+
+def test_join_overflow_counts(rng):
+    lt = _mk([1] * 10, np.zeros(10))
+    rt = _mk([1] * 10, np.zeros(10))
+    # 100 result rows, capacity 30 -> 70 dropped
+    dropped = int(join_overflow(lt, rt, "k", out_capacity=30))
+    assert dropped == 70
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 8),
+                          st.floats(-100, 100, allow_nan=False,
+                                    allow_subnormal=False,  # XLA FTZ
+                                    width=32)),
+                min_size=1, max_size=50))
+def test_groupby_local_all_aggs(pairs):
+    keys = np.asarray([p[0] for p in pairs], np.int32)
+    vals = np.asarray([p[1] for p in pairs], np.float32)
+    t = Table.from_arrays({"k": keys, "v": vals}, capacity=len(pairs) + 7)
+    out = groupby_local(t, ["k"], {"v": ["sum", "count", "min", "max"]})
+    res = out.to_numpy()
+    order = np.argsort(res["k"])
+    uk = np.unique(keys)
+    np.testing.assert_array_equal(res["k"][order], uk)
+    for i, k in enumerate(uk):
+        sel = vals[keys == k]
+        j = order[i]
+        np.testing.assert_allclose(res["v_sum"][j], sel.sum(), rtol=2e-5,
+                                   atol=1e-4)
+        assert res["v_count"][j] == len(sel)
+        np.testing.assert_allclose(res["v_min"][j], sel.min(), rtol=1e-6)
+        np.testing.assert_allclose(res["v_max"][j], sel.max(), rtol=1e-6)

@@ -1,0 +1,159 @@
+"""Per-arch smoke tests + model-component parity tests (1 device, CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.models.attention import chunked_attention
+from repro.models.config import SHAPES
+from repro.models.layers import NO_SHARDING
+from repro.kernels import attention_ref
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+RNG = np.random.default_rng(0)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    batch = {}
+    if cfg.family == "audio":
+        shape = (B, S, cfg.num_codebooks)
+        batch["tokens"] = jnp.asarray(RNG.integers(0, cfg.vocab_size, shape),
+                                      jnp.int32)
+        batch["labels"] = jnp.asarray(RNG.integers(0, cfg.vocab_size, shape),
+                                      jnp.int32)
+    elif cfg.family == "vlm":
+        p = 8
+        batch["patch_embeds"] = jnp.asarray(
+            RNG.standard_normal((B, p, cfg.d_model)), jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (B, S - p)), jnp.int32)
+        batch["labels"] = jnp.asarray(
+            RNG.integers(0, cfg.vocab_size, (B, S - p)), jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                                      jnp.int32)
+        batch["labels"] = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                                      jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced same-family config: one forward + one train step, no NaNs."""
+    cfg = get_smoke_config(arch)
+    batch = _batch(cfg)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, jnp.float32)
+    h, aux = T.forward(state["params"], cfg, batch, NO_SHARDING)
+    assert h.shape[0] == B and h.shape[-1] == cfg.d_model
+    assert bool(jnp.isfinite(h).all())
+    step = make_train_step(cfg, AdamWConfig(warmup_steps=1, total_steps=4),
+                           NO_SHARDING, ce_chunk=16)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    d0 = jax.tree_util.tree_leaves(state["params"])[1]
+    d1 = jax.tree_util.tree_leaves(state2["params"])[1]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_smoke_config(a).family != "vlm"])
+def test_smoke_decode_matches_prefill(arch):
+    """Greedy-decode logits equal full-prefill logits at the last position."""
+    cfg = get_smoke_config(arch)
+    batch = _batch(cfg)
+    params = T.init_params(jax.random.PRNGKey(1), cfg, jnp.float32)
+    logits_full, _ = T.prefill(params, cfg, batch, S + 4, NO_SHARDING)
+    short = {k: (v[:, :-1] if k == "tokens" else v) for k, v in batch.items()}
+    _, caches = T.prefill(params, cfg, short, S + 4, NO_SHARDING)
+    tok = batch["tokens"][:, -1:]
+    ld, _ = T.decode_step(params, cfg, caches, tok,
+                          jnp.full((B,), S - 1, jnp.int32), NO_SHARDING)
+    np.testing.assert_allclose(ld, logits_full, atol=3e-2)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "mamba2-780m": (48, 1536, None, None, 0, 50280),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == nl, arch
+        assert cfg.d_model == d, arch
+        if h is not None:
+            assert cfg.num_heads == h, arch
+            assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.mla.kv_lora_rank == 512 and ds.moe.top_k == 6
+    ol = get_config("olmoe-1b-7b")
+    assert ol.moe.num_experts == 64 and ol.moe.top_k == 8
+    jb = get_config("jamba-v0.1-52b")
+    assert jb.layer_pattern == "mmmmammm" and jb.moe.num_experts == 16
+    assert get_config("musicgen-large").num_codebooks == 4
+    assert get_config("mamba2-780m").ssm.d_state == 128
+
+
+def test_layer_layout_all_archs():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        n_prefix, period, n_periods = T.layer_layout(cfg)
+        assert n_prefix + period * n_periods == cfg.num_layers
+
+
+def test_chunked_attention_mla_value_dim():
+    """Dv != D (MLA): chunked path matches the dense oracle."""
+    q = jnp.asarray(RNG.standard_normal((2, 4, 300, 24)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 300, 24)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 300, 16)), jnp.float32)
+    o1 = chunked_attention(q, k, v, causal=True, block_k=64)
+    o2 = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(o1, o2, atol=2e-3)
+
+
+def test_long_500k_eligibility():
+    from repro.launch.shapes import cell
+    subq = {a for a in ARCHS if get_config(a).sub_quadratic}
+    assert subq == {"mamba2-780m", "jamba-v0.1-52b"}
+    for a in ARCHS:
+        c = cell(a, "long_500k")
+        assert c.eligible == (a in subq)
+
+
+def test_padded_vocab_loss_excludes_pad_rows():
+    """CE over a padded vocab equals CE over the exact vocab."""
+    cfg = get_smoke_config("mamba2-780m")  # vocab 256 (= padded), force pad:
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, vocab_size=250)
+    params = T.init_params(jax.random.PRNGKey(0), cfg2, jnp.float32)
+    batch = {
+        "tokens": jnp.asarray(RNG.integers(0, 250, (B, S)), jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, 250, (B, S)), jnp.int32),
+    }
+    loss, _ = T.loss_fn(params, cfg2, batch, NO_SHARDING, ce_chunk=16)
+    assert np.isfinite(float(loss))
+    # manual CE with explicit -inf masking must agree
+    h, _ = T.forward(params, cfg2, batch, NO_SHARDING)
+    w = params["embed"].astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,vd->bsv", h, w).astype(jnp.float32)
+    logits = jnp.where(jnp.arange(logits.shape[-1]) < 250, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None], -1)[..., 0]
+    manual = jnp.mean(lse - ll + 1e-4 * lse ** 2)
+    np.testing.assert_allclose(float(loss), float(manual), rtol=1e-4)

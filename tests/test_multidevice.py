@@ -1,0 +1,70 @@
+"""Multi-device integration tests.
+
+Each scenario runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set before jax
+initializes (the unit-test process itself stays 1-device, per the
+assignment).  Scripts assert internally and end with an OK line.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "md_scripts")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def _run(name: str, timeout: int = 900) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)  # script sets its own
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{name} failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+            f"\n--- stderr ---\n{proc.stderr[-4000:]}")
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.multidevice
+def test_comm_collectives():
+    _run("comm_collectives.py")
+
+
+@pytest.mark.multidevice
+def test_dataframe_ops():
+    _run("dataframe_ops.py")
+
+
+@pytest.mark.multidevice
+def test_shuffle_props():
+    _run("shuffle_props.py")
+
+
+@pytest.mark.multidevice
+def test_sharded_train():
+    _run("sharded_train.py", timeout=1800)
+
+
+@pytest.mark.multidevice
+def test_elastic_checkpoint():
+    _run("elastic_checkpoint.py")
+
+
+@pytest.mark.multidevice
+def test_compression_train():
+    _run("compression_train.py")
+
+
+@pytest.mark.multidevice
+def test_moe_shuffle_parity():
+    _run("moe_shuffle_parity.py")
+
+
+@pytest.mark.multidevice
+def test_data_pipeline():
+    _run("data_pipeline.py")

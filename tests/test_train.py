@@ -1,0 +1,81 @@
+"""Optimizer, checkpointing, compression unit tests (1 device)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import (AdamWConfig, AsyncCheckpointer, adamw_update,
+                         clip_by_global_norm, dequantize_int8, global_norm,
+                         init_opt_state, latest_step, lr_at, quantize_int8,
+                         restore, save)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1e-3) < 1e-9          # end of warmup
+    assert lrs[-1] == pytest.approx(1e-4, rel=1e-3)  # min ratio
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[1:], lrs[2:]))  # decay
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_reduces_quadratic():
+    """AdamW on f(w) = |w|^2 converges toward 0."""
+    w = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = init_opt_state(w)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                      weight_decay=0.0, clip_norm=100.0)
+    for _ in range(150):
+        g = jax.tree_util.tree_map(lambda p: 2 * p, w)
+        w, state, _ = adamw_update(w, g, state, cfg)
+    assert float(jnp.abs(w["w"]).max()) < 0.25
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+             "b": {"c": jnp.asarray(7, jnp.int32)}}
+    path = str(tmp_path / "ckpt_5")
+    save(path, state, step=5)
+    like = jax.tree_util.tree_map(jnp.zeros_like, state)
+    out = restore(path, like)
+    np.testing.assert_array_equal(out["a"], state["a"])
+    assert int(out["b"]["c"]) == 7
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    state = {"a": jnp.zeros((2, 3))}
+    path = str(tmp_path / "ckpt_1")
+    save(path, state)
+    with pytest.raises(ValueError):
+        restore(path, {"a": jnp.zeros((3, 3))})
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer()
+    state = {"w": jnp.ones((128, 128))}
+    ck.save(str(tmp_path / "ckpt_1"), state, 1)
+    ck.wait()
+    out = restore(str(tmp_path / "ckpt_1"), state)
+    np.testing.assert_array_equal(out["w"], state["w"])
+
+
+def test_int8_quantization_roundtrip(rng):
+    g = jnp.asarray(rng.standard_normal((1000,)) * 0.01, jnp.float32)
+    q, scale = quantize_int8(g, block=256)
+    back = dequantize_int8(q, scale, g.shape, jnp.float32)
+    # error bounded by scale/2 per block
+    err = np.abs(np.asarray(back - g))
+    bound = np.repeat(np.asarray(scale), 256)[:1000] * 0.5 + 1e-9
+    assert (err <= bound).all()
