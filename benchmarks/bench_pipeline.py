@@ -1,24 +1,43 @@
 """Paper Fig 9: pipeline of operators (join -> groupby -> sort -> add_scalar).
 
 Three execution modes of the same logical plan:
-  * bsp        — ONE compiled program, local ops implicitly coalesced
-                 (CylonFlow),
-  * bsp_staged — one dispatch per communication stage (coalescing within
-                 stages only),
-  * amt        — one dispatch per sub-operator + allgather-based shuffle
-                 (the Dask-DDF-style baseline).
+  bsp        — ONE compiled program, local ops implicitly coalesced
+               (CylonFlow),
+  bsp_staged — one dispatch per communication stage (coalescing within
+               stages only),
+  amt        — one dispatch per sub-operator + allgather-based shuffle
+               (the Dask-DDF-style baseline).
 
-The bsp/amt gap reproduces the paper's 10-24x pipeline speedup claim
-qualitatively (absolute ratios differ on the CPU stand-in backend).
+Each mode runs with the planner optimizer OFF (the plan exactly as
+written — note this includes groupby pre-aggregation, which is now an
+optimizer rule rather than an implicit default) and ON (shuffle elision +
+pushdowns + pre-agg), recording stage count, shuffle count, bytes on the
+wire, and wall-clock — so BENCH_*.json captures the optimizer gain
+alongside the paper's bsp/amt gap (10-24x pipeline speedup claim,
+qualitative on the CPU stand-in backend).  Plans are compiled once per
+(parallelism, optimize) cell; the timed region measures dispatch +
+execution through ``run_physical``, not re-planning.
 """
 
 from __future__ import annotations
 
 import jax
 
-from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.core import CylonEnv, DistTable, Plan
+from repro.planner import compile_plan, run_physical
 
 from .common import make_table_data, record, time_fn
+
+
+def make_plan(capacity: int) -> Plan:
+    # ample bucket/out capacities: the unoptimized baseline re-shuffles
+    # already-partitioned data, landing all rows in one self-dest bucket
+    return (Plan.scan("l")
+            .join(Plan.scan("r"), on="k", out_capacity=capacity * 4,
+                  bucket_capacity=capacity)
+            .groupby(["k"], {"v0": ["sum"]}, bucket_capacity=capacity * 4)
+            .sort(["k"], bucket_capacity=capacity * 4)
+            .add_scalar(1.0, cols=["v0_sum"]))
 
 
 def run(global_rows: int = 100_000) -> None:
@@ -31,20 +50,30 @@ def run(global_rows: int = 100_000) -> None:
         env = CylonEnv(jax.devices()[:p])
         lt = DistTable.from_numpy(ld, p)
         rt = DistTable.from_numpy(rd, p)
-        plan = (Plan.scan("l")
-                .join(Plan.scan("r"), on="k", out_capacity=lt.capacity * 4)
-                .groupby(["k"], {"v0": ["sum"]})
-                .sort(["k"])
-                .add_scalar(1.0, cols=["v0_sum"]))
+        plan = make_plan(lt.capacity)
+        tables = {"l": lt, "r": rt}
 
         times = {}
+        pplans = {opt: compile_plan(plan, tables, optimize_plan=opt)
+                  for opt in (False, True)}
         for mode in ("bsp", "bsp_staged", "amt"):
-            def do(m=mode):
-                return execute(plan, env, {"l": lt, "r": rt},
-                               mode=m).row_counts
-            times[mode] = time_fn(do, iters=3)
-            record("pipeline(Fig9)", f"{mode}_p{p}", times[mode],
-                   mode=mode, parallelism=p, stages=plan.num_stages())
+            for opt in (False, True):
+                tag = f"{mode}_{'opt' if opt else 'unopt'}"
+                pplan = pplans[opt]
+                _, stats = run_physical(pplan, env, tables, mode=mode,
+                                        collect_stats=True)
+
+                def do(pp=pplan, m=mode):
+                    return run_physical(pp, env, tables, mode=m).row_counts
+                times[tag] = time_fn(do, iters=3)
+                record("pipeline(Fig9)", f"{tag}_p{p}", times[tag],
+                       mode=mode, parallelism=p, optimized=opt,
+                       stages=pplan.num_stages, shuffles=pplan.num_shuffles,
+                       rows_shuffled=stats.rows_shuffled,
+                       bytes_shuffled=stats.bytes_shuffled)
         record("pipeline(Fig9)", f"speedup_bsp_over_amt_p{p}",
-               times["amt"] / times["bsp"], parallelism=p,
+               times["amt_unopt"] / times["bsp_unopt"], parallelism=p,
+               note="ratio not seconds")
+        record("pipeline(Fig9)", f"speedup_optimizer_bsp_p{p}",
+               times["bsp_unopt"] / times["bsp_opt"], parallelism=p,
                note="ratio not seconds")

@@ -29,6 +29,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="smaller row counts (CI-speed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny row counts (seconds; CI sanity check only)")
     ap.add_argument("--csv", default="bench_results.csv")
     args = ap.parse_args()
 
@@ -37,7 +39,7 @@ def main() -> None:
                    bench_strong_scaling)
     from .common import RESULTS, dump_csv
 
-    scale = 4 if args.quick else 1
+    scale = 50 if args.smoke else 4 if args.quick else 1
     suites = {
         "local_ops": lambda: bench_local_ops.run(200_000 // scale),
         "communicators": lambda: bench_communicators.run(50_000 // scale),

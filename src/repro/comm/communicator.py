@@ -34,6 +34,8 @@ from typing import Any, Callable, Dict, Type
 import jax
 import jax.numpy as jnp
 
+from .. import compat
+
 
 class Communicator(abc.ABC):
     """Abstract DDF communicator bound to one mesh axis."""
@@ -48,7 +50,7 @@ class Communicator(abc.ABC):
     # Introspection (valid inside shard_map only)
     # ------------------------------------------------------------------ #
     def size(self) -> int:
-        return jax.lax.axis_size(self.axis)
+        return compat.axis_size(self.axis)
 
     def rank(self):
         return jax.lax.axis_index(self.axis)

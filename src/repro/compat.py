@@ -1,0 +1,60 @@
+"""Version-compatibility shims for the jax APIs this repo relies on.
+
+The codebase is written against the modern spelling (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh`` as ambient-mesh context manager).  Older
+installs (jax 0.4.x) expose the same functionality under
+``jax.experimental.shard_map.shard_map`` (``check_rep``) and the legacy
+``Mesh`` context manager.  Route every use through this module so a single
+site owns the version split.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+def _ambient_mesh():
+    """Mesh installed by the legacy ``with mesh:`` context (jax 0.4.x)."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def shard_map(f: Callable, mesh: Optional[Any] = None, *, in_specs,
+              out_specs, check_vma: bool = True) -> Callable:
+    """``jax.shard_map`` across jax versions.
+
+    ``mesh=None`` uses the ambient mesh (``set_mesh`` below).
+    """
+    if _HAS_NEW_SHARD_MAP:
+        kw = {} if mesh is None else {"mesh": mesh}
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    if mesh is None:
+        mesh = _ambient_mesh()
+        if mesh is None:
+            raise ValueError(
+                "shard_map without an explicit mesh requires an ambient mesh "
+                "(wrap the call in `with compat.set_mesh(mesh):`)")
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def axis_size(axis: str):
+    """``jax.lax.axis_size`` across jax versions (static inside shard_map)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)  # constant-folded to the static axis size
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager across jax versions."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    return mesh  # legacy Mesh is itself a context manager

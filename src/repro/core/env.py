@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from ..comm import Communicator, get_communicator
 from ..dataframe.table import Table
 
@@ -195,7 +196,7 @@ class CylonEnv:
         # per-shard axis (columns (cap,...), counts (1,), arrays (1,...)), so
         # a single P(axis) applies to the whole output tree and no separate
         # structure-discovery trace is needed.
-        mapped = jax.jit(jax.shard_map(
+        mapped = jax.jit(compat.shard_map(
             shard_body, mesh=self.mesh, in_specs=in_specs,
             out_specs=P(self.axis), check_vma=False))
 
@@ -229,7 +230,7 @@ class EnvContext:
         return jax.lax.axis_index(self.axis)
 
     def size(self):
-        return jax.lax.axis_size(self.axis)
+        return compat.axis_size(self.axis)
 
 
 # ---------------------------------------------------------------------- #

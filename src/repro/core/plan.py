@@ -1,9 +1,18 @@
-"""Logical plan + coalescing optimizer + execution modes.
+"""Logical plan builder + execution entry point.
 
 The paper's BSP execution *implicitly* coalesces every local sub-operator
-between two communication boundaries (§III-B1); AMT systems need an explicit
-plan optimizer to approximate that (Spark Tungsten).  Here the plan makes the
-boundary structure explicit so we can run the same pipeline three ways:
+between two communication boundaries (§III-B1).  The builder below records
+the operator DAG; optimization and lowering live in ``repro.planner``:
+
+  * ``repro.planner.logical``  — typed plan with partitioning / cardinality
+                                 / liveness properties,
+  * ``repro.planner.rules``    — shuffle elision, join-side selection,
+                                 predicate & projection pushdown, pre-agg,
+  * ``repro.planner.physical`` — stage DAG lowering + structural-fingerprint
+                                 compile cache,
+  * ``repro.planner.explain``  — EXPLAIN rendering.
+
+``execute`` keeps the paper's three execution modes:
 
   * ``bsp``        — entire plan compiled into ONE shard_map program
                      (CylonFlow execution: one dispatch, XLA fuses all local
@@ -24,18 +33,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
-from ..comm import Communicator
-from ..dataframe import ops_local
-from ..dataframe.groupby import groupby as df_groupby
-from ..dataframe.join import join as df_join
-from ..dataframe.ops_local import hash_columns
-from ..dataframe.shuffle import shuffle as df_shuffle
-from ..dataframe.sort import sort as df_sort
 from ..dataframe.table import Table
 
 _ids = itertools.count()
@@ -67,8 +68,14 @@ class Plan:
     def add_scalar(self, value, cols: Optional[Sequence[str]] = None) -> "Plan":
         return Plan(Node("add_scalar", [self.node], {"value": value, "cols": cols}))
 
-    def filter(self, pred: Callable[[Table], jax.Array]) -> "Plan":
-        return Plan(Node("filter", [self.node], {"pred": pred}))
+    def filter(self, pred: Callable[[Table], jax.Array],
+               cols: Optional[Sequence[str]] = None) -> "Plan":
+        """``cols`` (optional) declares which columns ``pred`` reads; the
+        optimizer can only push undeclared predicates past schema-preserving
+        boundaries."""
+        return Plan(Node("filter", [self.node],
+                         {"pred": pred,
+                          "cols": tuple(cols) if cols is not None else None}))
 
     def project(self, cols: Sequence[str]) -> "Plan":
         return Plan(Node("project", [self.node], {"cols": tuple(cols)}))
@@ -106,167 +113,25 @@ class Plan:
         return order
 
     def num_stages(self) -> int:
-        """1 + number of communication boundaries (coalesced stage count)."""
+        """1 + number of communication boundaries (unoptimized count; see
+        ``planner.compile_plan(...).num_stages`` for the optimized one)."""
         return 1 + sum(1 for n in self.topo() if n.op in Node.COMM_OPS)
 
-
-# ---------------------------------------------------------------------- #
-# Node evaluation (shared by all modes; runs inside shard_map)
-# ---------------------------------------------------------------------- #
-def _eval_node(node: Node, comm: Communicator, values: Dict[int, Table],
-               tables: Dict[str, Table], shuffle_mode: str) -> Table:
-    p = node.params
-    ins = [values[i.nid] for i in node.inputs]
-    if node.op == "scan":
-        return tables[p["name"]]
-    if node.op == "add_scalar":
-        return ops_local.add_scalar(ins[0], p["value"], p["cols"])
-    if node.op == "filter":
-        return ops_local.filter_rows(ins[0], p["pred"])
-    if node.op == "project":
-        return ins[0].select(p["cols"])
-    if node.op == "map_columns":
-        return ops_local.map_columns(ins[0], p["fn"], p["cols"])
-
-    kw = {k: v for k, v in p.items()
-          if k not in ("on", "keys", "aggs", "by", "key_cols")}
-    if shuffle_mode == "allgather":
-        kw["shuffle_fn"] = _shuffle_allgather
-    if node.op == "join":
-        out, *_ = _join(ins[0], ins[1], comm, p["on"], **kw)
-        return out
-    if node.op == "groupby":
-        out, _ = _groupby(ins[0], comm, p["keys"], p["aggs"], **kw)
-        return out
-    if node.op == "sort":
-        out, _ = _sort(ins[0], comm, p["by"], **kw)
-        return out
-    if node.op == "shuffle":
-        fn = kw.pop("shuffle_fn", df_shuffle)
-        out, _ = fn(ins[0], comm, key_cols=p["key_cols"], **kw)
-        return out
-    raise ValueError(node.op)
+    def explain(self, tables: Optional[Mapping[str, Any]] = None,
+                optimize: bool = True, mode: str = "bsp") -> str:
+        from ..planner import explain as planner_explain
+        return planner_explain(self, tables, optimize_plan=optimize, mode=mode)
 
 
-# Wrappers letting the AMT baseline swap the shuffle implementation.
-def _join(left, right, comm, on, shuffle_fn=df_shuffle, **kw):
-    l_sh, l_st = shuffle_fn(left, comm, key_cols=[on], **{k: v for k, v in kw.items()
-                                                          if k != "out_capacity"})
-    r_sh, r_st = shuffle_fn(right, comm, key_cols=[on], **{k: v for k, v in kw.items()
-                                                           if k != "out_capacity"})
-    return (ops_local.join_local(l_sh, r_sh, on,
-                                 out_capacity=kw.get("out_capacity")), l_st, r_st)
-
-
-def _groupby(table, comm, keys, aggs, shuffle_fn=df_shuffle, **kw):
-    if shuffle_fn is df_shuffle:
-        return df_groupby(table, comm, keys, aggs, **kw)
-    # AMT path: no pre-aggregation (Dask groupby ships raw rows by default
-    # for nunique-style aggs; we keep pre-agg OFF to model task granularity)
-    shuffled, st = shuffle_fn(table, comm, key_cols=list(keys),
-                              **{k: v for k, v in kw.items() if k != "pre_aggregate"})
-    from ..dataframe.groupby import _normalize
-    physical, post = _normalize(aggs)
-    final = ops_local.groupby_local(shuffled, keys, physical)
-    out_cols = {k: final.columns[k] for k in keys}
-    for out_name, kind, src in post:
-        if kind == "copy":
-            out_cols[out_name] = final.columns[src]
-        else:
-            s = final.columns[f"{src}_sum"]
-            c = final.columns[f"{src}_count"]
-            out_cols[out_name] = jnp.where(c > 0, s / jnp.maximum(c, 1).astype(s.dtype),
-                                           jnp.zeros((), s.dtype))
-    return Table(out_cols, final.row_count), st
-
-
-def _sort(table, comm, by, shuffle_fn=df_shuffle, **kw):
-    if shuffle_fn is df_shuffle:
-        return df_sort(table, comm, by, **kw)
-    from ..dataframe.sort import _sample_splitters
-    key = table.columns[by[0]]
-    splitters = _sample_splitters(key, table.row_count, comm, kw.pop("samples", 64))
-    dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
-    shuffled, st = shuffle_fn(table, comm, dest=dest, **kw)
-    return ops_local.sort_local(shuffled, by), st
-
-
-# ---------------------------------------------------------------------- #
-# AMT-baseline shuffle: allgather-then-select (object-store pattern)
-# ---------------------------------------------------------------------- #
-def _shuffle_allgather(table: Table, comm: Communicator,
-                       key_cols=None, dest=None, out_capacity=None, **_):
-    """Every rank receives ALL rows and keeps those hashed to it.
-
-    This models Dask partd / Ray object-store data sharing: data is published
-    globally rather than routed, costing O(p·rows) bandwidth per rank.
-    """
-    p = comm.size()
-    rank = comm.rank()
-    cap = table.capacity
-    out_cap = out_capacity or cap
-    valid = table.valid_mask()
-    if dest is None:
-        h = hash_columns(table, key_cols)
-        dest = (h % jnp.uint32(p)).astype(jnp.int32)
-    dest = jnp.where(valid, dest, p)
-
-    gathered_dest = comm.all_gather(dest).reshape(-1)            # (p*cap,)
-    keep = gathered_dest == rank
-    order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)[:out_cap]
-    new_count = jnp.minimum(jnp.sum(keep), out_cap).astype(jnp.int32)
-    cols = {}
-    for name, col in table.columns.items():
-        g = comm.all_gather(col).reshape((-1,) + col.shape[1:])
-        cols[name] = jnp.take(g, order, axis=0)
-    from ..dataframe.shuffle import ShuffleStats
-    sent = jax.ops.segment_sum(jnp.ones((cap,), jnp.int32), dest, num_segments=p + 1)[:p]
-    stats = ShuffleStats(sent, sent, jnp.asarray(0, jnp.int32),
-                         jnp.maximum(jnp.sum(keep) - out_cap, 0))
-    return Table(cols, new_count).mask_padding(), stats
-
-
-# ---------------------------------------------------------------------- #
-# Execution modes
-# ---------------------------------------------------------------------- #
-def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp"):
-    """Execute a plan against DistTables. Returns a DistTable.
+def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
+            optimize: bool = True, collect_stats: bool = False):
+    """Execute a plan against DistTables.  Returns a DistTable, or
+    ``(DistTable, planner.ExecStats)`` with ``collect_stats=True``.
 
     ``env`` is a ``core.env.CylonEnv``; mode in {"bsp", "bsp_staged", "amt"}.
+    ``optimize=False`` runs the plan exactly as written (the unoptimized
+    baseline measured by ``benchmarks/bench_pipeline.py``).
     """
-    order = plan.topo()
-    names = sorted({n.params["name"] for n in order if n.op == "scan"})
-    ins = [tables[name] for name in names]
-
-    if mode == "bsp":
-        def prog(ctx, *local_tables):
-            tmap = dict(zip(names, local_tables))
-            values: Dict[int, Table] = {}
-            for node in order:
-                values[node.nid] = _eval_node(node, ctx.comm, values, tmap, "direct")
-            return values[plan.node.nid]
-        return env.run(prog, *ins, key=("bsp", plan.node.nid, env.communicator_name))
-
-    if mode in ("bsp_staged", "amt"):
-        shuffle_mode = "direct" if mode == "bsp_staged" else "allgather"
-        values: Dict[int, Any] = {}
-        for node in order:  # one driver dispatch per node
-            node_inputs = [values[i.nid] for i in node.inputs]
-
-            def prog(ctx, *local_ins, _node=node):
-                tmap = {}
-                vals = {i.nid: t for i, t in zip(_node.inputs, local_ins)}
-                if _node.op == "scan":
-                    tmap[_node.params["name"]] = local_ins[0]
-                    vals = {}
-                return _eval_node(_node, ctx.comm, vals, tmap, shuffle_mode)
-
-            if node.op == "scan":
-                node_inputs = [tables[node.params["name"]]]
-            out = env.run(prog, *node_inputs,
-                          key=(mode, node.nid, env.communicator_name))
-            jax.block_until_ready(out.row_counts)  # task-completion barrier
-            values[node.nid] = out
-        return values[plan.node.nid]
-
-    raise ValueError(f"unknown mode {mode!r}")
+    from ..planner import compile_plan, run_physical
+    pplan = compile_plan(plan, tables, optimize_plan=optimize)
+    return run_physical(pplan, env, tables, mode, collect_stats=collect_stats)

@@ -51,6 +51,22 @@ def _normalize(aggs: Mapping[str, Sequence[str]]):
     return physical, post
 
 
+def finalize_groupby(final: Table, keys: Sequence[str],
+                     post: Sequence[Tuple[str, str, str]]) -> Table:
+    """Post-processing (mean reconstruction) + column selection in user order."""
+    out_cols = {k: final.columns[k] for k in keys}
+    for out_name, kind, src in post:
+        if kind == "copy":
+            out_cols[out_name] = final.columns[src]
+        else:  # mean
+            s = final.columns[f"{src}_sum"]
+            c = final.columns[f"{src}_count"]
+            out_cols[out_name] = jnp.where(
+                c > 0, s / jnp.maximum(c, 1).astype(s.dtype),
+                jnp.zeros((), s.dtype))
+    return Table(out_cols, final.row_count)
+
+
 def groupby(
     table: Table,
     comm: Communicator,
@@ -78,14 +94,4 @@ def groupby(
         shuffled, stats = shuffle(table, comm, key_cols=list(keys), **shuffle_kw)
         final = groupby_local(shuffled, keys, physical)
 
-    # post-processing (means) + column selection in user order
-    out_cols = {k: final.columns[k] for k in keys}
-    for out_name, kind, src in post:
-        if kind == "copy":
-            out_cols[out_name] = final.columns[src]
-        else:  # mean
-            s = final.columns[f"{src}_sum"]
-            c = final.columns[f"{src}_count"]
-            out_cols[out_name] = jnp.where(
-                c > 0, s / jnp.maximum(c, 1).astype(s.dtype), jnp.zeros((), s.dtype))
-    return Table(out_cols, final.row_count), stats
+    return finalize_groupby(final, keys, post), stats

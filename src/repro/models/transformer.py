@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from .. import compat
 
 from .. import flags
 from .attention import (gqa_attention, gqa_decode, gqa_init, gqa_specs,
@@ -334,7 +335,7 @@ def _vp_gather(table: jax.Array, toks: jax.Array,
                                     tiled=True)
 
     from jax.sharding import PartitionSpec as P
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         in_specs=(P(rules.model, None), P(rules.batch, None)),
         out_specs=P(rules.batch, rules.model, None))(table, toks)

@@ -1,0 +1,45 @@
+"""Partitioning-aware query optimizer for the distributed dataframe layer.
+
+The paper wins by minimizing dispatches and communication boundaries; this
+subsystem makes those boundaries an optimization target:
+
+* ``logical``  — typed logical plan with per-node properties
+                 (partitioning / est_rows / live columns),
+* ``rules``    — rewrite rules: shuffle elision, join-side selection,
+                 predicate & projection pushdown, pre-aggregation,
+* ``physical`` — lowering to a stage DAG executed through ``CylonEnv.run``
+                 with a structural-fingerprint compile cache,
+* ``explain``  — EXPLAIN rendering of stages, properties, and fired rules.
+
+``core.plan.execute`` lowers every plan through here; use
+``compile_plan`` + ``run_physical`` directly for more control.
+"""
+
+from .logical import (COMM_OPS, LOCAL_OPS, LogicalNode, Partitioning,
+                      annotate, build_catalog, from_plan, topo)
+from .rules import optimize
+from .physical import (ExecStats, PhysicalPlan, eval_node, fingerprint,
+                       lower, run_physical, shuffle_allgather)
+from .explain import explain, render
+
+
+def compile_plan(plan, tables=None, optimize_plan: bool = True) -> PhysicalPlan:
+    """Builder tree (or LogicalNode) -> optimized, lowered PhysicalPlan."""
+    catalog = build_catalog(tables)
+    node = getattr(plan, "node", plan)
+    if isinstance(node, LogicalNode):
+        root = annotate(node, catalog or None)
+    else:
+        root = from_plan(node, catalog)
+    fired = []
+    if optimize_plan:
+        root, fired = optimize(root, catalog)
+    return lower(root, fired)
+
+
+__all__ = [
+    "COMM_OPS", "LOCAL_OPS", "ExecStats", "LogicalNode", "Partitioning",
+    "PhysicalPlan", "annotate", "build_catalog", "compile_plan", "eval_node",
+    "explain", "fingerprint", "from_plan", "lower", "optimize", "render",
+    "run_physical", "shuffle_allgather", "topo",
+]

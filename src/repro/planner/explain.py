@@ -1,0 +1,95 @@
+"""EXPLAIN: render a (logical or lowered) plan with stages, partitioning
+properties, row estimates, and the optimizer rules that fired.
+
+>>> from repro.core import Plan
+>>> from repro.planner import explain
+>>> print(explain(Plan.scan("t").shuffle(["k"]).groupby(["k"], {"v": ["sum"]}),
+...               {"t": (("k", "v"), 10_000)}))
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional
+
+from .logical import LogicalNode, build_catalog, from_plan
+from .physical import PhysicalPlan, lower
+from .rules import optimize
+
+
+def _label(n: LogicalNode) -> str:
+    p = n.params
+    if n.op == "scan":
+        return f"scan[{p['name']}]"
+    if n.op == "noop":
+        return f"noop[{p.get('note', '')}]"
+    if n.op == "project":
+        return f"project[{','.join(p['cols'])}]"
+    if n.op == "filter":
+        cols = p.get("cols")
+        return f"filter[{','.join(cols)}]" if cols else "filter[?]"
+    if n.op == "map_columns":
+        return f"map_columns[{','.join(p['cols'])}]"
+    if n.op == "add_scalar":
+        cols = p.get("cols")
+        return f"add_scalar[{','.join(cols) if cols else '*'}]"
+    if n.op == "shuffle":
+        return f"shuffle[{','.join(p['key_cols'])}]"
+    if n.op == "join":
+        notes = [s for s, f in (("left-elided", "elide_left"),
+                                ("right-elided", "elide_right")) if p.get(f)]
+        extra = f" ({', '.join(notes)})" if notes else ""
+        return f"join[on={p['on']}]{extra}"
+    if n.op == "groupby":
+        aggs = ";".join(f"{c}:{','.join(a)}" for c, a in sorted(p["aggs"].items()))
+        notes = []
+        if p.get("elide_shuffle"):
+            notes.append("shuffle-elided")
+        elif p.get("pre_aggregate"):
+            notes.append("pre-agg")
+        extra = f" ({', '.join(notes)})" if notes else ""
+        return f"groupby[{','.join(p['keys'])}; {aggs}]{extra}"
+    if n.op == "sort":
+        extra = " (shuffle-elided)" if p.get("elide_shuffle") else ""
+        return f"sort[{','.join(p['by'])}]{extra}"
+    return n.op
+
+
+def render(pplan: PhysicalPlan, mode: str = "bsp") -> str:
+    lines = [
+        f"== physical plan: {pplan.num_stages} stages, "
+        f"{pplan.num_shuffles} shuffles, mode={mode}, "
+        f"fingerprint={pplan.fingerprint[:12]} =="
+    ]
+    by_stage: Dict[int, list] = {}
+    for n in pplan.order:
+        by_stage.setdefault(pplan.stage_of[n.nid], []).append(n)
+    for s in sorted(by_stage):
+        lines.append(f"stage {s}:")
+        for n in by_stage[s]:
+            lines.append(
+                f"  {_label(n):44s} rows~{int(n.est_rows):>9d}  "
+                f"part={str(n.partitioning):12s} cols={','.join(n.schema)}")
+    if pplan.fired:
+        lines.append("rules fired:")
+        for f in pplan.fired:
+            lines.append(f"  - {f}")
+    else:
+        lines.append("rules fired: (none)")
+    return "\n".join(lines)
+
+
+def explain(plan: Any, tables: Optional[Mapping[str, Any]] = None,
+            optimize_plan: bool = True, mode: str = "bsp") -> str:
+    """Render EXPLAIN output for a ``core.plan.Plan`` (or raw builder node /
+    LogicalNode).  ``tables`` supplies scan schemas: DistTables,
+    ``(cols, rows)`` pairs, or plain column sequences."""
+    catalog = build_catalog(tables)
+    node = getattr(plan, "node", plan)
+    if isinstance(node, LogicalNode):
+        root, fired = node, []
+    else:
+        root = from_plan(node, catalog)
+        fired = []
+    if optimize_plan:
+        root, fired = optimize(root, catalog)
+    return render(lower(root, fired), mode)

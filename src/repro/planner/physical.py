@@ -1,0 +1,438 @@
+"""Lowering: logical DAG -> staged physical plan -> CylonEnv execution.
+
+A *stage* is a maximal set of operators executable in one BSP program
+without crossing a communication boundary (the paper's §III-B coalescing,
+made explicit).  Elided shuffles do not open a boundary, so optimization
+shrinks both the stage count (fewer dispatches in ``bsp_staged``) and the
+shuffle count (fewer collectives in every mode).
+
+The compile cache is keyed by a **structural fingerprint** of the plan
+(op/param/topology hash, independent of node identity), so two separately
+built but identical plans share one compiled program per env.
+
+Execution modes (same contract as the original ``core.plan.execute``):
+
+* ``bsp``        — entire plan in ONE ``env.run`` dispatch,
+* ``bsp_staged`` — one dispatch per stage (driver round-trip at every
+                   communication boundary),
+* ``amt``        — one dispatch per operator, shuffles implemented as
+                   allgather-then-select (the Dask/Ray object-store
+                   pattern, O(p·data)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..comm import Communicator
+from ..dataframe import ops_local
+from ..dataframe.groupby import _normalize, finalize_groupby
+from ..dataframe.groupby import groupby as df_groupby
+from ..dataframe.ops_local import hash_columns
+from ..dataframe.shuffle import ShuffleStats
+from ..dataframe.shuffle import shuffle as df_shuffle
+from ..dataframe.sort import _sample_splitters
+from ..dataframe.sort import sort as df_sort
+from ..dataframe.table import Table
+from .logical import LogicalNode, topo
+
+#: param keys that are operator semantics, not shuffle kwargs
+_SEMANTIC = {
+    "join": ("on", "out_capacity", "shuffle_out_capacity", "elide_left",
+             "elide_right", "side_selected"),
+    "groupby": ("keys", "aggs", "elide_shuffle", "pre_aggregate"),
+    "sort": ("by", "elide_shuffle"),
+    "shuffle": ("key_cols",),
+}
+
+
+# ---------------------------------------------------------------------- #
+# Structural fingerprint
+# ---------------------------------------------------------------------- #
+def _token(v: Any) -> str:
+    if callable(v):
+        code = getattr(v, "__code__", None)
+        if code is None:
+            return f"fn:{getattr(v, '__qualname__', repr(v))}"
+        # bytecode alone is not identity: two lambdas from the same source
+        # line differ only in captured values — hash defaults and closure
+        # cells too, or structurally different plans share a cache slot
+        cells = []
+        for c in (v.__closure__ or ()):
+            try:
+                cells.append(_token(c.cell_contents))
+            except ValueError:           # empty cell
+                cells.append("<empty>")
+        extras = (_token(v.__defaults__ or ())
+                  + _token(getattr(v, "__kwdefaults__", None) or {})
+                  + "|".join(cells))
+        h = hashlib.sha1(code.co_code + repr(code.co_consts).encode()
+                         + extras.encode())
+        return f"fn:{v.__module__}.{v.__qualname__}:{h.hexdigest()[:12]}"
+    if isinstance(v, dict):
+        return "{" + ",".join(f"{k}:{_token(v[k])}" for k in sorted(v)) + "}"
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(_token(x) for x in v) + "]"
+    if isinstance(v, (np.ndarray, jax.Array)):
+        a = np.asarray(v)  # repr truncates large arrays; hash raw bytes
+        return (f"arr:{a.dtype}:{a.shape}:"
+                f"{hashlib.sha1(a.tobytes()).hexdigest()[:12]}")
+    return repr(v)
+
+
+def fingerprint(root: LogicalNode) -> str:
+    """Structural hash: equal for identically-shaped plans regardless of
+    node identity / construction order (fixes nid-keyed cache misses)."""
+    idx: Dict[int, int] = {}
+    parts: List[str] = []
+    for n in topo(root):
+        idx[n.nid] = len(idx)
+        params = ",".join(f"{k}={_token(v)}" for k, v in sorted(n.params.items()))
+        parts.append(f"{n.op}({params})<-{[idx[i.nid] for i in n.inputs]}")
+    return hashlib.sha1("\n".join(parts).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------- #
+# Physical plan
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class PhysicalPlan:
+    root: LogicalNode
+    order: List[LogicalNode]              # full topological order
+    stage_of: Dict[int, int]              # nid -> stage index
+    num_stages: int
+    num_shuffles: int
+    fingerprint: str
+    fired: Tuple[str, ...] = ()           # optimizer rules that fired
+
+    @property
+    def scan_names(self) -> List[str]:
+        return sorted({n.params["name"] for n in self.order
+                       if n.op == "scan"})
+
+    def shuffle_labels(self) -> List[str]:
+        """Static labels for every shuffle executed, in topo order."""
+        labels: List[str] = []
+        for n in self.order:
+            p = n.params
+            if n.op == "shuffle":
+                labels.append(f"shuffle({','.join(p['key_cols'])})")
+            elif n.op == "join":
+                if not p.get("elide_left"):
+                    labels.append(f"join({p['on']}):left")
+                if not p.get("elide_right"):
+                    labels.append(f"join({p['on']}):right")
+            elif n.op == "groupby" and not p.get("elide_shuffle"):
+                labels.append(f"groupby({','.join(p['keys'])})")
+            elif n.op == "sort" and not p.get("elide_shuffle"):
+                labels.append(f"sort({','.join(p['by'])})")
+        return labels
+
+
+def lower(root: LogicalNode, fired: Sequence[str] = ()) -> PhysicalPlan:
+    order = topo(root)
+    stage_of: Dict[int, int] = {}
+    for n in order:
+        stage_of[n.nid] = max(
+            (stage_of[i.nid] + (1 if i.is_comm() else 0) for i in n.inputs),
+            default=0)
+    num_stages = max(stage_of.values(), default=0) + 1
+    num_shuffles = sum(n.shuffle_count() for n in order)
+    return PhysicalPlan(root, order, stage_of, num_stages, num_shuffles,
+                        fingerprint(root), tuple(fired))
+
+
+# ---------------------------------------------------------------------- #
+# Shuffle implementations (direct vs the AMT object-store baseline)
+# ---------------------------------------------------------------------- #
+def shuffle_allgather(table: Table, comm: Communicator,
+                      key_cols=None, dest=None, out_capacity=None, **_):
+    """Every rank receives ALL rows and keeps those hashed to it.
+
+    Models Dask partd / Ray object-store data sharing: data is published
+    globally rather than routed, costing O(p·rows) bandwidth per rank.
+    """
+    p = comm.size()
+    rank = comm.rank()
+    cap = table.capacity
+    out_cap = out_capacity or cap
+    valid = table.valid_mask()
+    if dest is None:
+        h = hash_columns(table, key_cols)
+        dest = (h % jnp.uint32(p)).astype(jnp.int32)
+    dest = jnp.where(valid, dest, p)
+
+    gathered_dest = comm.all_gather(dest).reshape(-1)            # (p*cap,)
+    keep = gathered_dest == rank
+    order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)[:out_cap]
+    new_count = jnp.minimum(jnp.sum(keep), out_cap).astype(jnp.int32)
+    cols = {}
+    for name, col in table.columns.items():
+        g = comm.all_gather(col).reshape((-1,) + col.shape[1:])
+        cols[name] = jnp.take(g, order, axis=0)
+    sent = jax.ops.segment_sum(jnp.ones((cap,), jnp.int32), dest,
+                               num_segments=p + 1)[:p]
+    stats = ShuffleStats(sent, sent, jnp.asarray(0, jnp.int32),
+                         jnp.maximum(jnp.sum(keep) - out_cap, 0))
+    return Table(cols, new_count).mask_padding(), stats
+
+
+def _row_bytes(table: Table) -> int:
+    return sum(int(v.dtype.itemsize) * math.prod(v.shape[1:])
+               for v in table.columns.values())
+
+
+# ---------------------------------------------------------------------- #
+# Node evaluation (runs inside shard_map; shared by all modes)
+# ---------------------------------------------------------------------- #
+def _shuffle_kw(node: LogicalNode) -> Dict[str, Any]:
+    keep = _SEMANTIC.get(node.op, ())
+    return {k: v for k, v in node.params.items()
+            if k not in keep and k not in ("elided", "note", "cols", "pred")}
+
+
+def eval_node(node: LogicalNode, comm: Communicator,
+              values: Dict[int, Table], tables: Dict[str, Table],
+              shuffle_mode: str,
+              stats_out: Optional[List[Tuple[str, jax.Array]]] = None
+              ) -> Table:
+    p = node.params
+    ins = [values[i.nid] for i in node.inputs]
+    shuffle_fn = df_shuffle if shuffle_mode == "direct" else shuffle_allgather
+
+    def run_shuffle(label: str, table: Table, **kw) -> Table:
+        out, st = shuffle_fn(table, comm, **kw)
+        if stats_out is not None:
+            rows = jnp.sum(st.sent_counts)
+            stats_out.append(
+                (label, jnp.stack([rows, rows * _row_bytes(table)])))
+        return out
+
+    if node.op == "scan":
+        return tables[p["name"]]
+    if node.op == "noop":
+        return ins[0]
+    if node.op == "project":
+        return ins[0].select(p["cols"])
+    if node.op == "filter":
+        return ops_local.filter_rows(ins[0], p["pred"])
+    if node.op == "map_columns":
+        return ops_local.map_columns(ins[0], p["fn"], p["cols"])
+    if node.op == "add_scalar":
+        return ops_local.add_scalar(ins[0], p["value"], p.get("cols"))
+
+    kw = _shuffle_kw(node)
+    if node.op == "shuffle":
+        out_cap = kw.pop("out_capacity", None)
+        return run_shuffle(f"shuffle({','.join(p['key_cols'])})", ins[0],
+                           key_cols=p["key_cols"], out_capacity=out_cap, **kw)
+
+    if node.op == "join":
+        on = p["on"]
+        l, r = ins
+        jkw = {k: v for k, v in kw.items() if k != "out_capacity"}
+        if "shuffle_out_capacity" in p:  # receive headroom for skewed keys
+            jkw["out_capacity"] = p["shuffle_out_capacity"]
+        if not p.get("elide_left"):
+            l = run_shuffle(f"join({on}):left", l, key_cols=[on], **jkw)
+        if not p.get("elide_right"):
+            r = run_shuffle(f"join({on}):right", r, key_cols=[on], **jkw)
+        return ops_local.join_local(l, r, on,
+                                    out_capacity=p.get("out_capacity"))
+
+    if node.op == "groupby":
+        keys, aggs = p["keys"], p["aggs"]
+        physical, post = _normalize(aggs)
+        if p.get("elide_shuffle"):
+            # input already co-partitioned on the keys: local-only groupby
+            final = ops_local.groupby_local(ins[0], keys, physical)
+            return finalize_groupby(final, keys, post)
+        if shuffle_mode == "direct":
+            pre = bool(p.get("pre_aggregate", False))
+            out, st = df_groupby(ins[0], comm, keys, aggs,
+                                 pre_aggregate=pre, **kw)
+            if stats_out is not None:
+                rows = jnp.sum(st.sent_counts)
+                if pre:
+                    # the wire carries keys + stage-1 partial-agg columns
+                    width = sum(ins[0].columns[k].dtype.itemsize for k in keys)
+                    for col, names in physical.items():
+                        width += sum(4 if a == "count"
+                                     else ins[0].columns[col].dtype.itemsize
+                                     for a in names)
+                else:
+                    width = _row_bytes(ins[0])
+                stats_out.append((f"groupby({','.join(keys)})",
+                                  jnp.stack([rows, rows * width])))
+            return out
+        # AMT path: ship raw rows (Dask-style task granularity, no pre-agg)
+        shuffled = run_shuffle(f"groupby({','.join(keys)})", ins[0],
+                               key_cols=list(keys),
+                               **{k: v for k, v in kw.items()
+                                  if k != "pre_aggregate"})
+        final = ops_local.groupby_local(shuffled, keys, physical)
+        return finalize_groupby(final, keys, post)
+
+    if node.op == "sort":
+        by = p["by"]
+        if p.get("elide_shuffle"):
+            return ops_local.sort_local(ins[0], by)
+        if shuffle_mode == "direct":
+            out, st = df_sort(ins[0], comm, by, **kw)
+            if stats_out is not None:
+                rows = jnp.sum(st.sent_counts)
+                stats_out.append((f"sort({','.join(by)})",
+                                  jnp.stack([rows, rows * _row_bytes(ins[0])])))
+            return out
+        key = ins[0].columns[by[0]]
+        splitters = _sample_splitters(key, ins[0].row_count, comm,
+                                      kw.pop("samples", 64))
+        dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+        shuffled = run_shuffle(f"sort({','.join(by)})", ins[0], dest=dest,
+                               **kw)
+        return ops_local.sort_local(shuffled, by)
+
+    raise ValueError(node.op)
+
+
+# ---------------------------------------------------------------------- #
+# Driver-side execution
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ExecStats:
+    """Driver-side observability for one plan execution."""
+
+    mode: str
+    num_stages: int
+    num_shuffles: int
+    dispatches: int
+    rows_shuffled: int
+    bytes_shuffled: int
+    shuffle_labels: List[str]
+    fired: Tuple[str, ...]
+
+
+def _sum_stats(collected) -> Tuple[int, int]:
+    """``collected``: list of (p, 2) arrays -> (total rows, total bytes)."""
+    rows = sum(int(np.asarray(a).reshape(-1, 2)[:, 0].sum())
+               for a in collected)
+    byts = sum(int(np.asarray(a).reshape(-1, 2)[:, 1].sum())
+               for a in collected)
+    return rows, byts
+
+
+def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
+                 mode: str = "bsp", collect_stats: bool = False):
+    """Execute a lowered plan against DistTables on a ``CylonEnv``.
+
+    Returns a DistTable, or ``(DistTable, ExecStats)`` with
+    ``collect_stats=True``.
+    """
+    names = pplan.scan_names
+    missing = [n for n in names if n not in tables]
+    if missing:
+        raise KeyError(f"plan scans missing from tables: {missing}")
+    root = pplan.root
+    order = pplan.order
+    fp = pplan.fingerprint
+    shuffle_mode = "allgather" if mode == "amt" else "direct"
+
+    def mk_stats(dispatches: int, collected) -> ExecStats:
+        rows, byts = _sum_stats(collected)
+        return ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
+                         dispatches, rows, byts, pplan.shuffle_labels(),
+                         pplan.fired)
+
+    if mode == "bsp":
+        def prog(ctx, *local_tables):
+            tmap = dict(zip(names, local_tables))
+            values: Dict[int, Table] = {}
+            stats: List[Tuple[str, jax.Array]] = []
+            for node in order:
+                values[node.nid] = eval_node(
+                    node, ctx.comm, values, tmap, "direct",
+                    stats if collect_stats else None)
+            out = values[root.nid]
+            if collect_stats:
+                return out, tuple(a for _, a in stats)
+            return out
+
+        res = env.run(prog, *[tables[n] for n in names],
+                      key=("bsp", fp, env.communicator_name, collect_stats))
+        if collect_stats:
+            out, collected = res
+            return out, mk_stats(1, collected)
+        return res
+
+    if mode in ("bsp_staged", "amt"):
+        values: Dict[int, Any] = {}
+        collected: List[Any] = []
+        dispatches = 0
+
+        if mode == "bsp_staged":
+            groups: Dict[int, List[LogicalNode]] = {}
+            for node in order:
+                groups.setdefault(pplan.stage_of[node.nid], []).append(node)
+            units = [groups[s] for s in sorted(groups)]
+        else:
+            units = [[node] for node in order]
+
+        for uidx, unit in enumerate(units):
+            unit_ids = {n.nid for n in unit}
+            ext: List[LogicalNode] = []
+            for n in unit:
+                for i in n.inputs:
+                    if i.nid not in unit_ids and i.nid not in {e.nid for e in ext}:
+                        ext.append(i)
+            scans = [n for n in unit if n.op == "scan"]
+            later = set()
+            for other in order:
+                if other.nid in unit_ids:
+                    continue
+                later.update(i.nid for i in other.inputs)
+            outs = [n for n in unit
+                    if n.nid == root.nid or n.nid in later]
+
+            def prog(ctx, *local_ins, _unit=unit, _ext=ext, _scans=scans,
+                     _outs=outs):
+                vals = {e.nid: t for e, t in zip(_ext, local_ins)}
+                tmap = dict(zip([s.params["name"] for s in _scans],
+                                local_ins[len(_ext):]))
+                stats: List[Tuple[str, jax.Array]] = []
+                for node in _unit:
+                    vals[node.nid] = eval_node(
+                        node, ctx.comm, vals, tmap, shuffle_mode,
+                        stats if collect_stats else None)
+                out = tuple(vals[n.nid] for n in _outs)
+                if collect_stats:
+                    return out, tuple(a for _, a in stats)
+                return out
+
+            args = [values[e.nid] for e in ext] + \
+                   [tables[s.params["name"]] for s in scans]
+            res = env.run(prog, *args,
+                          key=(mode, fp, uidx, env.communicator_name,
+                               collect_stats))
+            if collect_stats:
+                out_tuple, unit_stats = res
+                collected.extend(unit_stats)
+            else:
+                out_tuple = res
+            dispatches += 1
+            for n, val in zip(outs, out_tuple):
+                jax.block_until_ready(val.row_counts)  # completion barrier
+                values[n.nid] = val
+
+        result = values[root.nid]
+        if collect_stats:
+            return result, mk_stats(dispatches, collected)
+        return result
+
+    raise ValueError(f"unknown mode {mode!r}")

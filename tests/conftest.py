@@ -6,6 +6,11 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "multidevice: 8-device subprocess integration scenario")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

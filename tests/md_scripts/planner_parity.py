@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Planner runtime verification on 8 devices:
+
+1. Fig-9 pipeline: optimized bsp execution is BIT-IDENTICAL to unoptimized,
+   with fewer shuffles / rows / bytes on the wire (ShuffleStats-derived).
+2. shuffle(k) -> groupby(k): the elided shuffle halves rows shuffled.
+3. Randomized pipelines: optimized == unoptimized across all three
+   execution modes (sorted-column comparison, all DistTable results).
+"""
+
+import numpy as np
+
+from repro.core import CylonEnv, DistTable, Plan, execute
+
+rng = np.random.default_rng(0)
+N = 4000
+CAP = 1024
+ld = {"k": rng.integers(0, 500, N).astype(np.int32),
+      "v0": rng.random(N).astype(np.float32),
+      "junk": rng.random(N).astype(np.float32)}
+rd = {"k": rng.integers(0, 500, N).astype(np.int32),
+      "w": rng.random(N).astype(np.float32)}
+
+env = CylonEnv()
+p = env.parallelism
+assert p == 8
+lt = DistTable.from_numpy(ld, p, capacity=CAP)
+rt = DistTable.from_numpy(rd, p, capacity=CAP)
+TABLES = {"l": lt, "r": rt}
+
+# ample capacities: the unoptimized baseline re-shuffles already-partitioned
+# data, which lands every row in one self-destination bucket
+BIG = 16 * CAP
+
+# --- 1. Fig-9: bit-identical + strictly less communication --------------- #
+fig9 = (Plan.scan("l")
+        .join(Plan.scan("r"), on="k", out_capacity=BIG, bucket_capacity=2 * CAP)
+        .groupby(["k"], {"v0": ["sum", "mean"]}, bucket_capacity=BIG)
+        .sort(["k"])
+        .add_scalar(1.0, cols=["v0_sum"]))
+
+ref, rs = execute(fig9, env, TABLES, mode="bsp", optimize=False,
+                  collect_stats=True)
+opt, os_ = execute(fig9, env, TABLES, mode="bsp", optimize=True,
+                   collect_stats=True)
+a, b = ref.to_numpy(), opt.to_numpy()
+assert sorted(a) == sorted(b)
+for c in a:
+    assert np.array_equal(a[c], b[c]), c         # bit-identical
+assert os_.num_shuffles < rs.num_shuffles, (os_.num_shuffles, rs.num_shuffles)
+assert os_.num_stages < rs.num_stages
+assert os_.rows_shuffled < rs.rows_shuffled
+assert os_.bytes_shuffled < rs.bytes_shuffled
+print(f"fig9: shuffles {rs.num_shuffles}->{os_.num_shuffles}, "
+      f"stages {rs.num_stages}->{os_.num_stages}, "
+      f"rows {rs.rows_shuffled}->{os_.rows_shuffled}, "
+      f"bytes {rs.bytes_shuffled}->{os_.bytes_shuffled}")
+
+# --- 2. shuffle(k) -> groupby(k): one shuffle elided --------------------- #
+sg = Plan.scan("l").shuffle(["k"]).groupby(["k"], {"v0": ["sum"]},
+                                           bucket_capacity=8 * CAP)
+ref2, rs2 = execute(sg, env, TABLES, optimize=False, collect_stats=True)
+opt2, os2 = execute(sg, env, TABLES, optimize=True, collect_stats=True)
+assert (rs2.num_shuffles, os2.num_shuffles) == (2, 1)
+assert os2.rows_shuffled == N and rs2.rows_shuffled == 2 * N
+x, y = ref2.to_numpy(), opt2.to_numpy()
+for c in x:
+    assert np.array_equal(x[c], y[c]), c
+print(f"shuffle->groupby: rows shuffled {rs2.rows_shuffled}->"
+      f"{os2.rows_shuffled}")
+
+# --- 3. randomized pipelines: optimize on/off x all modes ---------------- #
+def random_plan(prng):
+    plan = Plan.scan("l")
+    n_ops = prng.integers(2, 6)
+    for _ in range(n_ops):
+        op = prng.choice(["filter", "add", "project", "shuffle", "groupby",
+                          "join", "sort"])
+        cols = None
+        if op == "filter":
+            thr = float(prng.random())
+            plan = plan.filter(lambda t, _th=thr: t.col("v0") > _th,
+                               cols=["v0"])
+        elif op == "add":
+            plan = plan.add_scalar(float(prng.random()), cols=["v0"])
+        elif op == "project":
+            pass  # projection is exercised via dead-column elimination
+        elif op == "shuffle":
+            plan = plan.shuffle(["k"], bucket_capacity=BIG)
+        elif op == "groupby":
+            plan = plan.groupby(["k"], {"v0": ["sum", "count"]},
+                                bucket_capacity=BIG)
+            # after groupby only k / v0_* remain; rebuild a v0 for later ops
+            plan = plan.map_columns(lambda v: v, ["v0_sum"])
+            plan = plan.project(["k", "v0_sum"])
+            plan = Plan(plan.node)
+            return plan  # keep pipelines simple after aggregation
+        elif op == "join":
+            plan = plan.join(Plan.scan("r"), on="k", out_capacity=BIG,
+                             bucket_capacity=2 * CAP)
+        elif op == "sort":
+            plan = plan.sort(["k"], bucket_capacity=BIG)
+    return plan
+
+
+n_checked = 0
+for trial in range(8):
+    prng = np.random.default_rng(100 + trial)
+    plan = random_plan(prng)
+    base = execute(plan, env, TABLES, mode="bsp", optimize=False).to_numpy()
+    for mode in ("bsp", "bsp_staged", "amt"):
+        got = execute(plan, env, TABLES, mode=mode, optimize=True).to_numpy()
+        assert sorted(got) == sorted(base), (trial, mode)
+        for c in base:
+            assert np.allclose(np.sort(base[c]), np.sort(got[c]),
+                               rtol=1e-4, atol=1e-5), (trial, mode, c)
+    n_checked += 1
+print(f"randomized parity OK ({n_checked} pipelines x 3 modes)")
+
+print("planner_parity OK")

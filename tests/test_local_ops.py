@@ -3,7 +3,10 @@
 import collections
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.dataframe import Table, groupby_local, join_local, join_overflow
 

@@ -46,6 +46,11 @@ def test_shuffle_props():
 
 
 @pytest.mark.multidevice
+def test_planner_parity():
+    _run("planner_parity.py")
+
+
+@pytest.mark.multidevice
 def test_sharded_train():
     _run("sharded_train.py", timeout=1800)
 

@@ -1,0 +1,363 @@
+"""Unit tests for the partitioning-aware query optimizer (repro.planner).
+
+Static tests (rules, lowering, EXPLAIN, fingerprints) run on 1 device;
+8-device runtime parity + ShuffleStats coverage lives in
+``tests/md_scripts/planner_parity.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.planner import (Partitioning, compile_plan, explain, fingerprint,
+                           from_plan, optimize)
+
+CAT = {"l": (("k", "v0", "junk"), 8000), "r": (("k", "w"), 8000)}
+
+
+def fig9_plan():
+    return (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .groupby(["k"], {"v0": ["sum"]}).sort(["k"])
+            .add_scalar(1.0, cols=["v0_sum"]))
+
+
+# ---------------------------------------------------------------------- #
+# Partitioning lattice
+# ---------------------------------------------------------------------- #
+def test_partitioning_lattice():
+    h = Partitioning.hash_(("k",))
+    assert h.matches_hash(("k",)) and not h.matches_hash(("k", "j"))
+    assert h.colocates(("k", "j"))          # subset-hash co-locates supersets
+    assert not Partitioning.hash_(("k", "j")).colocates(("k",))
+    r = Partitioning.range_("k")
+    assert r.colocates(("k", "j")) and r.matches_range("k")
+    assert not r.matches_hash(("k",))       # range never aligns with hash
+    assert Partitioning.none().colocates(("k",)) is False
+    assert h.restrict(("v",)).kind == "none"
+    assert h.restrict(("k", "v")) == h
+
+
+# ---------------------------------------------------------------------- #
+# Shuffle elision (the acceptance pipeline)
+# ---------------------------------------------------------------------- #
+def test_elides_shuffle_before_groupby():
+    plan = Plan.scan("l").shuffle(["k"]).groupby(["k"], {"v0": ["sum"]})
+    unopt = compile_plan(plan, CAT, optimize_plan=False)
+    opt = compile_plan(plan, CAT, optimize_plan=True)
+    assert unopt.num_shuffles == 2
+    assert opt.num_shuffles == 1            # groupby's shuffle elided
+    assert any("shuffle-elision" in f for f in opt.fired)
+
+
+def test_explicit_redundant_shuffle_removed():
+    plan = Plan.scan("l").shuffle(["k"]).shuffle(["k"]).groupby(
+        ["k"], {"v0": ["sum"]})
+    opt = compile_plan(plan, CAT)
+    assert opt.num_shuffles == 1            # second shuffle + groupby elided
+
+
+def test_join_chain_elides_one_side():
+    chain = (Plan.scan("l").join(Plan.scan("r"), on="k")
+             .join(Plan.scan("r"), on="k"))
+    unopt = compile_plan(chain, CAT, optimize_plan=False)
+    opt = compile_plan(chain, CAT)
+    assert unopt.num_shuffles == 4
+    assert opt.num_shuffles == 3            # second join's left side elided
+    assert any("join-side-selection" in f for f in opt.fired)
+
+
+def test_sort_after_sort_elided():
+    plan = Plan.scan("l").sort(["k"]).sort(["k", "v0"])
+    opt = compile_plan(plan, CAT)
+    assert opt.num_shuffles == 1            # range(k) satisfies sort by k,v0
+
+
+def test_out_capacity_blocks_elision():
+    # changing the table capacity is observable; elision must not fire
+    plan = Plan.scan("l").shuffle(["k"]).groupby(
+        ["k"], {"v0": ["sum"]}, out_capacity=128)
+    opt = compile_plan(plan, CAT)
+    assert opt.num_shuffles == 2
+
+
+def test_fig9_stage_and_shuffle_counts():
+    plan = fig9_plan()
+    unopt = compile_plan(plan, CAT, optimize_plan=False)
+    opt = compile_plan(plan, CAT)
+    assert (unopt.num_stages, unopt.num_shuffles) == (4, 4)
+    assert (opt.num_stages, opt.num_shuffles) == (3, 3)
+
+
+# ---------------------------------------------------------------------- #
+# Projection / predicate / pre-agg pushdown
+# ---------------------------------------------------------------------- #
+def test_projection_pushdown_drops_dead_columns():
+    opt = compile_plan(fig9_plan(), CAT)
+    assert any("projection-pushdown: drop [junk] before join" in f
+               for f in opt.fired)
+    # the left scan feeds a projection that keeps only the live columns
+    scan_l = next(n for n in opt.order
+                  if n.op == "scan" and n.params["name"] == "l")
+    proj = next(n for n in opt.order if scan_l in n.inputs)
+    assert proj.op == "project" and proj.params["cols"] == ("k", "v0")
+
+
+def test_projection_preserves_join_suffix():
+    # right side's v0 collides with left's; dropping left v0 would rename
+    # the required v0_r, so the optimizer must keep left v0 alive
+    cat = {"l": (("k", "v0"), 100), "r": (("k", "v0"), 100)}
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .project(["k", "v0_r"]))
+    opt = compile_plan(plan, cat)
+    assert opt.root.schema == ("k", "v0_r")
+    join = next(n for n in opt.order if n.op == "join")
+    assert "v0" in join.inputs[0].schema
+
+
+def test_predicate_pushdown_below_shuffle():
+    plan = (Plan.scan("l").shuffle(["k"])
+            .filter(lambda t: t.col("v0") > 0, cols=["v0"]))
+    opt = compile_plan(plan, CAT)
+    order_ops = [n.op for n in opt.order]
+    assert order_ops.index("filter") < order_ops.index("shuffle")
+    assert any("predicate-pushdown" in f for f in opt.fired)
+
+
+def test_opaque_predicate_not_pushed_into_join():
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .filter(lambda t: t.col("v0") > 0))       # no cols declared
+    opt = compile_plan(plan, CAT)
+    order_ops = [n.op for n in opt.order]
+    assert order_ops.index("filter") > order_ops.index("join")
+
+
+def test_declared_predicate_pushed_into_join_side():
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .filter(lambda t: t.col("w") > 0, cols=["w"]))
+    opt = compile_plan(plan, CAT)
+    join = next(n for n in opt.order if n.op == "join")
+    # the filter must now sit under the join's right input subtree
+    right_ops = set()
+
+    def walk(n):
+        right_ops.add(n.op)
+        for i in n.inputs:
+            walk(i)
+    walk(join.inputs[1])
+    assert "filter" in right_ops
+
+
+def test_predicate_not_pushed_below_capacity_or_dest_shuffle():
+    # out_capacity makes the overflow cut observable; dest is row-aligned
+    plan = (Plan.scan("l").shuffle(["k"], out_capacity=16)
+            .filter(lambda t: t.col("v0") > 0, cols=["v0"]))
+    opt = compile_plan(plan, CAT)
+    order_ops = [n.op for n in opt.order]
+    assert order_ops.index("filter") > order_ops.index("shuffle")
+    plan2 = (Plan.scan("l").shuffle(["k"], dest=np.zeros(8, np.int32))
+             .filter(lambda t: t.col("v0") > 0, cols=["v0"]))
+    opt2 = compile_plan(plan2, CAT)
+    order_ops2 = [n.op for n in opt2.order]
+    assert order_ops2.index("filter") > order_ops2.index("shuffle")
+
+
+def test_dest_shuffle_has_no_hash_property():
+    # dest-routed rows are not hash-placed; groupby must keep its shuffle
+    plan = (Plan.scan("l").shuffle(["k"], dest=np.zeros(8, np.int32))
+            .groupby(["k"], {"v0": ["sum"]}))
+    opt = compile_plan(plan, CAT)
+    assert opt.num_shuffles == 2
+    assert not any("shuffle-elision" in f for f in opt.fired)
+
+
+def test_fingerprint_distinguishes_large_captured_arrays():
+    base = np.zeros(5000, np.float32)
+    other = base.copy()
+    other[2500] = 1.0
+
+    def mk(arr):
+        return Plan.scan("l").filter(
+            lambda t, _a=arr: t.col("v0") > _a[0], cols=["v0"]).shuffle(["k"])
+    fa = fingerprint(from_plan(mk(base).node, dict(CAT)))
+    fb = fingerprint(from_plan(mk(other).node, dict(CAT)))
+    assert fa != fb
+
+
+def test_preaggregation_fires_for_algebraic_aggs():
+    plan = Plan.scan("l").groupby(["k"], {"v0": ["sum", "mean"]})
+    opt = compile_plan(plan, CAT)
+    assert any("pre-aggregation" in f for f in opt.fired)
+    gb = next(n for n in opt.order if n.op == "groupby")
+    assert gb.params["pre_aggregate"] is True
+
+
+def test_user_preagg_choice_respected():
+    plan = Plan.scan("l").groupby(["k"], {"v0": ["sum"]}, pre_aggregate=False)
+    opt = compile_plan(plan, CAT)
+    gb = next(n for n in opt.order if n.op == "groupby")
+    assert gb.params["pre_aggregate"] is False
+    assert not any("pre-aggregation" in f for f in opt.fired)
+
+
+# ---------------------------------------------------------------------- #
+# Structural fingerprint (compile-cache key)
+# ---------------------------------------------------------------------- #
+def test_fingerprint_is_structural_not_identity():
+    a = from_plan(fig9_plan().node, dict(CAT))
+    b = from_plan(fig9_plan().node, dict(CAT))
+    assert fingerprint(a) == fingerprint(b)
+
+
+def test_fingerprint_distinguishes_plans():
+    base = Plan.scan("l").groupby(["k"], {"v0": ["sum"]})
+    other = Plan.scan("l").groupby(["k"], {"v0": ["max"]})
+    fa = fingerprint(from_plan(base.node, dict(CAT)))
+    fb = fingerprint(from_plan(other.node, dict(CAT)))
+    assert fa != fb
+
+
+def test_fingerprint_distinguishes_captured_values():
+    # same bytecode, different captured threshold -> different plans
+    def mk(th):
+        return Plan.scan("l").filter(lambda t, _th=th: t.col("v0") > _th,
+                                     cols=["v0"]).shuffle(["k"])
+    fa = fingerprint(from_plan(mk(0.1).node, dict(CAT)))
+    fb = fingerprint(from_plan(mk(0.9).node, dict(CAT)))
+    assert fa != fb
+
+
+def test_execute_distinguishes_captured_values(rng):
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 10, 64).astype(np.int32),
+            "v0": rng.random(64).astype(np.float32)}
+    t = DistTable.from_numpy(data, env.parallelism)
+
+    def mk(th):
+        return Plan.scan("l").filter(lambda tb, _th=th: tb.col("v0") > _th,
+                                     cols=["v0"])
+    n1 = len(execute(mk(0.1), env, {"l": t}).to_numpy()["k"])
+    n2 = len(execute(mk(0.9), env, {"l": t}).to_numpy()["k"])
+    assert n1 == (data["v0"] > 0.1).sum()
+    assert n2 == (data["v0"] > 0.9).sum()
+
+
+def test_missing_scan_schema_raises_helpfully():
+    plan = Plan.scan("nope").sort(["k"])
+    with pytest.raises(KeyError, match="has no schema"):
+        compile_plan(plan, CAT)
+    with pytest.raises(KeyError, match="has no schema"):
+        explain(plan)          # no tables at all
+
+
+def test_fingerprint_hashes_callables_by_code():
+    def pred(t):
+        return t.col("v0") > 0
+    a = Plan.scan("l").filter(pred, cols=["v0"]).shuffle(["k"])
+    b = Plan.scan("l").filter(pred, cols=["v0"]).shuffle(["k"])
+    fa = fingerprint(from_plan(a.node, dict(CAT)))
+    fb = fingerprint(from_plan(b.node, dict(CAT)))
+    assert fa == fb
+
+
+def test_execute_reuses_cache_for_identical_plans(rng):
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 10, 64).astype(np.int32),
+            "v0": rng.random(64).astype(np.float32)}
+    t = DistTable.from_numpy(data, env.parallelism)
+
+    def mk():
+        return Plan.scan("l").shuffle(["k"]).groupby(["k"], {"v0": ["sum"]})
+
+    execute(mk(), env, {"l": t})
+    n0 = len(env._cache)
+    out = execute(mk(), env, {"l": t})    # fresh builder objects, same shape
+    assert len(env._cache) == n0
+    uk = np.unique(data["k"])
+    np.testing.assert_array_equal(np.sort(out.to_numpy()["k"]), uk)
+
+
+# ---------------------------------------------------------------------- #
+# Execution (1 device): optimized == unoptimized, stats plumbing
+# ---------------------------------------------------------------------- #
+def test_optimized_matches_unoptimized_1dev(rng):
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 16, 128).astype(np.int32),
+            "v0": rng.random(128).astype(np.float32),
+            "junk": rng.random(128).astype(np.float32)}
+    rdata = {"k": rng.integers(0, 16, 128).astype(np.int32),
+             "w": rng.random(128).astype(np.float32)}
+    lt = DistTable.from_numpy(data, env.parallelism)
+    rt = DistTable.from_numpy(rdata, env.parallelism)
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k", out_capacity=4096)
+            .groupby(["k"], {"v0": ["sum"]}).sort(["k"]))
+    ref = execute(plan, env, {"l": lt, "r": rt}, optimize=False).to_numpy()
+    opt = execute(plan, env, {"l": lt, "r": rt}, optimize=True).to_numpy()
+    for c in ref:
+        np.testing.assert_array_equal(ref[c], opt[c])
+
+
+def test_collect_stats(rng):
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 16, 64).astype(np.int32),
+            "v0": rng.random(64).astype(np.float32)}
+    t = DistTable.from_numpy(data, env.parallelism)
+    plan = Plan.scan("l").shuffle(["k"]).groupby(["k"], {"v0": ["sum"]})
+    out, stats = execute(plan, env, {"l": t}, collect_stats=True)
+    assert stats.num_shuffles == 1
+    assert stats.shuffle_labels == ["shuffle(k)"]
+    assert stats.rows_shuffled == 64
+    assert stats.bytes_shuffled == 64 * 8   # two 4-byte columns
+    assert stats.dispatches == 1
+
+
+# ---------------------------------------------------------------------- #
+# EXPLAIN golden snapshots
+# ---------------------------------------------------------------------- #
+GOLDEN_FIG9_OPT = """\
+== physical plan: 3 stages, 3 shuffles, mode=bsp, fingerprint=3186d8a6b80e ==
+stage 0:
+  scan[l]                                      rows~     8000  part=none         cols=junk,k,v0
+  project[k,v0]                                rows~     8000  part=none         cols=k,v0
+  scan[r]                                      rows~     8000  part=none         cols=k,w
+  project[k]                                   rows~     8000  part=none         cols=k
+  join[on=k]                                   rows~     8000  part=hash(k)      cols=k,v0
+stage 1:
+  groupby[k; v0:sum] (shuffle-elided)          rows~     7200  part=hash(k)      cols=k,v0_sum
+  sort[k]                                      rows~     7200  part=range(k)     cols=k,v0_sum
+stage 2:
+  add_scalar[v0_sum]                           rows~     7200  part=range(k)     cols=k,v0_sum
+rules fired:
+  - shuffle-elision: groupby(k) runs local-only — input already hash(k)
+  - projection-pushdown: drop [junk] before join
+  - projection-pushdown: drop [w] before join
+  - projection-pushdown: drop [junk,w] before groupby"""
+
+GOLDEN_FIG9_UNOPT = """\
+== physical plan: 4 stages, 4 shuffles, mode=bsp, fingerprint=37858a051ca8 ==
+stage 0:
+  scan[l]                                      rows~     8000  part=none         cols=junk,k,v0
+  scan[r]                                      rows~     8000  part=none         cols=k,w
+  join[on=k]                                   rows~     8000  part=hash(k)      cols=junk,k,v0,w
+stage 1:
+  groupby[k; v0:sum]                           rows~     7200  part=hash(k)      cols=k,v0_sum
+stage 2:
+  sort[k]                                      rows~     7200  part=range(k)     cols=k,v0_sum
+stage 3:
+  add_scalar[v0_sum]                           rows~     7200  part=range(k)     cols=k,v0_sum
+rules fired: (none)"""
+
+
+def test_explain_golden_fig9_optimized():
+    assert fig9_plan().explain(CAT) == GOLDEN_FIG9_OPT
+
+
+def test_explain_golden_fig9_unoptimized():
+    assert fig9_plan().explain(CAT, optimize=False) == GOLDEN_FIG9_UNOPT
+
+
+def test_explain_marks_elided_join_side():
+    chain = (Plan.scan("l").join(Plan.scan("r"), on="k")
+             .join(Plan.scan("r"), on="k"))
+    text = chain.explain(CAT)
+    assert "join[on=k] (left-elided)" in text
+    assert "join-side-selection" in text

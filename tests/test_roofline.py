@@ -1,6 +1,7 @@
 """Roofline machinery unit tests: HLO parsing + term math (no big compiles)."""
 
 import jax
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,8 +32,8 @@ def test_wire_model():
 def test_parse_collectives_on_real_hlo():
     """Compile a tiny psum program on 1 device and parse its HLO."""
     mesh = jax.make_mesh((1,), ("x",))
-    with jax.set_mesh(mesh):
-        f = jax.jit(jax.shard_map(
+    with compat.set_mesh(mesh):
+        f = jax.jit(compat.shard_map(
             lambda x: jax.lax.psum(x, "x"),
             in_specs=jax.sharding.PartitionSpec("x"),
             out_specs=jax.sharding.PartitionSpec()))
