@@ -31,11 +31,19 @@ def run() -> None:
     record("kernels", "segmented_sum_ref", t_r)
 
     dest = jnp.asarray(rng.integers(0, 64, 8192).astype(np.int32))
-    t_k = time_fn(lambda: radix_partition(dest, 64), iters=3)
-    t_r = time_fn(lambda: radix_partition_ref(dest, 64), iters=3)
-    ok = all(bool(jnp.array_equal(a, b)) for a, b in
-             zip(radix_partition(dest, 64), radix_partition_ref(dest, 64)))
-    record("kernels", "radix_partition_interp", t_k, exact=ok)
+    t_p = time_fn(jax.jit(lambda d: radix_partition(d, 64, impl="pallas")),
+                  dest, iters=3)
+    t_x = time_fn(jax.jit(lambda d: radix_partition(d, 64, impl="xla")),
+                  dest, iters=3)
+    t_r = time_fn(jax.jit(lambda d: radix_partition_ref(d, 64)),
+                  dest, iters=3)
+    want = radix_partition_ref(dest, 64)
+    ok_p = all(bool(jnp.array_equal(a, b)) for a, b in
+               zip(radix_partition(dest, 64, impl="pallas"), want))
+    ok_x = all(bool(jnp.array_equal(a, b)) for a, b in
+               zip(radix_partition(dest, 64, impl="xla"), want))
+    record("kernels", "radix_partition_interp", t_p, exact=ok_p)
+    record("kernels", "radix_partition_xla", t_x, exact=ok_x)
     record("kernels", "radix_partition_ref", t_r)
 
     q = jnp.asarray(rng.standard_normal((1, 4, 512, 64)), jnp.float32)

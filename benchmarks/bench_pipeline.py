@@ -70,10 +70,37 @@ def run(global_rows: int = 100_000) -> None:
                        mode=mode, parallelism=p, optimized=opt,
                        stages=pplan.num_stages, shuffles=pplan.num_shuffles,
                        rows_shuffled=stats.rows_shuffled,
-                       bytes_shuffled=stats.bytes_shuffled)
+                       bytes_shuffled=stats.bytes_shuffled,
+                       shuffle_impl=stats.shuffle_impl,
+                       a2a_chunks=stats.a2a_chunks)
         record("pipeline(Fig9)", f"speedup_bsp_over_amt_p{p}",
                times["amt_unopt"] / times["bsp_unopt"], parallelism=p,
                note="ratio not seconds")
         record("pipeline(Fig9)", f"speedup_optimizer_bsp_p{p}",
                times["bsp_unopt"] / times["bsp_opt"], parallelism=p,
+               note="ratio not seconds")
+
+        # --- shuffle-implementation matrix: radix-vs-sorted bucketize × ---#
+        # --- chunked-vs-monolithic all-to-all (unoptimized plan: 4 -------#
+        # --- shuffles, so the shuffle path dominates the delta) ----------#
+        # NOTE (radix, c1) equals the bsp_unopt cell above, but is re-timed
+        # anyway: the speedup ratios below are only meaningful between
+        # back-to-back measurements — reusing a number taken minutes earlier
+        # under different machine load poisons the comparison.
+        sweep = {}
+        for impl in ("sorted", "radix"):
+            for chunks in (1, 4):
+                def do(pp=pplans[False], i=impl, c=chunks):
+                    return run_physical(pp, env, tables, mode="bsp",
+                                        shuffle_impl=i,
+                                        a2a_chunks=c).row_counts
+                sweep[(impl, chunks)] = time_fn(do, iters=3)
+                record("pipeline(Fig9)", f"bsp_unopt_{impl}_c{chunks}_p{p}",
+                       sweep[(impl, chunks)], mode="bsp", parallelism=p,
+                       optimized=False, shuffle_impl=impl, a2a_chunks=chunks)
+        record("pipeline(Fig9)", f"speedup_radix_over_sorted_p{p}",
+               sweep[("sorted", 1)] / sweep[("radix", 1)], parallelism=p,
+               note="ratio not seconds")
+        record("pipeline(Fig9)", f"speedup_radix_chunked4_p{p}",
+               sweep[("radix", 1)] / sweep[("radix", 4)], parallelism=p,
                note="ratio not seconds")

@@ -1,0 +1,49 @@
+"""Shuffle-implementation microbench: sort-free radix scatter vs the
+two-argsort baseline, and chunked vs monolithic all-to-all, on the shuffle
+alone (no surrounding operators).
+
+This isolates the PR-2 hot-path claim from pipeline noise: the sorted
+implementation pays two O(n log n) argsorts per shuffle (send-side
+bucketize + receive-side compaction); the radix path replaces both with
+O(n) scatters driven by ``kernels.radix_partition``.  The win grows with
+rows per rank (argsort's log factor + the extra gather pass).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import CylonEnv, DistTable
+from repro.dataframe import shuffle
+
+from .common import make_table_data, record, time_fn
+
+
+def run(rows_per_rank: int = 16384) -> None:
+    n_dev = len(jax.devices())
+    p = min(8, n_dev)
+    env = CylonEnv(jax.devices()[:p])
+    # sweep three sizes around the requested scale (min keeps smoke tiny)
+    for cap in sorted({max(256, rows_per_rank // 16), rows_per_rank // 4,
+                       rows_per_rank}):
+        rows = cap * p // 2   # half-full partitions
+        data = make_table_data(rows, value_cols=2)
+        dt = DistTable.from_numpy(data, p, capacity=cap)
+
+        times = {}
+        for impl in ("sorted", "radix"):
+            for chunks in (1, 4):
+                def do(i=impl, c=chunks):
+                    def prog(ctx, t):
+                        out, _ = shuffle(t, ctx.comm, key_cols=["k"],
+                                         impl=i, a2a_chunks=c)
+                        return out
+                    return env.run(prog, dt, key=("bench", i, c, cap)).row_counts
+                times[(impl, chunks)] = time_fn(do, iters=5)
+                record("shuffle_impl", f"{impl}_c{chunks}_cap{cap}_p{p}",
+                       times[(impl, chunks)], parallelism=p, capacity=cap,
+                       rows=rows, shuffle_impl=impl, a2a_chunks=chunks)
+        record("shuffle_impl", f"speedup_radix_over_sorted_cap{cap}_p{p}",
+               times[("sorted", 1)] / times[("radix", 1)], parallelism=p,
+               capacity=cap, note="ratio not seconds")

@@ -52,6 +52,29 @@ def make_table_data(rows: int, cardinality: float = 0.9, seed: int = 0,
     return data
 
 
+def dump_json(path: str, meta: Optional[Dict] = None) -> str:
+    """Write RESULTS (plus run metadata) as a ``BENCH_*.json`` artifact.
+
+    CI uploads these so the perf trajectory accumulates across PRs; the
+    ``meta`` block records enough context (backend, device count, scale)
+    to compare runs.
+    """
+    import json
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "devices": len(jax.devices()),
+            "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            **(meta or {}),
+        },
+        "results": RESULTS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return path
+
+
 def dump_csv(path: Optional[str] = None) -> str:
     keys = ["bench", "case", "seconds"]
     extra_keys = sorted({k for r in RESULTS for k in r} - set(keys))

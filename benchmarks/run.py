@@ -13,6 +13,7 @@ Modules (paper artifact -> bench):
   §V-C serial performance               -> bench_local_ops
   kernels (interpret vs oracle)         -> bench_kernels
   beyond-paper MoE-dispatch-as-shuffle  -> bench_moe_shuffle
+  sort-free vs sorted shuffle (PR 2)    -> bench_shuffle_impl
 
 The 8-device XLA_FLAGS above is set before jax initializes (scaling
 benches need parallelism); the dry-run (512 devices) is a separate entry
@@ -32,12 +33,14 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny row counts (seconds; CI sanity check only)")
     ap.add_argument("--csv", default="bench_results.csv")
+    ap.add_argument("--json", default=None,
+                    help="JSON artifact path (default BENCH_<scale>.json)")
     args = ap.parse_args()
 
     from . import (bench_communicators, bench_join_breakdown, bench_kernels,
                    bench_local_ops, bench_moe_shuffle, bench_pipeline,
-                   bench_strong_scaling)
-    from .common import RESULTS, dump_csv
+                   bench_shuffle_impl, bench_strong_scaling)
+    from .common import RESULTS, dump_csv, dump_json
 
     scale = 50 if args.smoke else 4 if args.quick else 1
     suites = {
@@ -46,6 +49,9 @@ def main() -> None:
         "join_breakdown": lambda: bench_join_breakdown.run(50_000 // scale),
         "strong_scaling": lambda: bench_strong_scaling.run(200_000 // scale),
         "pipeline": lambda: bench_pipeline.run(100_000 // scale),
+        # floor: below ~4k rows/rank the dispatch overhead buries the delta
+        "shuffle_impl": lambda: bench_shuffle_impl.run(
+            max(4096, 65_536 // scale)),
         "kernels": bench_kernels.run if not args.quick else bench_kernels.run,
         "moe_shuffle": bench_moe_shuffle.run,
     }
@@ -58,6 +64,10 @@ def main() -> None:
     print(f"\n{len(RESULTS)} results in {time.time() - t0:.1f}s")
     dump_csv(args.csv)
     print(f"csv -> {args.csv}")
+    scale_tag = "smoke" if args.smoke else "quick" if args.quick else "full"
+    json_path = args.json or f"BENCH_{scale_tag}.json"
+    dump_json(json_path, meta={"scale": scale_tag, "only": args.only})
+    print(f"json -> {json_path}")
 
 
 if __name__ == "__main__":

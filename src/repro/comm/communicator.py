@@ -75,6 +75,39 @@ class Communicator(abc.ABC):
         """x: (p, m, ...) block-major -> (m, ...): sum over ranks of block[rank]."""
 
     # Non-abstract conveniences -----------------------------------------#
+    def all_to_all_chunked(self, x: jax.Array, chunks: int = 1) -> jax.Array:
+        """All-to-all pipelined as ``chunks`` smaller collectives.
+
+        ``x``: (p, m, ...) block-major; the capacity axis (axis 1) is split
+        into ``chunks`` slices and one ``all_to_all`` is issued per slice
+        (the AllToAllv chunking knob from tuned MPI: smaller in-flight
+        messages, and independent collectives the scheduler may overlap
+        with each other and with compute).  ``m`` is padded up to a
+        multiple of ``chunks`` and the pad sliced back off.  Subclasses
+        may override with a schedule-aware pipeline (see ``ring``).
+        """
+        x, m, csz = self._chunk_split(x, chunks)
+        if csz is None:
+            return self.all_to_all(x)
+        outs = [self.all_to_all(
+            jax.lax.slice_in_dim(x, c * csz, (c + 1) * csz, axis=1))
+            for c in range(chunks)]
+        return jnp.concatenate(outs, axis=1)[:, :m]
+
+    def _chunk_split(self, x: jax.Array, chunks: int):
+        """Pad axis 1 to a multiple of ``chunks``; (x, orig_m, chunk_size).
+
+        ``chunk_size`` is None when chunking degenerates to one collective.
+        """
+        if chunks <= 1:
+            return x, x.shape[1], None
+        m = x.shape[1]
+        mp = -(-m // chunks) * chunks
+        if mp != m:
+            pad = jnp.zeros((x.shape[0], mp - m) + x.shape[2:], x.dtype)
+            x = jnp.concatenate([x, pad], axis=1)
+        return x, m, mp // chunks
+
     def broadcast(self, x: jax.Array, root: int = 0) -> jax.Array:
         """Broadcast rank ``root``'s value to every rank."""
         sel = jnp.where(self.rank() == root, 1, 0).astype(x.dtype)

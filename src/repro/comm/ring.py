@@ -95,3 +95,29 @@ class RingCommunicator(Communicator):
         stacked = jnp.stack(rel)
         idx = (r - jnp.arange(p)) % p  # out[j] = rel[(r-j)%p]
         return jnp.take(stacked, idx, axis=0)
+
+    # ------------------------------------------------------------------ #
+    def all_to_all_chunked(self, x: jax.Array, chunks: int = 1) -> jax.Array:
+        # Step-major double-buffered pipeline: instead of running chunk c's
+        # full (p-1)-step exchange before starting chunk c+1 (the base-class
+        # chunk-major loop), issue step k for EVERY chunk back-to-back.
+        # Consecutive ppermutes then carry independent buffers, so while one
+        # chunk's exchange is on the wire the next chunk's send buffer is
+        # being sliced/packed — the classic comm/compute double-buffer.
+        p = self.size()
+        r = self.rank()
+        x, m, csz = self._chunk_split(x, chunks)
+        if csz is None or p == 1:
+            return self.all_to_all(x[:, :m])
+        xs = [jax.lax.slice_in_dim(x, c * csz, (c + 1) * csz, axis=1)
+              for c in range(chunks)]
+        # rel[c][k] = chunk-c block received from rank (r-k)%p
+        rel = [[_dyn_block(xc, r)] for xc in xs]
+        for k in range(1, p):
+            perm = _shift_perm(p, k)
+            for c in range(chunks):
+                send = _dyn_block(xs[c], (r + k) % p)
+                rel[c].append(self.ppermute(send, perm))
+        idx = (r - jnp.arange(p)) % p
+        outs = [jnp.take(jnp.stack(rc), idx, axis=0) for rc in rel]
+        return jnp.concatenate(outs, axis=1)[:, :m]

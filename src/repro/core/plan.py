@@ -118,20 +118,28 @@ class Plan:
         return 1 + sum(1 for n in self.topo() if n.op in Node.COMM_OPS)
 
     def explain(self, tables: Optional[Mapping[str, Any]] = None,
-                optimize: bool = True, mode: str = "bsp") -> str:
+                optimize: bool = True, mode: str = "bsp",
+                shuffle_impl: str = "radix", a2a_chunks: int = 1) -> str:
         from ..planner import explain as planner_explain
-        return planner_explain(self, tables, optimize_plan=optimize, mode=mode)
+        return planner_explain(self, tables, optimize_plan=optimize, mode=mode,
+                               shuffle_impl=shuffle_impl,
+                               a2a_chunks=a2a_chunks)
 
 
 def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
-            optimize: bool = True, collect_stats: bool = False):
+            optimize: bool = True, collect_stats: bool = False,
+            shuffle_impl: str = "radix", a2a_chunks: int = 1):
     """Execute a plan against DistTables.  Returns a DistTable, or
     ``(DistTable, planner.ExecStats)`` with ``collect_stats=True``.
 
     ``env`` is a ``core.env.CylonEnv``; mode in {"bsp", "bsp_staged", "amt"}.
     ``optimize=False`` runs the plan exactly as written (the unoptimized
     baseline measured by ``benchmarks/bench_pipeline.py``).
+    ``shuffle_impl`` ("radix" sort-free | "sorted" baseline) and
+    ``a2a_chunks`` (all-to-all pipeline depth) are the plan-wide shuffle
+    defaults; per-node params override (see ``docs/shuffle.md``).
     """
     from ..planner import compile_plan, run_physical
     pplan = compile_plan(plan, tables, optimize_plan=optimize)
-    return run_physical(pplan, env, tables, mode, collect_stats=collect_stats)
+    return run_physical(pplan, env, tables, mode, collect_stats=collect_stats,
+                        shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)

@@ -6,13 +6,33 @@ static-shape.  The adaptation (DESIGN.md §2) is the MoE-capacity idiom:
   1. hash keys -> destination rank (or take explicit destinations),
   2. counts exchange (tiny all_to_all) for observability + receive counts,
   3. rows are bucketed into a ``(p, bucket_capacity)`` send buffer
-     (sort-by-destination + rank-within-bucket; overflow rows are dropped
-     and *counted* — ``ShuffleStats.send_dropped``),
-  4. ONE data all_to_all per packed buffer (4-byte columns are bitcast and
+     (overflow rows are dropped and *counted* —
+     ``ShuffleStats.send_dropped``),
+  4. data all_to_all per packed buffer (4-byte columns are bitcast and
      packed into a single ``(p, cap, ncols)`` uint32 buffer so the shuffle
-     issues a single large collective — the "fewer, larger messages"
-     optimization the paper attributes to tuned MPI algorithms),
+     issues one large collective — the "fewer, larger messages"
+     optimization the paper attributes to tuned MPI algorithms), optionally
+     *chunked* along the capacity axis (``a2a_chunks``) into k pipelined
+     collectives (``Communicator.all_to_all_chunked``),
   5. receive-side compaction back to a fixed-capacity ``Table``.
+
+Two bucketize/compaction implementations (``impl``):
+
+* ``"radix"`` (default) — sort-free hot path.  Send side: the
+  ``kernels.radix_partition`` (rank-in-bucket, histogram) pair drives a
+  direct scatter of the u32-packed rows — each row is touched exactly once,
+  no ``argsort``/gather.  Receive side: exclusive prefix sums over
+  ``recv_counts`` give every received row its output slot, so compaction
+  is a single O(n) masked scatter.  Pallas kernel on TPU, the segment-
+  cumsum XLA path elsewhere.
+* ``"sorted"`` — the original two-``argsort`` implementation
+  (O(n log n) send-side bucketize + O(n log n) receive-side compaction),
+  kept as the parity oracle and benchmark baseline.
+
+Both produce **bit-identical** outputs (same rows in the same slots): the
+radix ranks are stable, so overflow drops the same rows, and the prefix-sum
+compaction enumerates valid rows in the same (source-rank, slot) order as
+the stable sort did.
 
 The sample-based repartitioner (``sort.py`` splitters, paper §VI future
 work) exists to keep bucket skew bounded so capacity factors stay small.
@@ -27,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from ..comm import Communicator
+from ..kernels import radix_partition
 from .ops_local import hash_columns
 from .table import Table
 
@@ -34,20 +55,22 @@ from .table import Table
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class ShuffleStats:
-    """Per-rank observability for one shuffle (all traced arrays)."""
+    """Per-rank observability for one shuffle (traced arrays + static tags)."""
 
     sent_counts: jax.Array   # (p,) rows sent to each rank (post-capacity)
     recv_counts: jax.Array   # (p,) rows received from each rank
     send_dropped: jax.Array  # () rows dropped by send-bucket capacity
     recv_dropped: jax.Array  # () rows dropped by receive-table capacity
+    shuffle_impl: str = "radix"   # static: which bucketize path ran
+    a2a_chunks: int = 1           # static: all-to-all pipeline depth
 
     def tree_flatten(self):
         return (self.sent_counts, self.recv_counts, self.send_dropped,
-                self.recv_dropped), None
+                self.recv_dropped), (self.shuffle_impl, self.a2a_chunks)
 
     @classmethod
-    def tree_unflatten(cls, _, children):
-        return cls(*children)
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -86,6 +109,18 @@ def _unpack_u32(buf: jax.Array, names, dtypes) -> Dict[str, jax.Array]:
     return out
 
 
+def _overflow_warn(send_dropped, recv_dropped):
+    """Host-side overflow check (``debug_overflow=True``): warn, don't drop
+    silently.  Runs as a debug callback so it works under jit/shard_map."""
+    import warnings
+    sd, rd = int(send_dropped), int(recv_dropped)
+    if sd or rd:
+        warnings.warn(
+            f"shuffle dropped rows: send_dropped={sd} recv_dropped={rd} "
+            f"(raise bucket_capacity / out_capacity or capacity_factor)",
+            RuntimeWarning, stacklevel=2)
+
+
 def shuffle(
     table: Table,
     comm: Communicator,
@@ -95,11 +130,20 @@ def shuffle(
     out_capacity: Optional[int] = None,
     capacity_factor: float = 2.0,
     pack: bool = True,
+    impl: str = "radix",
+    a2a_chunks: int = 1,
+    debug_overflow: bool = False,
 ) -> Tuple[Table, ShuffleStats]:
     """Repartition rows across the comm axis by key hash or explicit dest.
 
-    Must run inside a shard_map region over ``comm.axis``.
+    Must run inside a shard_map region over ``comm.axis``.  ``impl`` selects
+    the sort-free ``"radix"`` hot path or the ``"sorted"`` baseline (module
+    docstring); ``a2a_chunks`` splits the data collective into k pipelined
+    pieces; ``debug_overflow`` emits a host-side warning whenever capacity
+    pressure drops rows (they are always *counted* in the stats).
     """
+    if impl not in ("radix", "sorted"):
+        raise ValueError(f"unknown shuffle impl {impl!r}")
     p = comm.size()
     cap = table.capacity
     bucket_cap = bucket_capacity or default_bucket_capacity(cap, p, capacity_factor)
@@ -113,20 +157,32 @@ def shuffle(
         dest = (h % jnp.uint32(p)).astype(jnp.int32)
     dest = jnp.where(valid, dest, p)  # invalid rows -> overflow bin p
 
-    # --- bucketize: stable sort rows by destination ---------------------- #
-    order = jnp.argsort(dest, stable=True)
-    sorted_dest = jnp.take(dest, order)
-    pos = jnp.arange(cap, dtype=jnp.int32)
-    bucket_start = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
-    rank_in_bucket = pos - bucket_start
+    # --- bucketize: per-row send-buffer slot ----------------------------- #
+    if impl == "radix":
+        # sort-free: stable rank within destination bucket + histogram in
+        # one kernel pass (Pallas on TPU, segment-cumsum XLA path elsewhere)
+        ranks, hist = radix_partition(dest, p + 1)
+        raw_counts = hist[:p]
+        row_rank = ranks
+        row_dest = dest
+        order = None
+    else:
+        # the PR-1 two-argsort baseline: stable sort by destination, rank =
+        # position - bucket start (kept as oracle + benchmark column)
+        order = jnp.argsort(dest, stable=True)
+        sorted_dest = jnp.take(dest, order)
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        bucket_start = jnp.searchsorted(sorted_dest, sorted_dest, side="left")
+        row_rank = pos - bucket_start
+        row_dest = sorted_dest
+        raw_counts = jax.ops.segment_sum(
+            jnp.ones((cap,), jnp.int32), dest, num_segments=p + 1)[:p]
 
-    raw_counts = jax.ops.segment_sum(
-        jnp.ones((cap,), jnp.int32), dest, num_segments=p + 1)[:p]
     sent_counts = jnp.minimum(raw_counts, bucket_cap)
     send_dropped = jnp.sum(raw_counts - sent_counts)
 
-    in_bucket = (sorted_dest < p) & (rank_in_bucket < bucket_cap)
-    slot = jnp.where(in_bucket, sorted_dest * bucket_cap + rank_in_bucket,
+    in_bucket = (row_dest < p) & (row_rank < bucket_cap)
+    slot = jnp.where(in_bucket, row_dest * bucket_cap + row_rank,
                      p * bucket_cap)  # out-of-range -> dropped by mode="drop"
 
     names = table.column_names
@@ -139,33 +195,56 @@ def shuffle(
 
     recv_cols: Dict[str, jax.Array] = {}
 
-    def _scatter(col_sorted: jax.Array) -> jax.Array:
-        buf = jnp.zeros((p * bucket_cap,) + col_sorted.shape[1:], col_sorted.dtype)
-        return buf.at[slot].set(col_sorted, mode="drop")
+    def _scatter(col: jax.Array) -> jax.Array:
+        # radix: direct scatter by original row (each row touched once);
+        # sorted: rows were gathered into destination order first.
+        buf = jnp.zeros((p * bucket_cap,) + col.shape[1:], col.dtype)
+        return buf.at[slot].set(col, mode="drop")
 
     if packables:
         packed = _pack_u32(table.columns, packables)          # (cap, N)
-        packed = jnp.take(packed, order, axis=0)
+        if order is not None:
+            packed = jnp.take(packed, order, axis=0)
         buf = _scatter(packed).reshape(p, bucket_cap, len(packables))
-        got = comm.all_to_all(buf).reshape(p * bucket_cap, len(packables))
-        recv_cols.update(_unpack_u32(got, packables, dtypes))
+        got = comm.all_to_all_chunked(buf, chunks=a2a_chunks)
+        recv_cols.update(_unpack_u32(
+            got.reshape(p * bucket_cap, len(packables)), packables, dtypes))
     for n in singles:
-        col = jnp.take(table.columns[n], order, axis=0)
+        col = table.columns[n]
+        if order is not None:
+            col = jnp.take(col, order, axis=0)
         buf = _scatter(col).reshape((p, bucket_cap) + col.shape[1:])
-        got = comm.all_to_all(buf)
+        got = comm.all_to_all_chunked(buf, chunks=a2a_chunks)
         recv_cols[n] = got.reshape((p * bucket_cap,) + col.shape[1:])
 
     recv_counts = comm.exchange_counts(sent_counts)
+    total_recv = jnp.sum(recv_counts)
+    new_count = jnp.minimum(total_recv, out_cap).astype(jnp.int32)
 
     # --- receive-side compaction ----------------------------------------- #
     ridx = jnp.arange(p * bucket_cap, dtype=jnp.int32)
-    r_valid = (ridx % bucket_cap) < jnp.take(recv_counts, ridx // bucket_cap)
-    order2 = jnp.argsort(jnp.where(r_valid, 0, 1), stable=True)[:out_cap]
-    total_recv = jnp.sum(recv_counts)
-    new_count = jnp.minimum(total_recv, out_cap).astype(jnp.int32)
-    out_cols = {n: jnp.take(v, order2, axis=0) for n, v in recv_cols.items()}
+    blk, q = ridx // bucket_cap, ridx % bucket_cap
+    r_valid = q < jnp.take(recv_counts, blk)
+    out_size = min(p * bucket_cap, out_cap)  # what the argsort slice produced
+    if impl == "radix":
+        # sort-free: slot of a valid row (blk, q) is its rank in the
+        # (source-rank, slot) enumeration = exclusive prefix over recv_counts
+        offsets = jnp.cumsum(recv_counts) - recv_counts     # exclusive
+        out_pos = jnp.where(r_valid, jnp.take(offsets, blk) + q, out_size)
+        out_cols = {}
+        for n, v in recv_cols.items():
+            out = jnp.zeros((out_size,) + v.shape[1:], v.dtype)
+            out_cols[n] = out.at[out_pos].set(v, mode="drop")
+    else:
+        order2 = jnp.argsort(jnp.where(r_valid, 0, 1), stable=True)[:out_cap]
+        out_cols = {n: jnp.take(v, order2, axis=0) for n, v in recv_cols.items()}
+
+    recv_dropped = jnp.maximum(total_recv - out_cap, 0)
+    if debug_overflow:
+        jax.debug.callback(_overflow_warn, send_dropped, recv_dropped)
 
     out = Table(out_cols, new_count).mask_padding()
     stats = ShuffleStats(sent_counts, recv_counts, send_dropped,
-                         jnp.maximum(total_recv - out_cap, 0))
+                         recv_dropped, shuffle_impl=impl,
+                         a2a_chunks=a2a_chunks)
     return out, stats

@@ -12,13 +12,14 @@ under ``interpret=True``; on TPU they compile via Mosaic.
 """
 
 from .segmented_reduce import segmented_sum, segmented_sum_ref
-from .radix_partition import radix_partition, radix_partition_ref
+from .radix_partition import (radix_partition, radix_partition_ref,
+                              radix_partition_xla)
 from .flash_attention import attention_ref, flash_attention
 from .ssd_scan import ssd_scan, ssd_scan_chunked_jnp, ssd_scan_ref
 
 __all__ = [
     "segmented_sum", "segmented_sum_ref",
-    "radix_partition", "radix_partition_ref",
+    "radix_partition", "radix_partition_ref", "radix_partition_xla",
     "flash_attention", "attention_ref",
     "ssd_scan", "ssd_scan_chunked_jnp", "ssd_scan_ref",
 ]

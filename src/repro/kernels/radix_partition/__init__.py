@@ -1,5 +1,7 @@
 from .ops import radix_partition
 from .radix_partition import radix_partition_pallas
 from .ref import radix_partition_ref
+from .xla import radix_partition_xla
 
-__all__ = ["radix_partition", "radix_partition_pallas", "radix_partition_ref"]
+__all__ = ["radix_partition", "radix_partition_pallas", "radix_partition_ref",
+           "radix_partition_xla"]

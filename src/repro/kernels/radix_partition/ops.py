@@ -1,4 +1,17 @@
-"""Jit'd public wrapper for the radix-partition kernel (pads + dispatches)."""
+"""Jit'd public wrapper for the radix-partition kernel (pads + dispatches).
+
+Implementation selection (``impl``):
+
+* ``"auto"``   — the compiled Pallas kernel on TPU; the sort-free XLA
+                 segment-cumsum path (``xla.py``) everywhere else.  The XLA
+                 path is pure ``jnp``, so ``auto`` is always safe inside
+                 ``shard_map`` / ``vmap`` regions (interpret-mode
+                 ``pallas_call`` is not) — this is what the dataframe
+                 shuffle uses.
+* ``"pallas"`` — force the Pallas kernel (interpret mode off-TPU; tests).
+* ``"xla"``    — force the sort-free XLA path.
+* ``"ref"``    — the sort-based jnp oracle (``ref.py``).
+"""
 
 from __future__ import annotations
 
@@ -7,17 +20,25 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..common import default_interpret, round_up
+from ..common import round_up
 from .radix_partition import radix_partition_pallas
 from .ref import radix_partition_ref
+from .xla import radix_partition_xla
 
 
 def radix_partition(dest: jax.Array, num_buckets: int, block_rows: int = 256,
                     use_kernel: bool = True,
-                    interpret: Optional[bool] = None):
-    """(ranks, hist) for destination buckets; kernel fast path + jnp fallback."""
-    if not use_kernel:
+                    interpret: Optional[bool] = None,
+                    impl: str = "auto"):
+    """(ranks, hist) for destination buckets; see module docstring for ``impl``."""
+    if not use_kernel or impl == "ref":
         return radix_partition_ref(dest, num_buckets)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return radix_partition_xla(dest, num_buckets)
+    if impl != "pallas":
+        raise ValueError(f"unknown radix_partition impl {impl!r}")
     n = dest.shape[0]
     n_pad = round_up(max(n, block_rows), block_rows)
     # padded rows need a bucket strictly above every real bucket — round up
@@ -29,6 +50,5 @@ def radix_partition(dest: jax.Array, num_buckets: int, block_rows: int = 256,
         d = jnp.concatenate(
             [d, jnp.full((n_pad - n,), nb_pad - 1, dest.dtype)])
     ranks, hist = radix_partition_pallas(
-        d, nb_pad, block_rows=block_rows,
-        interpret=default_interpret(interpret))
+        d, nb_pad, block_rows=block_rows, interpret=interpret)
     return ranks[:n], hist[:num_buckets]

@@ -19,11 +19,14 @@ VMEM; NB is padded to a multiple of 128 lanes.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..common import default_interpret
 
 
 def _kernel(dest_ref, rank_ref, hist_ref, running_ref):
@@ -53,12 +56,16 @@ def _kernel(dest_ref, rank_ref, hist_ref, running_ref):
                                              "interpret"))
 def radix_partition_pallas(dest: jax.Array, num_buckets: int,
                            block_rows: int = 256,
-                           interpret: bool = True):
+                           interpret: Optional[bool] = None):
     """dest: (n,) int32 in [0, num_buckets) -> (ranks (n,), hist (num_buckets,)).
 
     n must be a multiple of block_rows and num_buckets of 128 (ops.py pads;
     padded rows use bucket num_buckets-1 and their ranks are discarded).
+    ``interpret=None`` selects from the backend: the real Mosaic kernel on
+    TPU, interpret mode elsewhere (it used to default to ``interpret=True``,
+    silently skipping the compiled kernel even on TPU).
     """
+    interpret = default_interpret(interpret)
     n = dest.shape[0]
     assert n % block_rows == 0 and num_buckets % 128 == 0
     grid = (n // block_rows,)

@@ -33,7 +33,9 @@ def _label(n: LogicalNode) -> str:
         cols = p.get("cols")
         return f"add_scalar[{','.join(cols) if cols else '*'}]"
     if n.op == "shuffle":
-        return f"shuffle[{','.join(p['key_cols'])}]"
+        extra = "".join(f"; {k}={p[k]}" for k in ("impl", "a2a_chunks")
+                        if k in p)
+        return f"shuffle[{','.join(p['key_cols'])}{extra}]"
     if n.op == "join":
         notes = [s for s, f in (("left-elided", "elide_left"),
                                 ("right-elided", "elide_right")) if p.get(f)]
@@ -54,10 +56,16 @@ def _label(n: LogicalNode) -> str:
     return n.op
 
 
-def render(pplan: PhysicalPlan, mode: str = "bsp") -> str:
+def render(pplan: PhysicalPlan, mode: str = "bsp",
+           shuffle_impl: str = "radix", a2a_chunks: int = 1) -> str:
+    # amt executes the allgather object-store shuffle; the bucketize/chunking
+    # knobs are inert there, so show what actually runs
+    shuf = ("allgather" if mode == "amt"
+            else f"{shuffle_impl}/c{a2a_chunks}")
     lines = [
         f"== physical plan: {pplan.num_stages} stages, "
         f"{pplan.num_shuffles} shuffles, mode={mode}, "
+        f"shuffle={shuf}, "
         f"fingerprint={pplan.fingerprint[:12]} =="
     ]
     by_stage: Dict[int, list] = {}
@@ -79,10 +87,13 @@ def render(pplan: PhysicalPlan, mode: str = "bsp") -> str:
 
 
 def explain(plan: Any, tables: Optional[Mapping[str, Any]] = None,
-            optimize_plan: bool = True, mode: str = "bsp") -> str:
+            optimize_plan: bool = True, mode: str = "bsp",
+            shuffle_impl: str = "radix", a2a_chunks: int = 1) -> str:
     """Render EXPLAIN output for a ``core.plan.Plan`` (or raw builder node /
     LogicalNode).  ``tables`` supplies scan schemas: DistTables,
-    ``(cols, rows)`` pairs, or plain column sequences."""
+    ``(cols, rows)`` pairs, or plain column sequences.  ``shuffle_impl`` /
+    ``a2a_chunks`` are the plan-wide shuffle knobs shown in the header
+    (per-node overrides appear in the node labels)."""
     catalog = build_catalog(tables)
     node = getattr(plan, "node", plan)
     if isinstance(node, LogicalNode):
@@ -92,4 +103,5 @@ def explain(plan: Any, tables: Optional[Mapping[str, Any]] = None,
         fired = []
     if optimize_plan:
         root, fired = optimize(root, catalog)
-    return render(lower(root, fired), mode)
+    return render(lower(root, fired), mode, shuffle_impl=shuffle_impl,
+                  a2a_chunks=a2a_chunks)

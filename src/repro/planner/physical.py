@@ -180,7 +180,8 @@ def shuffle_allgather(table: Table, comm: Communicator,
     sent = jax.ops.segment_sum(jnp.ones((cap,), jnp.int32), dest,
                                num_segments=p + 1)[:p]
     stats = ShuffleStats(sent, sent, jnp.asarray(0, jnp.int32),
-                         jnp.maximum(jnp.sum(keep) - out_cap, 0))
+                         jnp.maximum(jnp.sum(keep) - out_cap, 0),
+                         shuffle_impl="allgather")
     return Table(cols, new_count).mask_padding(), stats
 
 
@@ -201,7 +202,8 @@ def _shuffle_kw(node: LogicalNode) -> Dict[str, Any]:
 def eval_node(node: LogicalNode, comm: Communicator,
               values: Dict[int, Table], tables: Dict[str, Table],
               shuffle_mode: str,
-              stats_out: Optional[List[Tuple[str, jax.Array]]] = None
+              stats_out: Optional[List[Tuple[str, jax.Array]]] = None,
+              shuffle_impl: str = "radix", a2a_chunks: int = 1
               ) -> Table:
     p = node.params
     ins = [values[i.nid] for i in node.inputs]
@@ -229,6 +231,15 @@ def eval_node(node: LogicalNode, comm: Communicator,
         return ops_local.add_scalar(ins[0], p["value"], p.get("cols"))
 
     kw = _shuffle_kw(node)
+    if shuffle_mode == "direct":
+        # plan-level defaults; per-node params (Plan.shuffle(impl=...,
+        # a2a_chunks=...)) take precedence
+        kw.setdefault("impl", shuffle_impl)
+        kw.setdefault("a2a_chunks", a2a_chunks)
+    else:
+        kw.pop("impl", None)
+        kw.pop("a2a_chunks", None)
+        kw.pop("debug_overflow", None)
     if node.op == "shuffle":
         out_cap = kw.pop("out_capacity", None)
         return run_shuffle(f"shuffle({','.join(p['key_cols'])})", ins[0],
@@ -317,6 +328,8 @@ class ExecStats:
     bytes_shuffled: int
     shuffle_labels: List[str]
     fired: Tuple[str, ...]
+    shuffle_impl: str = "radix"   # bucketize path: radix | sorted | allgather
+    a2a_chunks: int = 1           # all-to-all pipeline depth
 
 
 def _sum_stats(collected) -> Tuple[int, int]:
@@ -329,11 +342,15 @@ def _sum_stats(collected) -> Tuple[int, int]:
 
 
 def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
-                 mode: str = "bsp", collect_stats: bool = False):
+                 mode: str = "bsp", collect_stats: bool = False,
+                 shuffle_impl: str = "radix", a2a_chunks: int = 1):
     """Execute a lowered plan against DistTables on a ``CylonEnv``.
 
     Returns a DistTable, or ``(DistTable, ExecStats)`` with
-    ``collect_stats=True``.
+    ``collect_stats=True``.  ``shuffle_impl``/``a2a_chunks`` set the
+    plan-wide shuffle defaults (per-node params override); both are part of
+    the compile-cache key and recorded in the stats so benchmark output can
+    attribute wins.
     """
     names = pplan.scan_names
     missing = [n for n in names if n not in tables]
@@ -343,12 +360,16 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     order = pplan.order
     fp = pplan.fingerprint
     shuffle_mode = "allgather" if mode == "amt" else "direct"
+    eval_kw = dict(shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)
 
     def mk_stats(dispatches: int, collected) -> ExecStats:
         rows, byts = _sum_stats(collected)
         return ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
                          dispatches, rows, byts, pplan.shuffle_labels(),
-                         pplan.fired)
+                         pplan.fired,
+                         shuffle_impl=("allgather" if mode == "amt"
+                                       else shuffle_impl),
+                         a2a_chunks=a2a_chunks)
 
     if mode == "bsp":
         def prog(ctx, *local_tables):
@@ -358,14 +379,15 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
             for node in order:
                 values[node.nid] = eval_node(
                     node, ctx.comm, values, tmap, "direct",
-                    stats if collect_stats else None)
+                    stats if collect_stats else None, **eval_kw)
             out = values[root.nid]
             if collect_stats:
                 return out, tuple(a for _, a in stats)
             return out
 
         res = env.run(prog, *[tables[n] for n in names],
-                      key=("bsp", fp, env.communicator_name, collect_stats))
+                      key=("bsp", fp, env.communicator_name, collect_stats,
+                           shuffle_impl, a2a_chunks))
         if collect_stats:
             out, collected = res
             return out, mk_stats(1, collected)
@@ -409,7 +431,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 for node in _unit:
                     vals[node.nid] = eval_node(
                         node, ctx.comm, vals, tmap, shuffle_mode,
-                        stats if collect_stats else None)
+                        stats if collect_stats else None, **eval_kw)
                 out = tuple(vals[n.nid] for n in _outs)
                 if collect_stats:
                     return out, tuple(a for _, a in stats)
@@ -419,7 +441,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                    [tables[s.params["name"]] for s in scans]
             res = env.run(prog, *args,
                           key=(mode, fp, uidx, env.communicator_name,
-                               collect_stats))
+                               collect_stats, shuffle_impl, a2a_chunks))
             if collect_stats:
                 out_tuple, unit_stats = res
                 collected.extend(unit_stats)

@@ -34,6 +34,19 @@ for p in (6, 8):
         for name in ("ring", "bruck"):
             got = run(name, method, x)
             assert np.allclose(got, ref, atol=1e-5), (p, name, method)
+
+    # chunked all-to-all == monolithic, every backend, including a chunk
+    # count (3) that does not divide the capacity axis (4 -> pad+slice)
+    ref = run("xla", "all_to_all", x_blocks)
+    for name in ("xla", "ring", "bruck"):
+        comm = get_communicator(name, "df")
+        for chunks in (1, 2, 3, 4):
+            got = jax.jit(compat.shard_map(
+                lambda xl, c=comm, k=chunks: c.all_to_all_chunked(
+                    xl[0], chunks=k)[None],
+                mesh=mesh, in_specs=P("df"), out_specs=P("df"),
+                check_vma=False))(x_blocks)
+            assert np.allclose(got, ref, atol=1e-5), (p, name, chunks)
     # broadcast + counts exchange
     for name in ("xla", "ring", "bruck"):
         comm = get_communicator(name, "df")

@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import (attention_ref, flash_attention, radix_partition,
-                           radix_partition_ref, segmented_sum,
-                           segmented_sum_ref, ssd_scan, ssd_scan_chunked_jnp,
-                           ssd_scan_ref)
+                           radix_partition_ref, radix_partition_xla,
+                           segmented_sum, segmented_sum_ref, ssd_scan,
+                           ssd_scan_chunked_jnp, ssd_scan_ref)
 
 RNG = np.random.default_rng(42)
 
@@ -44,15 +44,40 @@ def test_segmented_sum_1d():
 # ---------------------------------------------------------------------- #
 @pytest.mark.parametrize("n,buckets", [(17, 3), (256, 16), (1000, 128),
                                        (513, 7), (2048, 1024)])
-def test_radix_partition_sweep(n, buckets):
+@pytest.mark.parametrize("impl", ["auto", "pallas", "xla"])
+def test_radix_partition_sweep(n, buckets, impl):
     dest = jnp.asarray(RNG.integers(0, buckets, n).astype(np.int32))
-    r1, h1 = radix_partition(dest, buckets)
+    r1, h1 = radix_partition(dest, buckets, impl=impl)
     r2, h2 = radix_partition_ref(dest, buckets)
     np.testing.assert_array_equal(r1, r2)
     np.testing.assert_array_equal(h1, h2)
     # histogram property
     np.testing.assert_array_equal(
         np.asarray(h1), np.bincount(np.asarray(dest), minlength=buckets))
+
+
+@pytest.mark.parametrize("n,buckets,block_rows", [(1000, 9, 128),
+                                                  (4096, 17, 256),
+                                                  (130, 5, 64)])
+def test_radix_partition_xla_blocked_regime(n, buckets, block_rows):
+    # force the lax.scan-over-blocks path (the dense/blocked switch is
+    # size-based by default) and check it against the sort-based oracle
+    dest = jnp.asarray(RNG.integers(0, buckets, n).astype(np.int32))
+    r1, h1 = radix_partition_xla(dest, buckets, block_rows=block_rows)
+    r2, h2 = radix_partition_ref(dest, buckets)
+    np.testing.assert_array_equal(r1, r2)
+    np.testing.assert_array_equal(h1, h2)
+
+
+def test_radix_partition_xla_is_vmap_safe():
+    # the shuffle calls this inside shard_map/vmap regions; the pure-jnp
+    # formulation must batch (an interpret-mode pallas_call would not)
+    dest = jnp.asarray(RNG.integers(0, 8, (4, 256)).astype(np.int32))
+    ranks, hist = jax.vmap(lambda d: radix_partition_xla(d, 8))(dest)
+    for i in range(4):
+        r, h = radix_partition_ref(dest[i], 8)
+        np.testing.assert_array_equal(ranks[i], r)
+        np.testing.assert_array_equal(hist[i], h)
 
 
 # ---------------------------------------------------------------------- #

@@ -46,6 +46,11 @@ def test_shuffle_props():
 
 
 @pytest.mark.multidevice
+def test_sortfree_shuffle_parity():
+    _run("sortfree_shuffle_parity.py")
+
+
+@pytest.mark.multidevice
 def test_planner_parity():
     _run("planner_parity.py")
 

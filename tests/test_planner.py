@@ -314,7 +314,7 @@ def test_collect_stats(rng):
 # EXPLAIN golden snapshots
 # ---------------------------------------------------------------------- #
 GOLDEN_FIG9_OPT = """\
-== physical plan: 3 stages, 3 shuffles, mode=bsp, fingerprint=3186d8a6b80e ==
+== physical plan: 3 stages, 3 shuffles, mode=bsp, shuffle=radix/c1, fingerprint=3186d8a6b80e ==
 stage 0:
   scan[l]                                      rows~     8000  part=none         cols=junk,k,v0
   project[k,v0]                                rows~     8000  part=none         cols=k,v0
@@ -333,7 +333,7 @@ rules fired:
   - projection-pushdown: drop [junk,w] before groupby"""
 
 GOLDEN_FIG9_UNOPT = """\
-== physical plan: 4 stages, 4 shuffles, mode=bsp, fingerprint=37858a051ca8 ==
+== physical plan: 4 stages, 4 shuffles, mode=bsp, shuffle=radix/c1, fingerprint=37858a051ca8 ==
 stage 0:
   scan[l]                                      rows~     8000  part=none         cols=junk,k,v0
   scan[r]                                      rows~     8000  part=none         cols=k,w

@@ -1,0 +1,128 @@
+"""Sort-free (radix) shuffle vs the sorted baseline: deterministic parity.
+
+Multi-rank behaviour is simulated with ``jax.vmap(axis_name=...)`` — every
+collective the communicators use (all_to_all / ppermute / all_gather) has a
+batching rule for named axes, so p ranks run on the single CPU test device.
+The randomized hypothesis property lives in
+``test_shuffle_sortfree_props.py``; real 8-device bit-identity runs in
+``tests/md_scripts/sortfree_shuffle_parity.py``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import get_communicator
+from repro.dataframe import ShuffleStats, Table, shuffle
+
+RNG = np.random.default_rng(7)
+
+
+def run_ranks(comm_name, cols_np, counts_np, **kw):
+    """Run ``shuffle`` on p simulated ranks; returns (out_cols, row_counts,
+    stats) as numpy, plus the static stats tags."""
+    comm = get_communicator(comm_name, "df")
+    cols = {k: jnp.asarray(v) for k, v in cols_np.items()}
+    counts = jnp.asarray(counts_np, jnp.int32)
+    tags = {}
+
+    def f(cols, count):
+        out, st = shuffle(Table(dict(cols), count), comm, **kw)
+        tags["impl"], tags["chunks"] = st.shuffle_impl, st.a2a_chunks
+        return (dict(out.columns), out.row_count,
+                (st.sent_counts, st.recv_counts, st.send_dropped,
+                 st.recv_dropped))
+
+    out_cols, rc, stats = jax.vmap(f, axis_name="df")(cols, counts)
+    return (jax.tree_util.tree_map(np.asarray, (out_cols, rc, stats)),
+            tags)
+
+
+def make_ranks(p, cap, n_keys=50, skew=False):
+    if skew:   # zipf-skewed keys: a few destinations absorb most rows
+        k = (RNG.zipf(1.4, (p, cap)) % n_keys).astype(np.int32)
+    else:
+        k = RNG.integers(0, n_keys, (p, cap)).astype(np.int32)
+    cols = {"k": k, "v": RNG.random((p, cap)).astype(np.float32)}
+    counts = RNG.integers(0, cap + 1, p).astype(np.int32)
+    return cols, counts
+
+
+@pytest.mark.parametrize("comm_name", ["ring", "bruck", "xla"])
+@pytest.mark.parametrize("p", [1, 2, 4, 8])
+def test_radix_matches_sorted(comm_name, p):
+    cols, counts = make_ranks(p, 64)
+    ref, rtags = run_ranks(comm_name, cols, counts, key_cols=["k"],
+                           bucket_capacity=32, impl="sorted")
+    got, gtags = run_ranks(comm_name, cols, counts, key_cols=["k"],
+                           bucket_capacity=32, impl="radix")
+    assert (rtags["impl"], gtags["impl"]) == ("sorted", "radix")
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(a, b)   # bit-identical, slots included
+
+
+@pytest.mark.parametrize("chunks", [1, 2, 3, 8])
+def test_chunked_a2a_matches_monolithic(chunks):
+    p = 4
+    cols, counts = make_ranks(p, 48)
+    ref, _ = run_ranks("ring", cols, counts, key_cols=["k"],
+                       bucket_capacity=24, a2a_chunks=1)
+    got, tags = run_ranks("ring", cols, counts, key_cols=["k"],
+                          bucket_capacity=24, a2a_chunks=chunks)
+    assert tags["chunks"] == chunks
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_skewed_overflow_parity_and_counts():
+    p = 8
+    cols, counts = make_ranks(p, 64, n_keys=5, skew=True)
+    ref, _ = run_ranks("xla", cols, counts, key_cols=["k"],
+                       bucket_capacity=16, impl="sorted")
+    got, _ = run_ranks("xla", cols, counts, key_cols=["k"],
+                       bucket_capacity=16, impl="radix")
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(a, b)
+    (_, rc, (sent, recv, send_drop, recv_drop)) = got
+    total = int(counts.sum())
+    kept = int(rc.sum()) + int(recv_drop.sum())
+    assert kept + int(send_drop.sum()) == total
+    assert int(send_drop.sum()) > 0   # 5 hot keys into 8x16-slot buckets
+
+
+def test_debug_overflow_warns():
+    import warnings
+    p = 2
+    cols, counts = make_ranks(p, 32, n_keys=3)
+    counts = np.full(p, 32, np.int32)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        run_ranks("xla", cols, counts, key_cols=["k"], bucket_capacity=8,
+                  debug_overflow=True)
+        assert any("shuffle dropped rows" in str(x.message) for x in w)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        run_ranks("xla", cols, counts, key_cols=["k"], bucket_capacity=64,
+                  out_capacity=128, debug_overflow=True)
+        assert not any("shuffle dropped rows" in str(x.message) for x in w)
+
+
+def test_stats_static_tags_roundtrip_pytree():
+    st = ShuffleStats(jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32),
+                      jnp.asarray(0), jnp.asarray(0),
+                      shuffle_impl="sorted", a2a_chunks=4)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.shuffle_impl == "sorted" and back.a2a_chunks == 4
+
+
+def test_unknown_impl_raises():
+    comm = get_communicator("xla", "df")
+    t = Table.from_arrays({"k": np.zeros(8, np.int32)})
+    with pytest.raises(ValueError, match="unknown shuffle impl"):
+        shuffle(t, comm, key_cols=["k"], impl="quantum")
