@@ -19,9 +19,14 @@ qualitative on the CPU stand-in backend).  Plans are compiled once per
 execution through ``run_physical``, not re-planning.
 """
 
-from __future__ import annotations
+import os
+
+if __name__ == "__main__":  # direct CLI use needs the 8-device CPU backend
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
 
 import jax
+import numpy as np
 
 from repro.core import CylonEnv, DistTable, Plan
 from repro.planner import compile_plan, run_physical
@@ -104,3 +109,101 @@ def run(global_rows: int = 100_000) -> None:
         record("pipeline(Fig9)", f"speedup_radix_chunked4_p{p}",
                sweep[("radix", 1)] / sweep[("radix", 4)], parallelism=p,
                note="ratio not seconds")
+
+
+def run_oversub(global_rows: int = 100_000, oversub: int = 8,
+                capacity_factor: float = 4.0) -> None:
+    """Out-of-core Fig-9: the dataset is ``oversub``x the per-device morsel
+    capacity and streams through the compiled stage DAG host-resident
+    (``docs/out_of_core.md``).
+
+    Device working capacity is pinned at ``capacity_factor * morsel_rows``
+    with ``morsel_rows = rows/rank/oversub`` — i.e. the device never holds
+    more than ~``1/oversub`` of its partition (plus the resident join build
+    side).  Payloads are integer-valued float32 so the streamed result is
+    asserted BIT-IDENTICAL to the in-core run, morsel split or not.
+    """
+    from repro.core import SpillTable
+
+    p = min(8, len(jax.devices()))
+    env = CylonEnv(jax.devices()[:p])
+    ld = make_table_data(global_rows, seed=0, exact_values=True)
+    rd = make_table_data(global_rows, seed=1, exact_values=True)
+    rd["w"] = rd.pop("v0")
+    lt = DistTable.from_numpy(ld, p)
+    rt = DistTable.from_numpy(rd, p)
+    cap = lt.capacity
+    rows_rank = -(-global_rows // p)
+    morsel = max(8, (-(-rows_rank // oversub) + 7) // 8 * 8)
+
+    plan = (Plan.scan("l")
+            .join(Plan.scan("r"), on="k", out_capacity=cap * 4,
+                  bucket_capacity=cap * 2, shuffle_out_capacity=cap * 2)
+            .groupby(["k"], {"v0": ["sum", "mean"]}, bucket_capacity=cap * 4)
+            .sort(["k"], bucket_capacity=cap * 4)
+            .add_scalar(1.0, cols=["v0_sum"]))
+    tables_dev = {"l": lt, "r": rt}
+    tables_host = {"l": SpillTable.from_numpy(ld, p, chunk_rows=morsel),
+                   "r": rd}
+    pplan = compile_plan(plan, tables_dev, optimize_plan=True)
+
+    ref, ref_stats = run_physical(pplan, env, tables_dev, mode="bsp",
+                                  collect_stats=True)
+    out, ooc_stats = run_physical(pplan, env, tables_host, mode="bsp",
+                                  collect_stats=True, morsel_rows=morsel,
+                                  capacity_factor=capacity_factor)
+    a, b = ref.to_numpy(), out.to_numpy()
+    identical = (sorted(a) == sorted(b)
+                 and all(np.array_equal(a[c], b[c]) for c in a))
+
+    t_ref = time_fn(lambda: run_physical(pplan, env, tables_dev,
+                                         mode="bsp").row_counts, iters=3)
+
+    def do_ooc():
+        sp = run_physical(pplan, env, tables_host, mode="bsp",
+                          morsel_rows=morsel,
+                          capacity_factor=capacity_factor)
+        return sp.total_rows()
+
+    t_ooc = time_fn(do_ooc, warmup=1, iters=3)
+    record("pipeline(Fig9-ooc)", f"in_core_p{p}", t_ref, parallelism=p,
+           rows=global_rows, rows_dropped=ref_stats.rows_dropped)
+    record("pipeline(Fig9-ooc)", f"oversub{oversub}_p{p}", t_ooc,
+           parallelism=p, rows=global_rows, oversub=oversub,
+           morsel_rows=ooc_stats.morsel_rows, morsels=ooc_stats.morsels,
+           dispatches=ooc_stats.dispatches,
+           spill_bytes=ooc_stats.spill_bytes,
+           h2d_bytes=ooc_stats.h2d_bytes, d2h_bytes=ooc_stats.d2h_bytes,
+           rows_shuffled=ooc_stats.rows_shuffled,
+           rows_dropped=ooc_stats.rows_dropped,
+           cache_misses=ooc_stats.cache_misses,
+           cache_hits=ooc_stats.cache_hits,
+           bit_identical=identical)
+    record("pipeline(Fig9-ooc)", f"slowdown_oversub{oversub}_p{p}",
+           t_ooc / t_ref, parallelism=p, note="ratio not seconds")
+    if not identical:
+        raise AssertionError("out-of-core result != in-core result")
+    if ooc_stats.rows_dropped or ref_stats.rows_dropped:
+        raise AssertionError(
+            f"rows dropped (in-core {ref_stats.rows_dropped}, "
+            f"out-of-core {ooc_stats.rows_dropped})")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import dump_json
+
+    ap = argparse.ArgumentParser(
+        description="Fig-9 pipeline out-of-core: stream an oversubscribed "
+                    "dataset through the compiled stage DAG in morsels")
+    ap.add_argument("--rows", type=int, default=100_000)
+    ap.add_argument("--oversub", type=int, default=8,
+                    help="dataset size as a multiple of device capacity")
+    ap.add_argument("--capacity-factor", type=float, default=4.0)
+    ap.add_argument("--json", default="BENCH_pr3_out_of_core.json")
+    args = ap.parse_args()
+    run_oversub(args.rows, args.oversub, args.capacity_factor)
+    dump_json(args.json, meta={"bench": "out_of_core",
+                               "oversub": args.oversub, "rows": args.rows})
+    print(f"json -> {args.json}")

@@ -42,13 +42,20 @@ def record(bench: str, case: str, seconds: float, **extra) -> None:
 
 
 def make_table_data(rows: int, cardinality: float = 0.9, seed: int = 0,
-                    value_cols: int = 1) -> Dict[str, np.ndarray]:
-    """Paper §V data recipe: uniform int64->int32 keys, 90% cardinality."""
+                    value_cols: int = 1,
+                    exact_values: bool = False) -> Dict[str, np.ndarray]:
+    """Paper §V data recipe: uniform int64->int32 keys, 90% cardinality.
+
+    ``exact_values`` draws integer-valued float32 payloads, making float
+    aggregation exact (and therefore order-insensitive) — used by the
+    out-of-core bench to assert bit-identity across morsel splits."""
     rng = np.random.default_rng(seed)
     n_unique = max(1, int(rows * cardinality))
     data = {"k": rng.integers(0, n_unique, rows).astype(np.int32)}
     for i in range(value_cols):
-        data[f"v{i}"] = rng.random(rows).astype(np.float32)
+        data[f"v{i}"] = (rng.integers(0, 256, rows).astype(np.float32)
+                         if exact_values
+                         else rng.random(rows).astype(np.float32))
     return data
 
 

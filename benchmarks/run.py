@@ -52,6 +52,9 @@ def main() -> None:
         # floor: below ~4k rows/rank the dispatch overhead buries the delta
         "shuffle_impl": lambda: bench_shuffle_impl.run(
             max(4096, 65_536 // scale)),
+        # out-of-core Fig-9 at 8x device capacity (asserts bit-identity)
+        "out_of_core": lambda: bench_pipeline.run_oversub(
+            max(4000, 100_000 // scale), oversub=8),
         "kernels": bench_kernels.run if not args.quick else bench_kernels.run,
         "moe_shuffle": bench_moe_shuffle.run,
     }

@@ -5,12 +5,13 @@ resource partitioning), ``Plan``/``execute`` (logical plan + coalescing, with
 the AMT baseline mode), ``CylonStore`` (downstream hand-off + repartition).
 """
 
-from .env import AXIS, CylonEnv, DevicePool, DistTable, EnvContext
+from .env import AXIS, CylonEnv, DevicePool, DistTable, EnvContext, MorselSource
 from .actor import CylonExecutor
 from .plan import Plan, execute
-from .store import CylonStore, repartition
+from .store import CylonStore, SpillTable, repartition, rescatter
 
 __all__ = [
     "AXIS", "CylonEnv", "CylonExecutor", "CylonStore", "DevicePool",
-    "DistTable", "EnvContext", "Plan", "execute", "repartition",
+    "DistTable", "EnvContext", "MorselSource", "Plan", "SpillTable",
+    "execute", "repartition", "rescatter",
 ]

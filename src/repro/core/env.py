@@ -55,10 +55,14 @@ class DistTable:
     @classmethod
     def from_numpy(cls, data: Dict[str, np.ndarray], parallelism: int,
                    capacity: Optional[int] = None) -> "DistTable":
-        """Block-distribute host rows over ``parallelism`` shards."""
+        """Block-distribute host rows over ``parallelism`` shards.
+
+        An explicit ``capacity`` — including ``0`` — is honored verbatim and
+        validated against the per-shard row count."""
         n = len(next(iter(data.values())))
         per = -(-n // parallelism)
-        capacity = capacity or max(8, -(-per // 8) * 8)
+        if capacity is None:
+            capacity = max(8, -(-per // 8) * 8)
         if per > capacity:
             raise ValueError(f"rows/shard {per} exceeds capacity {capacity}")
         cols = {}
@@ -88,6 +92,76 @@ class DistTable:
 
 
 # ---------------------------------------------------------------------- #
+# Morsel streaming: host spill -> fixed-capacity device batches
+# ---------------------------------------------------------------------- #
+class MorselSource:
+    """Streams a host-resident table as fixed-capacity device ``DistTable``
+    morsels (the out-of-core input path, ``docs/out_of_core.md``).
+
+    ``source`` may be a ``core.store.SpillTable``, a device ``DistTable``
+    (spilled first), or a dict of host numpy columns (block-distributed over
+    ``parallelism`` ranks).  Every yielded morsel has the same per-rank
+    capacity (``morsel_rows`` rounded up to 8), so one compiled program —
+    a single structural-fingerprint cache entry — processes every morsel.
+
+    Transfers are **double-buffered**: morsel ``m+1``'s host->device copy is
+    enqueued (asynchronously, like a pinned-staging H2D DMA) before morsel
+    ``m`` is handed to the consumer, overlapping transfer with compute.
+    ``h2d_bytes`` accumulates the bytes shipped to devices.
+    """
+
+    def __init__(self, source, morsel_rows: int,
+                 env: Optional["CylonEnv"] = None,
+                 parallelism: Optional[int] = None):
+        from .store import SpillTable  # deferred: store imports env
+        if isinstance(source, DistTable):
+            source = SpillTable.from_dist(source)
+        elif isinstance(source, dict):
+            p = parallelism or (env.parallelism if env is not None else 1)
+            source = SpillTable.from_numpy(source, p)
+        self.spill = source
+        self.parallelism = source.parallelism
+        if morsel_rows < 1:
+            raise ValueError(f"morsel_rows must be >= 1, got {morsel_rows}")
+        self.capacity = max(8, -(-int(morsel_rows) // 8) * 8)
+        self.num_morsels = source.num_morsels(self.capacity)
+        self.h2d_bytes = 0
+        # one host-contiguous view per rank; a production backend would walk
+        # the pinned chunks with a cursor instead of concatenating
+        self._rank_cols = [source.rank_concat(r)
+                           for r in range(self.parallelism)]
+        self._names = source.column_names
+
+    def _build(self, m: int) -> Optional[DistTable]:
+        if m >= self.num_morsels:
+            return None
+        p, cap = self.parallelism, self.capacity
+        lo, hi = m * cap, (m + 1) * cap
+        counts = np.zeros((p,), np.int32)
+        cols = {}
+        for name in self._names:
+            ref = self._rank_cols[0][name]
+            buf = np.zeros((p, cap) + ref.shape[1:], ref.dtype)
+            for r in range(p):
+                piece = self._rank_cols[r][name][lo:hi]
+                buf[r, :len(piece)] = piece
+                counts[r] = len(piece)
+            self.h2d_bytes += buf.nbytes
+            cols[name] = jnp.asarray(buf.reshape((p * cap,) + ref.shape[1:]))
+        self.h2d_bytes += counts.nbytes
+        return DistTable(cols, jnp.asarray(counts), cap)
+
+    def __iter__(self):
+        nxt = self._build(0)
+        m = 1
+        while nxt is not None:
+            cur = nxt
+            nxt = self._build(m)  # prefetch: H2D for m enqueued before m-1 runs
+            m += 1
+            yield cur
+
+
+# ---------------------------------------------------------------------- #
 # The stateful environment
 # ---------------------------------------------------------------------- #
 class CylonEnv:
@@ -108,6 +182,11 @@ class CylonEnv:
         self.comm: Communicator = get_communicator(communicator, axis)
         self.communicator_name = communicator
         self._cache: Dict[Any, Callable] = {}
+        #: compile-cache observability: a miss builds (traces + compiles) a
+        #: program; a hit reuses one.  The morsel executor's per-morsel
+        #: zero-recompile invariant is asserted against these counters.
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     @property
     def parallelism(self) -> int:
@@ -147,8 +226,11 @@ class CylonEnv:
         compiled = self._cache.get(cache_key)
         boundary_args = tuple(self._to_boundary(a) for a in args)
         if compiled is None:
+            self.cache_misses += 1
             compiled = self._build(fn, args, static_kwargs)
             self._cache[cache_key] = compiled
+        else:
+            self.cache_hits += 1
         out_tree, caps = compiled(*boundary_args)
         return self._from_boundary(out_tree, caps)
 
@@ -163,11 +245,15 @@ class CylonEnv:
     def _build(self, fn, args, static_kwargs):
         env = self
         ctx = EnvContext(self.comm, self.axis)
+        # capture only the arg KINDS: closing over `args` would pin the
+        # first call's device arrays in the compile cache for the env's
+        # lifetime (the morsel executor reuses programs across many inputs)
+        is_dist = tuple(isinstance(a, DistTable) for a in args)
 
         def local_fn(*boundary_args):
             local_args = []
-            for a, b in zip(args, boundary_args):
-                if isinstance(a, DistTable):
+            for d, b in zip(is_dist, boundary_args):
+                if d:
                     cols, counts = b
                     local_args.append(Table(dict(cols), counts[0]))
                 else:

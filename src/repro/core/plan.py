@@ -119,16 +119,18 @@ class Plan:
 
     def explain(self, tables: Optional[Mapping[str, Any]] = None,
                 optimize: bool = True, mode: str = "bsp",
-                shuffle_impl: str = "radix", a2a_chunks: int = 1) -> str:
+                shuffle_impl: str = "radix", a2a_chunks: int = 1,
+                morsel_rows: Optional[int] = None) -> str:
         from ..planner import explain as planner_explain
         return planner_explain(self, tables, optimize_plan=optimize, mode=mode,
                                shuffle_impl=shuffle_impl,
-                               a2a_chunks=a2a_chunks)
+                               a2a_chunks=a2a_chunks, morsel_rows=morsel_rows)
 
 
 def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
             optimize: bool = True, collect_stats: bool = False,
-            shuffle_impl: str = "radix", a2a_chunks: int = 1):
+            shuffle_impl: str = "radix", a2a_chunks: int = 1,
+            morsel_rows: Optional[int] = None, **morsel_kw):
     """Execute a plan against DistTables.  Returns a DistTable, or
     ``(DistTable, planner.ExecStats)`` with ``collect_stats=True``.
 
@@ -138,8 +140,16 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
     ``shuffle_impl`` ("radix" sort-free | "sorted" baseline) and
     ``a2a_chunks`` (all-to-all pipeline depth) are the plan-wide shuffle
     defaults; per-node params override (see ``docs/shuffle.md``).
+
+    ``morsel_rows`` selects out-of-core morsel execution: ``tables`` may then
+    hold host-resident data (``core.SpillTable`` / numpy dicts) larger than
+    device capacity, streamed through the compiled stage DAG in
+    ``morsel_rows``-row morsels; the result is a ``SpillTable`` (see
+    ``docs/out_of_core.md``).  Extra ``morsel_kw`` (``capacity_factor``,
+    ``samples``, ``debug_overflow``) are forwarded to the morsel executor.
     """
     from ..planner import compile_plan, run_physical
     pplan = compile_plan(plan, tables, optimize_plan=optimize)
     return run_physical(pplan, env, tables, mode, collect_stats=collect_stats,
-                        shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)
+                        shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
+                        morsel_rows=morsel_rows, **morsel_kw)

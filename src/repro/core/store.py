@@ -1,37 +1,278 @@
-"""CylonStore: sharing DDF results with downstream applications (paper §IV-C).
+"""CylonStore + host-resident spill tables (paper §IV-C, extended for
+out-of-core execution).
 
-Keyed store of distributed tables.  ``get`` with a different target
-parallelism triggers the repartition routine the paper calls out: rows are
-re-split across the new gang.  The store is the hand-off point between data
-preprocessing executors and the training application (see
-``repro.data.pipeline`` / ``examples/train_e2e.py``).
+Two pieces live here:
+
+* ``SpillTable`` — the host-resident representation of a distributed table:
+  per-rank lists of contiguous numpy chunks (the spill format of the morsel
+  executor, ``docs/out_of_core.md``).  Shuffle output rows accumulate into
+  these per-destination buckets as morsels stream through a plan; the same
+  structure backs ``repartition`` as a *bucketed rescatter* (no full-table
+  host gather).
+* ``CylonStore`` — keyed store of distributed tables shared with downstream
+  applications.  ``get`` with a different target parallelism (or capacity)
+  triggers the repartition routine the paper calls out.  The store is the
+  hand-off point between data preprocessing executors and the training
+  application (see ``repro.data.pipeline`` / ``examples/train_e2e.py``).
+
+On accelerator backends the chunk arrays would live in pinned host memory
+(``jax.device_put`` to a pinned-host layout); on the CPU stand-in they are
+plain contiguous numpy buffers — the driver-visible API is identical.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
-import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .env import CylonEnv, DistTable
+from .env import DistTable
+
+
+def _round8(x: int) -> int:
+    return max(8, -(-int(x) // 8) * 8)
+
+
+# ---------------------------------------------------------------------- #
+# Host-resident spill table
+# ---------------------------------------------------------------------- #
+class SpillTable:
+    """Host-resident spill of a distributed table: per-rank chunk lists.
+
+    Each chunk is a dict of equal-length contiguous numpy arrays (one
+    morsel's worth of rows for that rank).  Rank placement is semantic —
+    chunk rows belong to that rank exactly as a ``DistTable`` shard's rows
+    do — so a ``SpillTable`` is the out-of-core twin of ``DistTable`` and
+    can hold arbitrarily many rows per rank at zero device memory.
+
+    ``schema`` (name -> (dtype, trailing shape)) is fixed at construction or
+    by the first ``append``, so empty ranks and zero-row tables keep their
+    columns and dtypes.
+    """
+
+    def __init__(self, parallelism: int,
+                 schema: Optional[Mapping[str, Tuple[np.dtype, Tuple[int, ...]]]]
+                 = None):
+        if parallelism < 1:
+            raise ValueError(f"parallelism must be >= 1, got {parallelism}")
+        self.parallelism = parallelism
+        self._chunks: List[List[Dict[str, np.ndarray]]] = \
+            [[] for _ in range(parallelism)]
+        self._schema: Optional[Dict[str, Tuple[np.dtype, Tuple[int, ...]]]] = (
+            {k: (np.dtype(d), tuple(s)) for k, (d, s) in schema.items()}
+            if schema is not None else None)
+
+    # -- schema --------------------------------------------------------- #
+    @property
+    def column_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._schema)) if self._schema else ()
+
+    @property
+    def schema(self):
+        return dict(self._schema) if self._schema else {}
+
+    def _check_schema(self, columns: Dict[str, np.ndarray]) -> None:
+        got = {k: (v.dtype, v.shape[1:]) for k, v in columns.items()}
+        if self._schema is None:
+            self._schema = got
+            return
+        if got != self._schema:
+            raise ValueError(
+                f"chunk schema {got} != spill schema {self._schema}")
+
+    # -- writing -------------------------------------------------------- #
+    def append(self, rank: int, columns: Mapping[str, np.ndarray]) -> int:
+        """Append one chunk of rows to ``rank``'s bucket; returns its bytes."""
+        cols = {k: np.ascontiguousarray(v) for k, v in columns.items()}
+        if not cols:
+            raise ValueError("cannot append a chunk with no columns")
+        n = len(next(iter(cols.values())))
+        for k, v in cols.items():
+            if len(v) != n:
+                raise ValueError(f"column {k!r} length {len(v)} != {n}")
+        self._check_schema(cols)
+        if n == 0:
+            return 0
+        self._chunks[rank].append(cols)
+        return sum(v.nbytes for v in cols.values())
+
+    # -- reading -------------------------------------------------------- #
+    def rank_chunks(self, rank: int) -> Tuple[Dict[str, np.ndarray], ...]:
+        return tuple(self._chunks[rank])
+
+    def rank_rows(self, rank: int) -> int:
+        return sum(len(next(iter(c.values()))) for c in self._chunks[rank])
+
+    def total_rows(self) -> int:
+        return sum(self.rank_rows(r) for r in range(self.parallelism))
+
+    def nbytes(self) -> int:
+        return sum(v.nbytes for chunks in self._chunks
+                   for c in chunks for v in c.values())
+
+    def _empty_cols(self) -> Dict[str, np.ndarray]:
+        return {k: np.zeros((0,) + s, d)
+                for k, (d, s) in (self._schema or {}).items()}
+
+    def rank_concat(self, rank: int) -> Dict[str, np.ndarray]:
+        chunks = self._chunks[rank]
+        if not chunks:
+            return self._empty_cols()
+        return {k: np.concatenate([c[k] for c in chunks], axis=0)
+                for k in chunks[0]}
+
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        """Gather valid rows from every rank in rank order (driver side)."""
+        parts = [self.rank_concat(r) for r in range(self.parallelism)]
+        names = self.column_names
+        if not names:
+            return {}
+        return {k: np.concatenate([p[k] for p in parts], axis=0)
+                for k in names}
+
+    def num_morsels(self, morsel_rows: int) -> int:
+        """Morsels needed to stream the widest rank at ``morsel_rows`` each."""
+        widest = max(self.rank_rows(r) for r in range(self.parallelism))
+        return max(1, -(-widest // max(1, morsel_rows)))
+
+    # -- constructors ---------------------------------------------------- #
+    @classmethod
+    def from_numpy(cls, data: Mapping[str, np.ndarray], parallelism: int,
+                   chunk_rows: Optional[int] = None) -> "SpillTable":
+        """Block-distribute host rows over ``parallelism`` rank buckets,
+        optionally pre-chunked into ``chunk_rows``-row pieces."""
+        data = {k: np.asarray(v) for k, v in data.items()}
+        if not data:
+            raise ValueError("need at least one column")
+        n = len(next(iter(data.values())))
+        per = -(-n // parallelism) if n else 0
+        out = cls(parallelism,
+                  schema={k: (v.dtype, v.shape[1:]) for k, v in data.items()})
+        for r in range(parallelism):
+            block = {k: v[r * per:(r + 1) * per] for k, v in data.items()}
+            rows = len(next(iter(block.values())))
+            step = chunk_rows or max(rows, 1)
+            for s in range(0, rows, step):
+                out.append(r, {k: v[s:s + step] for k, v in block.items()})
+        return out
+
+    @classmethod
+    def from_dist(cls, table: DistTable) -> "SpillTable":
+        """Spill a device-resident DistTable: one host chunk per rank."""
+        p, cap = table.parallelism, table.capacity
+        counts = np.asarray(table.row_counts)
+        host = {k: np.asarray(v).reshape((p, cap) + v.shape[1:])
+                for k, v in table.columns.items()}
+        out = cls(p, schema={k: (v.dtype, v.shape[2:])
+                             for k, v in host.items()})
+        for r in range(p):
+            c = int(counts[r])
+            if c:
+                out.append(r, {k: v[r, :c] for k, v in host.items()})
+        return out
+
+
+def _route_chunks(spill: SpillTable, parallelism: int
+                  ) -> List[List[Dict[str, np.ndarray]]]:
+    """Block-route every chunk's rows to per-destination bucket lists by
+    global offset (each chunk slices across at most a few destinations).
+    The single routing loop behind both ``respill`` and ``rescatter``."""
+    n = spill.total_rows()
+    per = -(-max(n, 1) // parallelism)
+    buckets: List[List[Dict[str, np.ndarray]]] = [[] for _ in range(parallelism)]
+    g = 0
+    for r in range(spill.parallelism):
+        for chunk in spill.rank_chunks(r):
+            m = len(next(iter(chunk.values())))
+            start = 0
+            while start < m:
+                dest = min((g + start) // per, parallelism - 1)
+                take = min(m - start, (dest + 1) * per - (g + start))
+                buckets[dest].append(
+                    {k: v[start:start + take] for k, v in chunk.items()})
+                start += take
+            g += m
+    return buckets
+
+
+def respill(spill: SpillTable, parallelism: int) -> SpillTable:
+    """Re-bucket a SpillTable to a different gang size, chunk by chunk.
+
+    Host-only (no device materialization — the spill may not fit a
+    ``DistTable``)."""
+    if parallelism == spill.parallelism:
+        return spill
+    out = SpillTable(parallelism, schema=spill.schema or None)
+    for dest, pieces in enumerate(_route_chunks(spill, parallelism)):
+        for piece in pieces:
+            out.append(dest, piece)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Bucketed rescatter (replaces the host-gather repartition)
+# ---------------------------------------------------------------------- #
+def rescatter(spill: SpillTable, parallelism: int,
+              capacity: Optional[int] = None) -> DistTable:
+    """SpillTable -> DistTable over a (possibly different) gang size.
+
+    Rows are routed chunk-by-chunk into per-destination host buckets by
+    their global block index — no rank's data is ever concatenated into a
+    single full-table host array, so peak extra host memory is one
+    destination shard, not the whole table.
+    """
+    n = spill.total_rows()
+    per = -(-max(n, 1) // parallelism)
+    cap = capacity if capacity is not None else _round8(per)
+    if per > cap and n > 0:
+        raise ValueError(f"rows/shard {per} exceeds capacity {cap}")
+    schema = spill.schema
+    buckets = _route_chunks(spill, parallelism)
+    cols: Dict[str, jnp.ndarray] = {}
+    counts = np.zeros((parallelism,), np.int32)
+    for name, (dtype, trail) in schema.items():
+        buf = np.zeros((parallelism, cap) + trail, dtype)
+        for d in range(parallelism):
+            pos = 0
+            for piece in buckets[d]:
+                v = piece[name]
+                buf[d, pos:pos + len(v)] = v
+                pos += len(v)
+            counts[d] = pos
+        cols[name] = jnp.asarray(
+            buf.reshape((parallelism * cap,) + trail))
+    return DistTable(cols, jnp.asarray(counts), cap)
+
+
+def repartition(table: Union[DistTable, SpillTable], parallelism: int,
+                capacity: Optional[int] = None) -> DistTable:
+    """Re-split a distributed table across a different gang size.
+
+    Host-staged via the per-destination spill buckets (``rescatter``), used
+    at application boundaries where the paper stages through NFS / the
+    object store anyway.  An explicit ``capacity`` — including ``0`` — is
+    honored verbatim (and validated), never silently replaced.
+    """
+    spill = table if isinstance(table, SpillTable) else SpillTable.from_dist(table)
+    return rescatter(spill, parallelism, capacity)
 
 
 class CylonStore:
     def __init__(self):
-        self._data: Dict[str, DistTable] = {}
+        self._data: Dict[str, Union[DistTable, SpillTable]] = {}
         self._cv = threading.Condition()
 
-    def put(self, key: str, table: DistTable) -> None:
+    def put(self, key: str, table: Union[DistTable, SpillTable]) -> None:
         with self._cv:
             self._data[key] = table
             self._cv.notify_all()
 
     def get(self, key: str, target_parallelism: Optional[int] = None,
             capacity: Optional[int] = None, timeout: Optional[float] = None
-            ) -> DistTable:
+            ) -> Union[DistTable, SpillTable]:
         """Fetch (blocking, like the paper's example) + repartition if needed."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
@@ -41,9 +282,18 @@ class CylonStore:
                     raise TimeoutError(f"CylonStore.get({key!r}) timed out")
                 self._cv.wait(timeout=remaining)
             table = self._data[key]
-        if target_parallelism is None or target_parallelism == table.parallelism:
+        same_p = (target_parallelism is None
+                  or target_parallelism == table.parallelism)
+        same_cap = (capacity is None
+                    or (isinstance(table, DistTable)
+                        and capacity == table.capacity))
+        if same_p and same_cap:
             return table
-        return repartition(table, target_parallelism, capacity)
+        return repartition(
+            table,
+            table.parallelism if target_parallelism is None
+            else target_parallelism,
+            capacity)
 
     def keys(self):
         return sorted(self._data)
@@ -51,17 +301,3 @@ class CylonStore:
     def delete(self, key: str) -> None:
         with self._cv:
             self._data.pop(key, None)
-
-
-def repartition(table: DistTable, parallelism: int,
-                capacity: Optional[int] = None) -> DistTable:
-    """Re-split a distributed table across a different gang size.
-
-    Host-staged (gather + rescatter): correctness-first, used at application
-    boundaries where the paper stages through NFS / the object store anyway.
-    """
-    data = table.to_numpy()
-    n = len(next(iter(data.values()))) if data else 0
-    per = -(-max(n, 1) // parallelism)
-    cap = capacity or max(8, -(-per // 8) * 8)
-    return DistTable.from_numpy(data, parallelism, capacity=cap)

@@ -11,7 +11,7 @@ low cardinality it slashes the collective term — both regimes are measured in
 
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -67,6 +67,19 @@ def finalize_groupby(final: Table, keys: Sequence[str],
     return Table(out_cols, final.row_count)
 
 
+def _stage2_spec(physical: Mapping[str, Sequence[str]]):
+    """Stage-2 agg spec over partial columns + the rename back to partial
+    names (so stage-2 output composes with further stage-2 passes)."""
+    stage2: Dict[str, List[str]] = {}
+    rename: Dict[str, str] = {}
+    for col, names in physical.items():
+        for a in names:
+            s2 = _DECOMP[a][1]
+            stage2[f"{col}_{a}"] = [s2]
+            rename[f"{col}_{a}_{s2}"] = f"{col}_{a}"
+    return stage2, rename
+
+
 def groupby(
     table: Table,
     comm: Communicator,
@@ -81,13 +94,7 @@ def groupby(
     if pre_aggregate:
         partial = groupby_local(table, keys, physical)
         # stage 2 operates on the partial columns
-        stage2 = {}
-        rename = {}
-        for col, names in physical.items():
-            for a in names:
-                s2 = _DECOMP[a][1]
-                stage2[f"{col}_{a}"] = [s2]
-                rename[f"{col}_{a}_{s2}"] = f"{col}_{a}"
+        stage2, rename = _stage2_spec(physical)
         shuffled, stats = shuffle(partial, comm, key_cols=list(keys), **shuffle_kw)
         final = groupby_local(shuffled, keys, stage2).rename(rename)
     else:
@@ -95,3 +102,55 @@ def groupby(
         final = groupby_local(shuffled, keys, physical)
 
     return finalize_groupby(final, keys, post), stats
+
+
+# ---------------------------------------------------------------------- #
+# Out-of-core: per-morsel partials + rank-local cross-morsel combine
+# ---------------------------------------------------------------------- #
+def groupby_partial(
+    table: Table,
+    comm: Communicator,
+    keys: Sequence[str],
+    physical: Mapping[str, Sequence[str]],
+    pre_aggregate: bool = False,
+    elide_shuffle: bool = False,
+    **shuffle_kw,
+) -> Tuple[Table, Optional[ShuffleStats]]:
+    """One morsel's contribution to a distributed groupby.
+
+    Rows are placed on their final rank (``hash(keys) % p``) and aggregated
+    into *mergeable* partial columns ``{col}_{agg}`` (mean stays sum+count;
+    no finalization).  Because the hash placement is row-wise, partials for
+    the same key land on the same rank in **every** morsel, so the
+    cross-morsel combine (``combine_groupby_partials``) is rank-local — no
+    further communication.
+    """
+    stage2, rename = _stage2_spec(physical)
+    if elide_shuffle:
+        # input already co-partitioned on the keys: local partial only
+        return groupby_local(table, keys, physical), None
+    if pre_aggregate:
+        partial = groupby_local(table, keys, physical)
+        shuffled, stats = shuffle(partial, comm, key_cols=list(keys),
+                                  **shuffle_kw)
+        return groupby_local(shuffled, keys, stage2).rename(rename), stats
+    shuffled, stats = shuffle(table, comm, key_cols=list(keys), **shuffle_kw)
+    return groupby_local(shuffled, keys, physical), stats
+
+
+def combine_groupby_partials(
+    partials: Table,
+    keys: Sequence[str],
+    physical: Mapping[str, Sequence[str]],
+    post: Sequence[Tuple[str, str, str]],
+) -> Table:
+    """Cross-morsel combiner: re-aggregate mergeable partials + finalize.
+
+    Purely local (runs per rank): the morsel layer guarantees every key's
+    partials are co-resident.  Partial aggs compose under their stage-2
+    combiner (sum of sums, min of mins, sum of counts), so this is exact
+    for any morsel split of the input.
+    """
+    stage2, rename = _stage2_spec(physical)
+    final = groupby_local(partials, keys, stage2).rename(rename)
+    return finalize_groupby(final, keys, post)

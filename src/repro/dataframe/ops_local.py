@@ -46,6 +46,36 @@ def hash_columns(table: Table, key_cols: Sequence[str]) -> jax.Array:
     return h
 
 
+def _mix32_np(h: np.ndarray) -> np.ndarray:
+    h = h.astype(np.uint32)
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def hash_columns_np(columns, key_cols: Sequence[str]) -> np.ndarray:
+    """Driver-side numpy mirror of ``hash_columns`` (bit-identical).
+
+    Used by the out-of-core executor to sub-bucket host-spilled rows by key
+    without a device round-trip; parity with the jnp version is what makes
+    host buckets agree with device rank placement."""
+    n = len(next(iter(columns.values())))
+    h = np.full((n,), 0x9E3779B9, np.uint32)
+    for name in key_cols:
+        v = np.asarray(columns[name])
+        if np.issubdtype(v.dtype, np.floating):
+            bits = v.astype(np.float32).view(np.uint32)
+        else:
+            bits = v.astype(np.uint32)
+        # same precedence as the jnp expression: ^ binds looser than +
+        h = _mix32_np(h ^ (_mix32_np(bits) + np.uint32(0x9E3779B9)
+                           + (h << np.uint32(6)) + (h >> np.uint32(2))))
+    return h
+
+
 # ---------------------------------------------------------------------- #
 # Sort keys with invalid rows pushed to the end
 # ---------------------------------------------------------------------- #
@@ -169,12 +199,16 @@ def groupby_local(table: Table, keys: Sequence[str],
 
 def join_local(left: Table, right: Table, on: str,
                out_capacity: Optional[int] = None,
-               suffix: str = "_r") -> Table:
+               suffix: str = "_r", with_overflow: bool = False):
     """Inner equi-join via sort + searchsorted (vectorized merge).
 
     Output capacity is static: ``out_capacity`` (default: left.capacity).
     Row ``o`` of the output is derived by rank-searching the cumulative
     match counts — O(cap log cap), no data-dependent shapes.
+
+    ``with_overflow=True`` additionally returns the number of result rows
+    dropped by the static capacity (free here — the total match count is a
+    byproduct of the merge — whereas ``join_overflow`` re-sorts both sides).
     """
     out_cap = out_capacity or left.capacity
     ls = sort_local(left, [on])
@@ -211,7 +245,10 @@ def join_local(left: Table, right: Table, on: str,
         tgt = name if name not in cols else name + suffix
         cols[tgt] = jnp.take(rs.columns[name], r_row, axis=0)
     out = Table(cols, jnp.minimum(total, out_cap).astype(jnp.int32))
-    return out.mask_padding()
+    out = out.mask_padding()
+    if with_overflow:
+        return out, jnp.maximum(total - out_cap, 0).astype(jnp.int32)
+    return out
 
 
 def join_overflow(left: Table, right: Table, on: str, out_capacity: int) -> jax.Array:

@@ -20,6 +20,7 @@ from .logical import (COMM_OPS, LOCAL_OPS, LogicalNode, Partitioning,
 from .rules import optimize
 from .physical import (ExecStats, PhysicalPlan, eval_node, fingerprint,
                        lower, run_physical, shuffle_allgather)
+from .morsel import run_morsel
 from .explain import explain, render
 
 
@@ -41,5 +42,5 @@ __all__ = [
     "COMM_OPS", "LOCAL_OPS", "ExecStats", "LogicalNode", "Partitioning",
     "PhysicalPlan", "annotate", "build_catalog", "compile_plan", "eval_node",
     "explain", "fingerprint", "from_plan", "lower", "optimize", "render",
-    "run_physical", "shuffle_allgather", "topo",
+    "run_morsel", "run_physical", "shuffle_allgather", "topo",
 ]

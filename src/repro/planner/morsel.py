@@ -1,0 +1,573 @@
+"""Out-of-core morsel execution: stream datasets larger than device
+capacity through the compiled stage DAG (``docs/out_of_core.md``).
+
+The in-core executor (``run_physical``) requires every partition to fit a
+fixed per-rank device capacity.  ``run_morsel`` removes that bound: the
+streamed input lives in a host-resident ``core.store.SpillTable`` and is
+driven through the plan in fixed-capacity *morsels* — one compiled program
+per plan segment, a structural-fingerprint cache hit for every morsel after
+the first — with double-buffered host->device transfer
+(``core.env.MorselSource``) and device->host spill of each morsel's output.
+
+Communication boundaries become external state transitions:
+
+* **shuffle** — hash placement is row-wise, so each morsel's shuffle lands
+  rows on their *final* rank; the driver appends every rank's received rows
+  to that rank's host spill bucket.  No cross-morsel fixup is needed.
+* **groupby** — each morsel emits mergeable partials (``{col}_{agg}``; mean
+  stays sum+count) that are hash-placed like the rows they summarize, so
+  all partials of a key share a rank.  The cross-morsel combiner
+  sub-buckets each rank's spilled partials by key hash (the driver-side
+  numpy mirror of the device hash) so every key's partials meet exactly
+  once on device, then re-aggregates + finalizes per sub-bucket.
+* **sort** — splitters are sampled ONCE from the segment's input spill and
+  broadcast to every morsel, so all morsels agree on the rank->key-range
+  map; morsels only *route* rows, and the driver runs one stable
+  vectorized sort per rank over the spilled range partition.  Cross-rank
+  tie order follows the ``by`` columns only, exactly like the in-core
+  sample sort.
+* **join** — the build (right) side is evaluated once, shuffled to its
+  final placement, and kept device-resident; the probe (left) side streams
+  against it morsel by morsel.
+
+Supported plan shape: a streamed operator chain from one scan to the root
+(``inputs[0]`` edges), with tree-shaped build sides hanging off joins.
+Explicit-``dest`` shuffles are row-aligned with the full table and cannot
+stream.
+
+Device memory is bounded by the *working capacity* ``W = capacity_factor x
+morsel_rows`` (shuffle receive / join output headroom), the resident build
+sides, and the groupby combine sub-bucket size — never by the streamed
+input.  Capacity pressure drops are ALWAYS counted (the morsel programs
+collect the overflow triple unconditionally): a run that dropped rows
+raises a ``RuntimeWarning`` and reports ``ExecStats.rows_dropped`` — raise
+``capacity_factor`` (skewed keys, exploding joins) to fix it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.env import DistTable, MorselSource
+from ..core.store import SpillTable, _round8
+from ..dataframe import ops_local
+from ..dataframe.groupby import (_normalize, combine_groupby_partials,
+                                 groupby_partial)
+from ..dataframe.ops_local import hash_columns_np
+from ..dataframe.shuffle import shuffle as df_shuffle
+from ..dataframe.table import Table
+from .logical import LogicalNode, topo
+from .physical import (ExecStats, PhysicalPlan, _row_bytes, _shuffle_kw,
+                       _stat_vec, _sum_stats, _token, eval_node, fingerprint)
+
+
+@dataclasses.dataclass
+class _Acc:
+    """Driver-side transfer/dispatch accounting for one morsel run."""
+
+    morsels: int = 0
+    dispatches: int = 0
+    spill_bytes: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+
+
+# ---------------------------------------------------------------------- #
+# Plan-shape analysis
+# ---------------------------------------------------------------------- #
+def spine(pplan: PhysicalPlan) -> List[LogicalNode]:
+    """The streamed operator chain: scan -> ... -> root along inputs[0]."""
+    chain: List[LogicalNode] = []
+    n = pplan.root
+    while True:
+        chain.append(n)
+        if not n.inputs:
+            break
+        n = n.inputs[0]
+    chain.reverse()
+    if chain[0].op != "scan":
+        raise ValueError(
+            "out-of-core execution streams along inputs[0] edges and needs "
+            f"a scan at the head; found {chain[0].op!r}")
+    spine_ids = {c.nid for c in chain}
+    covered = set(spine_ids)
+    for c in chain:
+        if c.op == "shuffle" and "dest" in c.params:
+            raise ValueError(
+                "explicit-dest shuffles are row-aligned with the full table "
+                "and cannot stream; use key_cols")
+        if c.op == "join":
+            sub_ids = {s.nid for s in topo(c.inputs[1])}
+            if sub_ids & spine_ids:
+                raise ValueError(
+                    "out-of-core execution needs tree-shaped build sides "
+                    "(the join build side shares nodes with the streamed "
+                    "chain)")
+            covered |= sub_ids
+    extra = sorted(n.op for n in pplan.order if n.nid not in covered)
+    if extra:
+        raise ValueError(
+            f"nodes unreachable from the streamed chain: {extra}")
+    return chain
+
+
+def segments(chain_tail: Sequence[LogicalNode]
+             ) -> List[Tuple[List[LogicalNode], str]]:
+    """Split the post-scan chain into morsel-program segments.
+
+    A segment runs per-morsel with no cross-morsel interaction except its
+    terminal combiner: ``groupby`` ends its segment (partials -> combine),
+    ``sort`` forms its own segment (its input spill must be materialized so
+    splitters can be sampled once; outputs are merged).  Everything else
+    streams straight through (``stream`` terminal).
+    """
+    segs: List[Tuple[List[LogicalNode], str]] = []
+    cur: List[LogicalNode] = []
+    for n in chain_tail:
+        if n.op == "sort":
+            if cur:
+                segs.append((cur, "stream"))
+                cur = []
+            segs.append(([n], "sort"))
+        elif n.op == "groupby":
+            cur.append(n)
+            segs.append((cur, "groupby"))
+            cur = []
+        else:
+            cur.append(n)
+    if cur:
+        segs.append((cur, "stream"))
+    return segs
+
+
+# ---------------------------------------------------------------------- #
+# Host-side helpers
+# ---------------------------------------------------------------------- #
+def _as_spill(source: Any, parallelism: int) -> SpillTable:
+    from ..core.store import respill
+    if isinstance(source, DistTable):
+        source = SpillTable.from_dist(source)
+    elif isinstance(source, dict):
+        source = SpillTable.from_numpy(source, parallelism)
+    elif not isinstance(source, SpillTable):
+        raise TypeError(f"cannot stream a {type(source).__name__}")
+    # a spill bucketed for a different gang would silently lose every rank
+    # beyond this env's mesh — re-bucket host-side
+    return respill(source, parallelism)
+
+
+def _to_dist(source: Any, parallelism: int) -> DistTable:
+    """Build-side inputs must be device-resident (they are assumed to fit)."""
+    if isinstance(source, DistTable):
+        return source
+    from ..core.store import rescatter
+    if isinstance(source, dict):
+        source = SpillTable.from_numpy(source, parallelism)
+    return rescatter(source, parallelism)  # handles any spill gang size
+
+
+def _schema_of(dist: DistTable) -> Dict[str, Tuple[np.dtype, Tuple[int, ...]]]:
+    p, cap = dist.parallelism, dist.capacity
+    return {k: (np.dtype(v.dtype), tuple(v.shape[1:]))
+            for k, v in dist.columns.items()}
+
+
+def _append_out(out_spill: SpillTable, dist: DistTable, acc: _Acc) -> None:
+    """Spill one morsel-output DistTable to per-rank host buckets (D2H)."""
+    p, cap = dist.parallelism, dist.capacity
+    counts = np.asarray(dist.row_counts)
+    acc.d2h_bytes += counts.nbytes
+    host = {}
+    for name, arr in dist.columns.items():
+        a = np.asarray(arr)
+        acc.d2h_bytes += a.nbytes
+        host[name] = a.reshape((p, cap) + a.shape[1:])
+    for r in range(p):
+        c = int(counts[r])
+        if c:
+            acc.spill_bytes += out_spill.append(
+                r, {k: v[r, :c] for k, v in host.items()})
+
+
+def _host_splitters(spill: SpillTable, col: str, p: int,
+                    samples: int) -> np.ndarray:
+    """Fixed global splitters for an out-of-core sample sort: per-rank
+    evenly-spaced samples pooled into p-1 global quantiles (the driver-side
+    twin of ``dataframe.sort._sample_splitters``)."""
+    pool = []
+    for r in range(spill.parallelism):
+        keys = spill.rank_concat(r)[col]
+        n = len(keys)
+        if n:
+            k = np.sort(keys)
+            take = min(samples, n)
+            idx = (np.arange(take) * n) // take
+            pool.append(k[idx])
+    if not pool:
+        dtype, _ = spill.schema[col]
+        return np.zeros((max(p - 1, 0),), dtype)
+    pooled = np.sort(np.concatenate(pool))
+    qpos = (np.arange(1, p) * len(pooled)) // p
+    return pooled[qpos]
+
+
+def _host_sort_ranks(spill: SpillTable, by: Sequence[str]) -> SpillTable:
+    """Cross-morsel sort combiner: one stable vectorized host sort per rank
+    over the range-partitioned rows.  The morsel programs only *route* rows
+    (pre-sorting runs on device would be wasted — a vectorized lexsort over
+    the concatenation beats a per-row Python k-way merge, and stability
+    preserves arrival order for ties)."""
+    out = SpillTable(spill.parallelism, schema=spill.schema)
+    for r in range(spill.parallelism):
+        cols = spill.rank_concat(r)
+        n = len(next(iter(cols.values()))) if cols else 0
+        if n:
+            order = np.lexsort(tuple(cols[b] for b in reversed(tuple(by))))
+            out.append(r, {k: v[order] for k, v in cols.items()})
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Morsel-program node evaluation (runs inside shard_map)
+# ---------------------------------------------------------------------- #
+def _morsel_shuffle_kw(node: LogicalNode, W: int, shuffle_impl: str,
+                       a2a_chunks: int, debug_overflow: bool
+                       ) -> Dict[str, Any]:
+    """Shuffle kwargs for a morsel program: plan-level capacities (sized for
+    in-core tables) are replaced by the working capacity ``W``."""
+    kw = _shuffle_kw(node)
+    for k in ("bucket_capacity", "out_capacity", "samples"):
+        kw.pop(k, None)
+    kw["bucket_capacity"] = W
+    kw.setdefault("impl", shuffle_impl)
+    kw.setdefault("a2a_chunks", a2a_chunks)
+    if debug_overflow:
+        kw.setdefault("debug_overflow", True)
+    return kw
+
+
+def _groupby_wire_width(table: Table, keys, physical, pre: bool) -> int:
+    if not pre:
+        return _row_bytes(table)
+    width = sum(table.columns[k].dtype.itemsize for k in keys)
+    for col, names in physical.items():
+        width += sum(4 if a == "count" else table.columns[col].dtype.itemsize
+                     for a in names)
+    return width
+
+
+def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
+                      residents: Dict[int, Table], W: int,
+                      shuffle_impl: str, a2a_chunks: int,
+                      stats_out, debug_overflow: bool) -> Table:
+    p_ = node.params
+    if node.op == "noop":
+        return cur
+    if node.op == "project":
+        return cur.select(p_["cols"])
+    if node.op == "filter":
+        return ops_local.filter_rows(cur, p_["pred"])
+    if node.op == "map_columns":
+        return ops_local.map_columns(cur, p_["fn"], p_["cols"])
+    if node.op == "add_scalar":
+        return ops_local.add_scalar(cur, p_["value"], p_.get("cols"))
+
+    # communication ops: capacities are re-derived from the morsel working
+    # capacity W — plan-level bucket/out capacities describe in-core tables.
+    # bucket_capacity = W lets a single destination absorb a whole morsel
+    # (already-placed inputs route every row to the self bucket).
+    kw = _morsel_shuffle_kw(node, W, shuffle_impl, a2a_chunks, debug_overflow)
+
+    if node.op == "shuffle":
+        out, st = df_shuffle(cur, ctx.comm, key_cols=p_["key_cols"],
+                             out_capacity=W, **kw)
+        stats_out.append((f"shuffle({','.join(p_['key_cols'])})",
+                          _stat_vec(st, _row_bytes(cur))))
+        return out
+
+    if node.op == "join":
+        on = p_["on"]
+        l, r = cur, residents[node.nid]
+        if not p_.get("elide_left"):
+            l, st = df_shuffle(l, ctx.comm, key_cols=[on], out_capacity=W,
+                               **kw)
+            stats_out.append((f"join({on}):left",
+                              _stat_vec(st, _row_bytes(cur))))
+        out_cap = p_.get("morsel_out_capacity") or W
+        out, ov = ops_local.join_local(l, r, on, out_capacity=out_cap,
+                                       with_overflow=True)
+        z = jnp.zeros((), jnp.int32)
+        stats_out.append((f"join({on}):overflow", jnp.stack([z, z, ov])))
+        return out
+
+    if node.op == "groupby":
+        keys = list(p_["keys"])
+        physical, _post = _normalize(p_["aggs"])
+        pre = bool(p_.get("pre_aggregate", False))
+        out, st = groupby_partial(cur, ctx.comm, keys, physical,
+                                  pre_aggregate=pre,
+                                  elide_shuffle=bool(p_.get("elide_shuffle")),
+                                  out_capacity=W, **kw)
+        if st is not None:
+            stats_out.append(
+                (f"groupby({','.join(keys)})",
+                 _stat_vec(st, _groupby_wire_width(cur, keys, physical, pre))))
+        return out
+
+    raise ValueError(f"op {node.op!r} cannot run in a morsel segment")
+
+
+# ---------------------------------------------------------------------- #
+# Program builders (each compiled once per segment, reused per morsel).
+# Every program returns (table, stat triples) — overflow accounting is
+# unconditional so capacity-pressure drops are never silent.
+# ---------------------------------------------------------------------- #
+def _make_stream_prog(seg_nodes, join_nids, W, shuffle_impl, a2a_chunks,
+                      debug_overflow):
+    def prog(ctx, morsel, *extras):
+        residents = dict(zip(join_nids, extras))
+        stats: List[Tuple[str, Any]] = []
+        cur = morsel
+        for node in seg_nodes:
+            cur = _eval_stream_node(node, ctx, cur, residents, W,
+                                    shuffle_impl, a2a_chunks, stats,
+                                    debug_overflow)
+        return cur, tuple(a for _, a in stats)
+    return prog
+
+
+def _make_sort_prog(node, W, shuffle_impl, a2a_chunks, debug_overflow):
+    """Range-route one morsel by the broadcast splitters.  No device-side
+    sort: the host combiner (``_host_sort_ranks``) orders each rank."""
+    by = tuple(node.params["by"])
+    kw = _morsel_shuffle_kw(node, W, shuffle_impl, a2a_chunks, debug_overflow)
+
+    def prog(ctx, morsel, splitters):
+        key = morsel.columns[by[0]]
+        dest = jnp.searchsorted(splitters, key,
+                                side="right").astype(jnp.int32)
+        shuffled, st = df_shuffle(morsel, ctx.comm, dest=dest,
+                                  out_capacity=W, **kw)
+        return shuffled, (_stat_vec(st, _row_bytes(morsel)),)
+    return prog
+
+
+# ---------------------------------------------------------------------- #
+# Resident build sides (join right inputs; assumed to fit on device)
+# ---------------------------------------------------------------------- #
+def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
+                    a2a_chunks, collected, acc: _Acc,
+                    capacity_factor: float) -> DistTable:
+    rroot = jnode.inputs[1]
+    sub_order = topo(rroot)
+    scan_names = [s.params["name"] for s in sub_order if s.op == "scan"]
+    on = jnode.params["on"]
+    elide = bool(jnode.params.get("elide_right"))
+    jkw = {k: v for k, v in _shuffle_kw(jnode).items()
+           if k != "out_capacity"}
+    jkw.setdefault("impl", shuffle_impl)
+    jkw.setdefault("a2a_chunks", a2a_chunks)
+    if "shuffle_out_capacity" in jnode.params:
+        jkw["out_capacity"] = jnode.params["shuffle_out_capacity"]
+
+    def prog(ctx, *local_tables):
+        tmap = dict(zip(scan_names, local_tables))
+        values: Dict[int, Table] = {}
+        stats: List[Tuple[str, Any]] = []
+        for node in sub_order:
+            values[node.nid] = eval_node(
+                node, ctx.comm, values, tmap, "direct", stats,
+                shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)
+        r = values[rroot.nid]
+        if not elide:
+            width = _row_bytes(r)
+            # receive headroom: hash placement is only balanced in
+            # expectation, so a capacity-tight build table would drop rows
+            jkw.setdefault("out_capacity",
+                           _round8(int(r.capacity * capacity_factor)))
+            jkw.setdefault("bucket_capacity",
+                           _round8(int(r.capacity * capacity_factor)))
+            r, st = df_shuffle(r, ctx.comm, key_cols=[on], **jkw)
+            stats.append((f"join({on}):right", _stat_vec(st, width)))
+        return r, tuple(a for _, a in stats)
+
+    args = [_to_dist(tables[n], env.parallelism) for n in scan_names]
+    resident, stats = env.run(
+        prog, *args,
+        key=("morsel-resident", fingerprint(rroot),
+             # the subtree fingerprint does not cover the join node's own
+             # params (shuffle kwargs, capacities)
+             _token(dict(jnode.params)),
+             env.communicator_name, shuffle_impl, a2a_chunks,
+             capacity_factor, tuple(env._arg_sig(a) for a in args)))
+    acc.dispatches += 1
+    collected.extend(stats)
+    return resident
+
+
+# ---------------------------------------------------------------------- #
+# Cross-morsel groupby combine (hash sub-buckets, rank-local)
+# ---------------------------------------------------------------------- #
+def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
+                     M: int, acc: _Acc, fp: str, si: int) -> SpillTable:
+    keys = list(gnode.params["keys"])
+    physical, post = _normalize(gnode.params["aggs"])
+    p = part_spill.parallelism
+    widest = max(part_spill.rank_rows(r) for r in range(p))
+    B = max(1, -(-widest // M))
+
+    # driver-side sub-bucketing: (hash // p) decorrelates from the rank
+    # placement (hash % p), so buckets stay balanced on hash-placed ranks.
+    # One stable argsort groups each rank's rows by bucket — O(n log n),
+    # not O(B*n) repeated mask scans
+    rank_sorted: List[Dict[str, np.ndarray]] = []
+    rank_offsets: List[np.ndarray] = []
+    max_bucket = 1
+    for r in range(p):
+        cols_r = part_spill.rank_concat(r)
+        n = len(next(iter(cols_r.values())))
+        if n:
+            h = hash_columns_np(cols_r, keys)
+            sub = ((h // np.uint32(p)) % np.uint32(B)).astype(np.int64)
+            counts_r = np.bincount(sub, minlength=B)
+            order = np.argsort(sub, kind="stable")
+            cols_r = {k: v[order] for k, v in cols_r.items()}
+        else:
+            counts_r = np.zeros((B,), np.int64)
+        max_bucket = max(max_bucket, int(counts_r.max()))
+        rank_sorted.append(cols_r)
+        rank_offsets.append(np.concatenate([[0], np.cumsum(counts_r)]))
+    cap_b = _round8(max_bucket)
+
+    def prog(ctx, partials):
+        return combine_groupby_partials(partials, keys, physical, post)
+
+    out_spill: Optional[SpillTable] = None
+    schema = part_spill.schema
+    for b in range(B):
+        counts = np.zeros((p,), np.int32)
+        cols: Dict[str, jnp.ndarray] = {}
+        for name, (dtype, trail) in schema.items():
+            buf = np.zeros((p, cap_b) + trail, dtype)
+            for r in range(p):
+                lo, hi = rank_offsets[r][b], rank_offsets[r][b + 1]
+                sel = rank_sorted[r][name][lo:hi]
+                buf[r, :len(sel)] = sel
+                counts[r] = len(sel)
+            acc.h2d_bytes += buf.nbytes
+            cols[name] = jnp.asarray(buf.reshape((p * cap_b,) + trail))
+        acc.h2d_bytes += counts.nbytes
+        dist = DistTable(cols, jnp.asarray(counts), cap_b)
+        out = env.run(prog, dist,
+                      key=("morsel-combine", fp, si, cap_b,
+                           env.communicator_name,
+                           env._arg_sig(dist)))
+        acc.dispatches += 1
+        if out_spill is None:
+            out_spill = SpillTable(p, schema=_schema_of(out))
+        _append_out(out_spill, out, acc)
+    return out_spill
+
+
+# ---------------------------------------------------------------------- #
+# Driver
+# ---------------------------------------------------------------------- #
+def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
+               morsel_rows: int, mode: str = "bsp",
+               collect_stats: bool = False, shuffle_impl: str = "radix",
+               a2a_chunks: int = 1, capacity_factor: float = 2.0,
+               samples: int = 64, debug_overflow: bool = False):
+    """Stream a plan over morsels of ``morsel_rows`` rows per rank.
+
+    Returns a host-resident ``SpillTable`` (or ``(SpillTable, ExecStats)``
+    with ``collect_stats=True``).  Device memory is bounded by the working
+    capacity ``W = capacity_factor * morsel_rows`` plus resident build
+    sides, independent of the streamed input size.
+    """
+    if mode == "amt":
+        raise ValueError(
+            "out-of-core morsel execution requires direct shuffles; the "
+            "amt allgather baseline is inherently in-core")
+    p = env.parallelism
+    chain = spine(pplan)
+    src_name = chain[0].params["name"]
+    if src_name not in tables:
+        raise KeyError(f"plan scans missing from tables: [{src_name!r}]")
+    M = _round8(morsel_rows)
+    W = max(M, _round8(int(M * capacity_factor)))
+    fp = pplan.fingerprint
+    acc = _Acc()
+    collected: List[Any] = []
+    hits0, misses0 = env.cache_hits, env.cache_misses
+
+    residents = {
+        node.nid: _build_resident(env, node, tables, shuffle_impl,
+                                  a2a_chunks, collected, acc,
+                                  capacity_factor)
+        for node in chain if node.op == "join"}
+
+    spill = _as_spill(tables[src_name], p)
+    for si, (nodes, terminal) in enumerate(segments(chain[1:])):
+        if terminal == "sort":
+            node = nodes[0]
+            by = node.params["by"]
+            if node.params.get("elide_shuffle"):
+                # range-partitioned already: no device work, just order
+                spill = _host_sort_ranks(spill, by)
+                continue
+            spl = _host_splitters(spill, by[0], p,
+                                  node.params.get("samples", samples))
+            extras: Tuple[Any, ...] = (jnp.asarray(spl),)
+            acc.h2d_bytes += spl.nbytes
+            prog = _make_sort_prog(node, W, shuffle_impl, a2a_chunks,
+                                   debug_overflow)
+        else:
+            join_nodes = [n for n in nodes if n.op == "join"]
+            extras = tuple(residents[n.nid] for n in join_nodes)
+            prog = _make_stream_prog(nodes, [n.nid for n in join_nodes],
+                                     W, shuffle_impl, a2a_chunks,
+                                     debug_overflow)
+        key = ("morsel-seg", fp, si, M, W, shuffle_impl, a2a_chunks,
+               env.communicator_name, debug_overflow,
+               tuple(env._arg_sig(e) for e in extras))
+        source = MorselSource(spill, M, env)
+        out_spill: Optional[SpillTable] = None
+        for morsel in source:
+            out, unit_stats = env.run(prog, morsel, *extras, key=key)
+            acc.dispatches += 1
+            acc.morsels += 1
+            collected.extend(unit_stats)
+            if out_spill is None:
+                out_spill = SpillTable(p, schema=_schema_of(out))
+            _append_out(out_spill, out, acc)
+        acc.h2d_bytes += source.h2d_bytes
+        spill = out_spill
+        if terminal == "groupby":
+            spill = _combine_groupby(env, spill, nodes[-1], M, acc, fp, si)
+        elif terminal == "sort":
+            spill = _host_sort_ranks(spill, by)
+
+    rows, byts, dropped = _sum_stats(collected)
+    if dropped:
+        warnings.warn(
+            f"out-of-core execution dropped {dropped} rows to capacity "
+            f"pressure — raise capacity_factor (currently "
+            f"{capacity_factor}) or morsel_rows",
+            RuntimeWarning, stacklevel=2)
+    if not collect_stats:
+        return spill
+    stats = ExecStats(
+        "morsel", pplan.num_stages, pplan.num_shuffles, acc.dispatches,
+        rows, byts, pplan.shuffle_labels(), pplan.fired,
+        shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
+        rows_dropped=dropped,
+        cache_hits=env.cache_hits - hits0,
+        cache_misses=env.cache_misses - misses0,
+        morsel_rows=M, morsels=acc.morsels, spill_bytes=acc.spill_bytes,
+        h2d_bytes=acc.h2d_bytes, d2h_bytes=acc.d2h_bytes)
+    return spill, stats

@@ -46,7 +46,7 @@ from .logical import LogicalNode, topo
 #: param keys that are operator semantics, not shuffle kwargs
 _SEMANTIC = {
     "join": ("on", "out_capacity", "shuffle_out_capacity", "elide_left",
-             "elide_right", "side_selected"),
+             "elide_right", "side_selected", "morsel_out_capacity"),
     "groupby": ("keys", "aggs", "elide_shuffle", "pre_aggregate"),
     "sort": ("by", "elide_shuffle"),
     "shuffle": ("key_cols",),
@@ -180,7 +180,8 @@ def shuffle_allgather(table: Table, comm: Communicator,
     sent = jax.ops.segment_sum(jnp.ones((cap,), jnp.int32), dest,
                                num_segments=p + 1)[:p]
     stats = ShuffleStats(sent, sent, jnp.asarray(0, jnp.int32),
-                         jnp.maximum(jnp.sum(keep) - out_cap, 0),
+                         jnp.maximum(jnp.sum(keep) - out_cap, 0)
+                         .astype(jnp.int32),
                          shuffle_impl="allgather")
     return Table(cols, new_count).mask_padding(), stats
 
@@ -188,6 +189,14 @@ def shuffle_allgather(table: Table, comm: Communicator,
 def _row_bytes(table: Table) -> int:
     return sum(int(v.dtype.itemsize) * math.prod(v.shape[1:])
                for v in table.columns.values())
+
+
+def _stat_vec(st: ShuffleStats, width: int) -> jax.Array:
+    """(rows sent, bytes sent, rows dropped) — the per-shuffle stats triple
+    collected inside the program and summed driver-side."""
+    rows = jnp.sum(st.sent_counts)
+    dropped = (st.send_dropped + st.recv_dropped).astype(jnp.int32)
+    return jnp.stack([rows, rows * width, dropped])
 
 
 # ---------------------------------------------------------------------- #
@@ -212,9 +221,7 @@ def eval_node(node: LogicalNode, comm: Communicator,
     def run_shuffle(label: str, table: Table, **kw) -> Table:
         out, st = shuffle_fn(table, comm, **kw)
         if stats_out is not None:
-            rows = jnp.sum(st.sent_counts)
-            stats_out.append(
-                (label, jnp.stack([rows, rows * _row_bytes(table)])))
+            stats_out.append((label, _stat_vec(st, _row_bytes(table))))
         return out
 
     if node.op == "scan":
@@ -255,6 +262,13 @@ def eval_node(node: LogicalNode, comm: Communicator,
             l = run_shuffle(f"join({on}):left", l, key_cols=[on], **jkw)
         if not p.get("elide_right"):
             r = run_shuffle(f"join({on}):right", r, key_cols=[on], **jkw)
+        if stats_out is not None:
+            out, ov = ops_local.join_local(l, r, on,
+                                           out_capacity=p.get("out_capacity"),
+                                           with_overflow=True)
+            z = jnp.zeros((), jnp.int32)
+            stats_out.append((f"join({on}):overflow", jnp.stack([z, z, ov])))
+            return out
         return ops_local.join_local(l, r, on,
                                     out_capacity=p.get("out_capacity"))
 
@@ -270,7 +284,6 @@ def eval_node(node: LogicalNode, comm: Communicator,
             out, st = df_groupby(ins[0], comm, keys, aggs,
                                  pre_aggregate=pre, **kw)
             if stats_out is not None:
-                rows = jnp.sum(st.sent_counts)
                 if pre:
                     # the wire carries keys + stage-1 partial-agg columns
                     width = sum(ins[0].columns[k].dtype.itemsize for k in keys)
@@ -281,7 +294,7 @@ def eval_node(node: LogicalNode, comm: Communicator,
                 else:
                     width = _row_bytes(ins[0])
                 stats_out.append((f"groupby({','.join(keys)})",
-                                  jnp.stack([rows, rows * width])))
+                                  _stat_vec(st, width)))
             return out
         # AMT path: ship raw rows (Dask-style task granularity, no pre-agg)
         shuffled = run_shuffle(f"groupby({','.join(keys)})", ins[0],
@@ -298,9 +311,8 @@ def eval_node(node: LogicalNode, comm: Communicator,
         if shuffle_mode == "direct":
             out, st = df_sort(ins[0], comm, by, **kw)
             if stats_out is not None:
-                rows = jnp.sum(st.sent_counts)
                 stats_out.append((f"sort({','.join(by)})",
-                                  jnp.stack([rows, rows * _row_bytes(ins[0])])))
+                                  _stat_vec(st, _row_bytes(ins[0]))))
             return out
         key = ins[0].columns[by[0]]
         splitters = _sample_splitters(key, ins[0].row_count, comm,
@@ -330,20 +342,33 @@ class ExecStats:
     fired: Tuple[str, ...]
     shuffle_impl: str = "radix"   # bucketize path: radix | sorted | allgather
     a2a_chunks: int = 1           # all-to-all pipeline depth
+    #: rows lost to capacity pressure anywhere in the plan (send buckets,
+    #: receive tables, join output) — deterministic post-hoc overflow check;
+    #: 0 for a correctly-capacitated run
+    rows_dropped: int = 0
+    #: compile-cache traffic during this execution (CylonEnv counters delta)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    # -- out-of-core morsel execution only (see docs/out_of_core.md) ----- #
+    morsel_rows: Optional[int] = None  # per-rank morsel capacity, None=in-core
+    morsels: int = 0                   # morsel program dispatches
+    spill_bytes: int = 0               # valid rows written to host spill
+    h2d_bytes: int = 0                 # host->device morsel transfer bytes
+    d2h_bytes: int = 0                 # device->host spill transfer bytes
 
 
-def _sum_stats(collected) -> Tuple[int, int]:
-    """``collected``: list of (p, 2) arrays -> (total rows, total bytes)."""
-    rows = sum(int(np.asarray(a).reshape(-1, 2)[:, 0].sum())
-               for a in collected)
-    byts = sum(int(np.asarray(a).reshape(-1, 2)[:, 1].sum())
-               for a in collected)
-    return rows, byts
+def _sum_stats(collected) -> Tuple[int, int, int]:
+    """``collected``: (p, 3) arrays -> (rows sent, bytes sent, rows dropped)."""
+    tot = np.zeros((3,), np.int64)
+    for a in collected:
+        tot += np.asarray(a).reshape(-1, 3).sum(axis=0)
+    return int(tot[0]), int(tot[1]), int(tot[2])
 
 
 def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                  mode: str = "bsp", collect_stats: bool = False,
-                 shuffle_impl: str = "radix", a2a_chunks: int = 1):
+                 shuffle_impl: str = "radix", a2a_chunks: int = 1,
+                 morsel_rows: Optional[int] = None, **morsel_kw):
     """Execute a lowered plan against DistTables on a ``CylonEnv``.
 
     Returns a DistTable, or ``(DistTable, ExecStats)`` with
@@ -351,7 +376,22 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     plan-wide shuffle defaults (per-node params override); both are part of
     the compile-cache key and recorded in the stats so benchmark output can
     attribute wins.
+
+    ``morsel_rows`` switches to the out-of-core morsel executor
+    (``planner.morsel.run_morsel``): the input is streamed through the
+    compiled stage DAG in fixed-capacity morsels and the result is returned
+    as a host-resident ``core.store.SpillTable``.  Extra ``morsel_kw``
+    (``capacity_factor``, ``samples``, ``debug_overflow``) are forwarded.
     """
+    if morsel_rows is not None:
+        from .morsel import run_morsel
+        return run_morsel(pplan, env, tables, morsel_rows, mode=mode,
+                          collect_stats=collect_stats,
+                          shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
+                          **morsel_kw)
+    if morsel_kw:
+        raise TypeError(f"unexpected kwargs without morsel_rows: "
+                        f"{sorted(morsel_kw)}")
     names = pplan.scan_names
     missing = [n for n in names if n not in tables]
     if missing:
@@ -361,15 +401,18 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     fp = pplan.fingerprint
     shuffle_mode = "allgather" if mode == "amt" else "direct"
     eval_kw = dict(shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)
+    hits0, misses0 = env.cache_hits, env.cache_misses
 
     def mk_stats(dispatches: int, collected) -> ExecStats:
-        rows, byts = _sum_stats(collected)
+        rows, byts, dropped = _sum_stats(collected)
         return ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
                          dispatches, rows, byts, pplan.shuffle_labels(),
                          pplan.fired,
                          shuffle_impl=("allgather" if mode == "amt"
                                        else shuffle_impl),
-                         a2a_chunks=a2a_chunks)
+                         a2a_chunks=a2a_chunks, rows_dropped=dropped,
+                         cache_hits=env.cache_hits - hits0,
+                         cache_misses=env.cache_misses - misses0)
 
     if mode == "bsp":
         def prog(ctx, *local_tables):

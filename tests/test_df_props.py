@@ -1,0 +1,284 @@
+"""Pandas-oracle tests for distributed join / groupby / sort end-to-end.
+
+Ranks are simulated with ``jax.vmap(axis_name=...)`` on the single test
+device (the same harness as the shuffle property tests), so multi-rank
+behaviour — empty ranks, skewed keys, duplicate keys, exact-capacity
+tables, multi-dtype columns — is exercised without a subprocess.
+
+Two tiers:
+
+* fixed-case tests (always run): handpicked adversarial cases through the
+  same checkers,
+* hypothesis property tests (skipped when hypothesis is absent; CI
+  installs it): randomized tables against the pandas oracle.
+"""
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.comm import get_communicator  # noqa: E402
+from repro.dataframe import Table, join_local, shuffle  # noqa: E402
+from repro.dataframe.groupby import groupby as df_groupby  # noqa: E402
+from repro.dataframe.sort import sort as df_sort  # noqa: E402
+
+CAP = 16  # per-rank capacity; small so exact-capacity cases are cheap
+
+
+def _mk_rank_arrays(rows_per_rank, cols):
+    """rows_per_rank: list (len p) of dicts of 1-D arrays -> (p, CAP) stack
+    plus (p,) counts.  Rows beyond a rank's count are zero padding."""
+    p = len(rows_per_rank)
+    counts = np.array([len(next(iter(r.values()))) if r else 0
+                       for r in rows_per_rank], np.int32)
+    out = {}
+    for name, dtype in cols.items():
+        buf = np.zeros((p, CAP), dtype)
+        for r, rows in enumerate(rows_per_rank):
+            if counts[r]:
+                buf[r, :counts[r]] = np.asarray(rows[name], dtype)
+        out[name] = buf
+    return out, counts
+
+
+def _gather(cols_out, counts_out):
+    """(p, cap) device outputs + (p,) counts -> host dict of valid rows in
+    rank order."""
+    counts = np.asarray(counts_out)
+    return {k: np.concatenate([np.asarray(v)[r, :counts[r]]
+                               for r in range(len(counts))])
+            for k, v in cols_out.items()}
+
+
+def _sorted_records(d, keys):
+    order = np.lexsort(tuple(d[k] for k in reversed(keys)))
+    return {k: v[order] for k, v in d.items()}
+
+
+def _assert_same_records(got, want, keys):
+    assert sorted(got) == sorted(want)
+    g, w = _sorted_records(got, keys), _sorted_records(want, keys)
+    for c in want:
+        np.testing.assert_array_equal(g[c], w[c], err_msg=c)
+
+
+# ---------------------------------------------------------------------- #
+# Distributed drivers (vmap-simulated ranks)
+# ---------------------------------------------------------------------- #
+def _dist_join(p, lranks, rranks):
+    comm = get_communicator("xla", "df")
+    lcols, lcounts = _mk_rank_arrays(
+        lranks, {"k": np.int32, "v": np.float32, "i": np.int32})
+    rcols, rcounts = _mk_rank_arrays(
+        rranks, {"k": np.int32, "w": np.float32, "u": np.uint32})
+
+    def f(lk, lv, li, lc, rk, rw, ru, rc):
+        lt = Table({"k": lk, "v": lv, "i": li}, lc)
+        rt = Table({"k": rk, "w": rw, "u": ru}, rc)
+        kw = dict(bucket_capacity=CAP, out_capacity=p * CAP)
+        ls, _ = shuffle(lt, comm, key_cols=["k"], **kw)
+        rs, _ = shuffle(rt, comm, key_cols=["k"], **kw)
+        out = join_local(ls, rs, "k", out_capacity=(p * CAP) ** 2)
+        return dict(out.columns), out.row_count
+
+    cols, counts = jax.vmap(f, axis_name="df")(
+        jnp.asarray(lcols["k"]), jnp.asarray(lcols["v"]),
+        jnp.asarray(lcols["i"]), jnp.asarray(lcounts),
+        jnp.asarray(rcols["k"]), jnp.asarray(rcols["w"]),
+        jnp.asarray(rcols["u"]), jnp.asarray(rcounts))
+    return _gather(cols, counts)
+
+
+def _dist_groupby(p, ranks, aggs):
+    comm = get_communicator("xla", "df")
+    cols, counts = _mk_rank_arrays(
+        ranks, {"k": np.int32, "v": np.float32})
+
+    def f(k, v, c):
+        t = Table({"k": k, "v": v}, c)
+        out, _ = df_groupby(t, comm, ["k"], aggs, pre_aggregate=True,
+                            bucket_capacity=CAP, out_capacity=p * CAP)
+        return dict(out.columns), out.row_count
+
+    out_cols, out_counts = jax.vmap(f, axis_name="df")(
+        jnp.asarray(cols["k"]), jnp.asarray(cols["v"]), jnp.asarray(counts))
+    return _gather(out_cols, out_counts)
+
+
+def _dist_sort(p, ranks):
+    comm = get_communicator("xla", "df")
+    cols, counts = _mk_rank_arrays(
+        ranks, {"k": np.int32, "v": np.float32})
+
+    def f(k, v, c):
+        t = Table({"k": k, "v": v}, c)
+        out, _ = df_sort(t, comm, ["k", "v"], samples=8,
+                         bucket_capacity=CAP, out_capacity=p * CAP)
+        return dict(out.columns), out.row_count
+
+    out_cols, out_counts = jax.vmap(f, axis_name="df")(
+        jnp.asarray(cols["k"]), jnp.asarray(cols["v"]), jnp.asarray(counts))
+    return _gather(out_cols, out_counts)
+
+
+# ---------------------------------------------------------------------- #
+# Pandas oracles + checkers
+# ---------------------------------------------------------------------- #
+def _concat_ranks(ranks, name, dtype):
+    parts = [np.asarray(r[name]) for r in ranks if r]
+    return (np.concatenate(parts).astype(dtype) if parts
+            else np.zeros(0, dtype))
+
+
+def _check_join(p, lranks, rranks):
+    got = _dist_join(p, lranks, rranks)
+    ldf = pd.DataFrame({"k": _concat_ranks(lranks, "k", np.int32),
+                        "v": _concat_ranks(lranks, "v", np.float32),
+                        "i": _concat_ranks(lranks, "i", np.int32)})
+    rdf = pd.DataFrame({"k": _concat_ranks(rranks, "k", np.int32),
+                        "w": _concat_ranks(rranks, "w", np.float32),
+                        "u": _concat_ranks(rranks, "u", np.uint32)})
+    want_df = ldf.merge(rdf, on="k", how="inner")
+    want = {c: want_df[c].to_numpy() for c in ("k", "v", "i", "w", "u")}
+    _assert_same_records(got, want, ["k", "v", "i", "w", "u"])
+
+
+def _check_groupby(p, ranks):
+    aggs = {"v": ["sum", "mean", "min", "max", "count"]}
+    got = _dist_groupby(p, ranks, aggs)
+    ks = [np.asarray(r["k"], np.int32) for r in ranks if r]
+    vs = [np.asarray(r["v"], np.float32) for r in ranks if r]
+    if not ks:
+        assert all(len(v) == 0 for v in got.values())
+        return
+    df = pd.DataFrame({"k": np.concatenate(ks), "v": np.concatenate(vs)})
+    g = df.groupby("k")["v"].agg(["sum", "min", "max", "count"])
+    # mirror the engine's mean = f32 sum / f32 count (one rounding, not
+    # pandas' f64 mean rounded to f32 afterwards)
+    want = {"k": g.index.to_numpy(np.int32),
+            "v_sum": g["sum"].to_numpy(np.float32),
+            "v_mean": (g["sum"].to_numpy(np.float32)
+                       / g["count"].to_numpy(np.float32)),
+            "v_min": g["min"].to_numpy(np.float32),
+            "v_max": g["max"].to_numpy(np.float32),
+            "v_count": g["count"].to_numpy(np.int32)}
+    _assert_same_records(got, want, ["k"])
+
+
+def _check_sort(p, ranks):
+    got = _dist_sort(p, ranks)
+    ks = [np.asarray(r["k"], np.int32) for r in ranks if r]
+    vs = [np.asarray(r["v"], np.float32) for r in ranks if r]
+    allk = np.concatenate(ks) if ks else np.zeros(0, np.int32)
+    allv = np.concatenate(vs) if vs else np.zeros(0, np.float32)
+    # global key order is exact; cross-rank tie order follows the sort keys
+    np.testing.assert_array_equal(got["k"], np.sort(allk, kind="stable"))
+    want_df = pd.DataFrame({"k": allk, "v": allv}).sort_values(["k", "v"])
+    _assert_same_records(got, {"k": want_df["k"].to_numpy(),
+                               "v": want_df["v"].to_numpy()}, ["k", "v"])
+
+
+# ---------------------------------------------------------------------- #
+# Fixed adversarial cases (run with or without hypothesis)
+# ---------------------------------------------------------------------- #
+def _rows(k, v=None, i=None, w=None, u=None):
+    out = {"k": np.asarray(k, np.int32)}
+    if v is not None:
+        out["v"] = np.asarray(v, np.float32)
+    if i is not None:
+        out["i"] = np.asarray(i, np.int32)
+    if w is not None:
+        out["w"] = np.asarray(w, np.float32)
+    if u is not None:
+        out["u"] = np.asarray(u, np.uint32)
+    return out
+
+
+def test_join_empty_ranks_and_duplicates():
+    lranks = [_rows([1, 1, 2], [1., 2., 3.], [7, 8, 9]), {},
+              _rows([2, 3], [4., 5.], [1, 2]), {}]
+    rranks = [{}, _rows([1, 2, 2], w=[10., 20., 30.], u=[1, 2, 3]),
+              {}, _rows([9], w=[0.], u=[0])]
+    _check_join(4, lranks, rranks)
+
+
+def test_join_exact_capacity_and_skew(rng):
+    # every left row on one hot key, both tables at exact capacity
+    lranks = [_rows([5] * CAP, rng.random(CAP), np.arange(CAP))
+              for _ in range(2)]
+    rranks = [_rows([5] * CAP, w=rng.random(CAP), u=np.arange(CAP))
+              for _ in range(2)]
+    _check_join(2, lranks, rranks)
+
+
+def test_groupby_empty_ranks_duplicates_skew(rng):
+    ranks = [_rows([3] * CAP, rng.integers(0, 50, CAP)), {},
+             _rows([3, 4, 4, 5], [1, 2, 3, 4]), {}]
+    _check_groupby(4, ranks)
+    _check_groupby(1, [_rows([0, 0, 0], [1, 2, 3])])
+
+
+def test_sort_empty_ranks_and_ties(rng):
+    ranks = [_rows([2, 2, 1], [3., 1., 2.]), {},
+             _rows([0] * CAP, rng.integers(0, 9, CAP)), {}]
+    _check_sort(4, ranks)
+
+
+# ---------------------------------------------------------------------- #
+# Hypothesis property tests (pandas oracle).  Guarded with a plain import
+# (not importorskip) so the fixed-case tests above still run without
+# hypothesis; CI installs it via requirements-dev.txt.
+# ---------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+
+def _rank_strategy(data, p, names):
+    """Per-rank row dicts: counts in {0, .., CAP} including the extremes,
+    keys from a small range (duplicates + skew), integer-valued floats so
+    aggregation results are exact."""
+    ranks = []
+    for _ in range(p):
+        n = data.draw(st.sampled_from([0, 1, CAP // 2, CAP]))
+        if n == 0:
+            ranks.append({})
+            continue
+        keys = data.draw(st.lists(st.integers(0, 6), min_size=n, max_size=n))
+        rows = {"k": np.asarray(keys, np.int32)}
+        for nm in names:
+            vals = data.draw(st.lists(st.integers(-50, 50),
+                                      min_size=n, max_size=n))
+            if nm in ("v", "w"):
+                rows[nm] = np.asarray(vals, np.float32)
+            elif nm == "u":
+                rows[nm] = (np.asarray(vals, np.int64) + 50).astype(np.uint32)
+            else:
+                rows[nm] = np.asarray(vals, np.int32)
+        ranks.append(rows)
+    return ranks
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data(), p=st.sampled_from([1, 2, 4]))
+    def test_join_matches_pandas(data, p):
+        lranks = _rank_strategy(data, p, ("v", "i"))
+        rranks = _rank_strategy(data, p, ("w", "u"))
+        _check_join(p, lranks, rranks)
+
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data(), p=st.sampled_from([1, 2, 4]))
+    def test_groupby_matches_pandas(data, p):
+        _check_groupby(p, _rank_strategy(data, p, ("v",)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data(), p=st.sampled_from([1, 2, 4]))
+    def test_sort_matches_pandas(data, p):
+        _check_sort(p, _rank_strategy(data, p, ("v",)))

@@ -56,6 +56,11 @@ def test_planner_parity():
 
 
 @pytest.mark.multidevice
+def test_out_of_core_parity():
+    _run("out_of_core_parity.py")
+
+
+@pytest.mark.multidevice
 def test_sharded_train():
     _run("sharded_train.py", timeout=1800)
 

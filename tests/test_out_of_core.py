@@ -1,0 +1,339 @@
+"""Out-of-core morsel execution: spill tables, morsel streaming, combiners,
+compile-cache invariants, overflow accounting, and store/repartition fixes.
+
+Unit scope (1 CPU device): the distributed shuffle degenerates to identity
+routing but the whole morsel machinery — segmenting, host spill, partial
+aggregation + combine, sorted-run merge, resident join builds, stats — runs
+for real.  8-device coverage lives in ``tests/md_scripts/out_of_core_parity.py``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (CylonEnv, CylonStore, DistTable, MorselSource, Plan,
+                        SpillTable, execute, repartition, rescatter)
+from repro.dataframe.ops_local import hash_columns, hash_columns_np
+from repro.dataframe.table import Table
+
+
+def _exact_data(rng, n, keys=50):
+    """Integer-valued float32 payloads: float sums are exact, so morsel
+    re-aggregation order cannot perturb bits."""
+    return {"k": rng.integers(0, keys, n).astype(np.int32),
+            "v0": rng.integers(0, 100, n).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------- #
+# SpillTable
+# ---------------------------------------------------------------------- #
+def test_spill_roundtrip_and_chunking(rng):
+    data = {"k": rng.integers(0, 9, 100).astype(np.int32),
+            "v": rng.random(100).astype(np.float32)}
+    sp = SpillTable.from_numpy(data, 4, chunk_rows=8)
+    assert sp.total_rows() == 100
+    assert sp.rank_rows(0) == 25 and sp.rank_rows(3) == 25
+    assert len(sp.rank_chunks(0)) == 4          # 25 rows in 8-row chunks
+    out = sp.to_numpy()
+    np.testing.assert_array_equal(out["k"], data["k"])
+    np.testing.assert_array_equal(out["v"], data["v"])
+    assert sp.nbytes() == 100 * 8
+
+
+def test_spill_schema_survives_empty_ranks():
+    sp = SpillTable.from_numpy({"k": np.arange(3, dtype=np.int32)}, 4)
+    assert sp.rank_rows(3) == 0
+    assert sp.column_names == ("k",)
+    empty = sp.rank_concat(3)
+    assert empty["k"].dtype == np.int32 and len(empty["k"]) == 0
+
+
+def test_spill_rejects_mismatched_chunks():
+    sp = SpillTable(2)
+    sp.append(0, {"k": np.arange(4, dtype=np.int32)})
+    with pytest.raises(ValueError):
+        sp.append(1, {"k": np.arange(4, dtype=np.float32)})
+    with pytest.raises(ValueError):
+        sp.append(1, {"x": np.arange(4, dtype=np.int32)})
+
+
+def test_spill_from_dist_keeps_rank_placement(rng):
+    data = _exact_data(rng, 64)
+    t = DistTable.from_numpy(data, 2)
+    sp = SpillTable.from_dist(t)
+    assert sp.parallelism == 2
+    assert sp.rank_rows(0) == 32 and sp.rank_rows(1) == 32
+    np.testing.assert_array_equal(sp.to_numpy()["k"], data["k"])
+
+
+# ---------------------------------------------------------------------- #
+# MorselSource
+# ---------------------------------------------------------------------- #
+def test_morsel_source_streams_fixed_capacity(rng):
+    data = _exact_data(rng, 100)
+    src = MorselSource(SpillTable.from_numpy(data, 2), morsel_rows=16)
+    morsels = list(src)
+    assert len(morsels) == src.num_morsels == 4   # 50 rows/rank @ 16/morsel
+    assert all(m.capacity == 16 for m in morsels)
+    assert src.h2d_bytes > 0
+    got = np.concatenate([np.asarray(m.row_counts) for m in morsels])
+    assert got.sum() == 100
+    # streamed rows reassemble to the original per-rank blocks
+    back = {r: [] for r in range(2)}
+    for m in morsels:
+        cols = np.asarray(m.columns["k"]).reshape(2, m.capacity)
+        counts = np.asarray(m.row_counts)
+        for r in range(2):
+            back[r].append(cols[r, :counts[r]])
+    full = np.concatenate([np.concatenate(back[0]), np.concatenate(back[1])])
+    np.testing.assert_array_equal(full, data["k"])
+
+
+def test_morsel_source_empty_input_yields_one_empty_morsel():
+    sp = SpillTable.from_numpy({"k": np.zeros(0, np.int32)}, 2)
+    morsels = list(MorselSource(sp, morsel_rows=8))
+    assert len(morsels) == 1
+    assert int(np.asarray(morsels[0].row_counts).sum()) == 0
+
+
+# ---------------------------------------------------------------------- #
+# Morsel execution vs in-core (1 device)
+# ---------------------------------------------------------------------- #
+def test_morsel_local_plan_bit_identical(rng):
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 50, 500).astype(np.int32),
+            "v0": rng.random(500).astype(np.float32)}
+    plan = (Plan.scan("l").filter(lambda t: t.col("v0") > 0.25, cols=["v0"])
+            .add_scalar(2.0, cols=["v0"]))
+    ref = execute(plan, env, {"l": DistTable.from_numpy(data, 1)}).to_numpy()
+    out = execute(plan, env, {"l": data}, morsel_rows=64)
+    assert isinstance(out, SpillTable)
+    o = out.to_numpy()
+    for c in ref:
+        np.testing.assert_array_equal(ref[c], o[c])
+
+
+def test_morsel_pipeline_bit_identical(rng):
+    env = CylonEnv()
+    ld = _exact_data(rng, 600)
+    rd = {"k": rng.integers(0, 50, 400).astype(np.int32),
+          "w": rng.integers(0, 100, 400).astype(np.float32)}
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k", out_capacity=16384)
+            .groupby(["k"], {"v0": ["sum", "mean"]})
+            .sort(["k"]).add_scalar(1.0, cols=["v0_sum"]))
+    lt, rt = DistTable.from_numpy(ld, 1), DistTable.from_numpy(rd, 1)
+    for opt in (False, True):
+        ref, rst = execute(plan, env, {"l": lt, "r": rt}, optimize=opt,
+                           collect_stats=True)
+        assert rst.rows_dropped == 0
+        out, st = execute(plan, env, {"l": ld, "r": rd}, optimize=opt,
+                          collect_stats=True, morsel_rows=64,
+                          capacity_factor=16.0)
+        assert st.rows_dropped == 0
+        assert st.morsels >= 600 // 64
+        assert st.spill_bytes > 0 and st.h2d_bytes > 0 and st.d2h_bytes > 0
+        assert st.morsel_rows == 64
+        ref_np, o = ref.to_numpy(), out.to_numpy()
+        for c in ref_np:
+            np.testing.assert_array_equal(ref_np[c], o[c])
+
+
+def test_morsel_groupby_only_matches(rng):
+    env = CylonEnv()
+    data = _exact_data(rng, 333, keys=40)
+    plan = Plan.scan("l").groupby(["k"], {"v0": ["sum", "min", "max"]})
+    ref = execute(plan, env, {"l": DistTable.from_numpy(data, 1)},
+                  optimize=False).to_numpy()
+    out = execute(plan, env, {"l": data}, optimize=False,
+                  morsel_rows=32).to_numpy()
+    # combine emits sub-buckets, so rank-local order differs: compare keyed
+    ro, oo = np.argsort(ref["k"]), np.argsort(out["k"])
+    for c in ref:
+        np.testing.assert_array_equal(ref[c][ro], out[c][oo])
+
+
+def test_morsel_respills_mismatched_parallelism(rng):
+    # a spill bucketed for 4 ranks streamed on a 1-device env must keep
+    # every row (re-bucketed host-side), not just rank 0's share
+    env = CylonEnv()
+    data = _exact_data(rng, 32)
+    sp = SpillTable.from_numpy(data, 4)
+    plan = Plan.scan("l").add_scalar(0.0, cols=["v0"])
+    out = execute(plan, env, {"l": sp}, morsel_rows=8)
+    assert out.total_rows() == 32
+    np.testing.assert_array_equal(out.to_numpy()["k"], data["k"])
+
+
+def test_morsel_warns_on_capacity_pressure(rng):
+    # an exploding all-equal-key join overflows the per-morsel working
+    # capacity; the loss must be loud even without collect_stats
+    env = CylonEnv()
+    ld = {"k": np.zeros(64, np.int32), "v0": np.ones(64, np.float32)}
+    rd = {"k": np.zeros(64, np.int32), "w": np.ones(64, np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k")
+    with pytest.warns(RuntimeWarning, match="out-of-core execution dropped"):
+        execute(plan, env, {"l": ld, "r": rd}, optimize=False,
+                morsel_rows=16)
+    with pytest.warns(RuntimeWarning):
+        _, st = execute(plan, env, {"l": ld, "r": rd}, optimize=False,
+                        morsel_rows=16, collect_stats=True)
+    assert st.rows_dropped > 0
+
+
+def test_morsel_rejects_amt_and_dest_shuffle(rng):
+    env = CylonEnv()
+    data = _exact_data(rng, 64)
+    plan = Plan.scan("l").shuffle(["k"])
+    with pytest.raises(ValueError, match="allgather baseline"):
+        execute(plan, env, {"l": data}, mode="amt", morsel_rows=16)
+    bad = Plan.scan("l").shuffle(["k"], dest=np.zeros(64, np.int32))
+    with pytest.raises(ValueError, match="cannot stream"):
+        execute(bad, env, {"l": data}, optimize=False, morsel_rows=16)
+
+
+# ---------------------------------------------------------------------- #
+# Compile-cache regression: 8 morsels -> exactly 1 cache miss
+# ---------------------------------------------------------------------- #
+def test_eight_morsels_one_cache_miss(rng):
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 9, 8 * 32).astype(np.int32),
+            "v0": rng.random(8 * 32).astype(np.float32)}
+    plan = (Plan.scan("l").filter(lambda t: t.col("k") >= 0, cols=["k"])
+            .add_scalar(1.0, cols=["v0"]))
+    h0, m0 = env.cache_hits, env.cache_misses
+    out, st = execute(plan, env, {"l": data}, morsel_rows=32,
+                      collect_stats=True)
+    assert st.morsels == 8
+    # the per-morsel zero-recompile invariant: ONE program built, 7 reuses
+    assert env.cache_misses - m0 == 1 == st.cache_misses
+    assert env.cache_hits - h0 == 7 == st.cache_hits
+    # a second execution of the same plan compiles nothing at all
+    _, st2 = execute(plan, env, {"l": data}, morsel_rows=32,
+                     collect_stats=True)
+    assert st2.cache_misses == 0 and st2.cache_hits == 8
+
+
+# ---------------------------------------------------------------------- #
+# Overflow safety: rows_dropped is deterministic and debug_overflow fires
+# ---------------------------------------------------------------------- #
+def test_rows_dropped_zero_for_capacitated_run(rng):
+    env = CylonEnv()
+    data = _exact_data(rng, 128)
+    plan = Plan.scan("l").shuffle(["k"]).groupby(["k"], {"v0": ["sum"]})
+    _, st = execute(plan, env, {"l": DistTable.from_numpy(data, 1)},
+                    optimize=False, collect_stats=True)
+    assert st.rows_dropped == 0
+
+
+def test_rows_dropped_counts_shuffle_overflow(rng):
+    env = CylonEnv()
+    data = _exact_data(rng, 128)
+    t = DistTable.from_numpy(data, 1)
+    plan = Plan.scan("l").shuffle(["k"], out_capacity=32)
+    _, st = execute(plan, env, {"l": t}, optimize=False, collect_stats=True)
+    assert st.rows_dropped == 128 - 32    # deterministic, post-hoc
+
+
+def test_rows_dropped_counts_join_overflow(rng):
+    env = CylonEnv()
+    ld = {"k": np.zeros(32, np.int32), "v0": np.arange(32, dtype=np.float32)}
+    rd = {"k": np.zeros(32, np.int32), "w": np.arange(32, dtype=np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k", out_capacity=64)
+    _, st = execute(plan, env, {"l": DistTable.from_numpy(ld, 1),
+                                "r": DistTable.from_numpy(rd, 1)},
+                    optimize=False, collect_stats=True)
+    assert st.rows_dropped == 32 * 32 - 64
+
+
+def test_debug_overflow_warns_on_drop(rng):
+    env = CylonEnv()
+    data = _exact_data(rng, 128)
+    t = DistTable.from_numpy(data, 1)
+    plan = Plan.scan("l").shuffle(["k"], out_capacity=32, debug_overflow=True)
+    with pytest.warns(RuntimeWarning, match="shuffle dropped rows"):
+        out = execute(plan, env, {"l": t}, optimize=False)
+        np.asarray(out.row_counts)        # force execution + callback
+    ok = Plan.scan("l").shuffle(["k"], debug_overflow=True)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")    # no drop -> no warning
+        out = execute(ok, env, {"l": t}, optimize=False)
+        np.asarray(out.row_counts)
+
+
+# ---------------------------------------------------------------------- #
+# CylonStore / repartition fixes
+# ---------------------------------------------------------------------- #
+def test_repartition_explicit_zero_capacity_not_ignored(rng):
+    t = DistTable.from_numpy(_exact_data(rng, 10), 2)
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        repartition(t, 2, capacity=0)
+    with pytest.raises(ValueError):
+        DistTable.from_numpy(_exact_data(rng, 10), 2, capacity=0)
+
+
+def test_repartition_preserves_dtypes_and_values(rng):
+    data = {"i": rng.integers(-5, 5, 37).astype(np.int32),
+            "u": rng.integers(0, 9, 37).astype(np.uint32),
+            "f": rng.integers(0, 100, 37).astype(np.float32)}
+    t = DistTable.from_numpy(data, 3)
+    out = repartition(t, 5)
+    assert out.parallelism == 5
+    o = out.to_numpy()
+    for c in data:
+        assert o[c].dtype == data[c].dtype
+        np.testing.assert_array_equal(o[c], data[c])
+
+
+def test_repartition_empty_table_preserves_columns():
+    t = DistTable.from_numpy({"k": np.zeros(0, np.int32),
+                              "v": np.zeros(0, np.float32)}, 2)
+    out = repartition(t, 3)
+    assert out.parallelism == 3
+    assert out.column_names == ("k", "v")
+    assert out.total_rows() == 0
+    assert out.columns["v"].dtype == np.float32
+
+
+def test_store_get_repartitions_on_capacity_change(rng):
+    store = CylonStore()
+    t = DistTable.from_numpy(_exact_data(rng, 32), 2)
+    store.put("t", t)
+    assert store.get("t") is t
+    assert store.get("t", target_parallelism=2) is t
+    out = store.get("t", capacity=64)      # same gang, new capacity
+    assert out.capacity == 64
+    np.testing.assert_array_equal(out.to_numpy()["k"], t.to_numpy()["k"])
+    out2 = store.get("t", target_parallelism=4)
+    assert out2.parallelism == 4
+
+
+def test_store_accepts_spill_tables(rng):
+    store = CylonStore()
+    data = _exact_data(rng, 48)
+    store.put("sp", SpillTable.from_numpy(data, 4))
+    got = store.get("sp", target_parallelism=2)
+    assert isinstance(got, DistTable) and got.parallelism == 2
+    np.testing.assert_array_equal(got.to_numpy()["k"], data["k"])
+
+
+def test_rescatter_bucketed_matches_gather(rng):
+    data = _exact_data(rng, 77)
+    sp = SpillTable.from_numpy(data, 3, chunk_rows=10)
+    out = rescatter(sp, 4)
+    np.testing.assert_array_equal(out.to_numpy()["k"], data["k"])
+    np.testing.assert_array_equal(out.to_numpy()["v0"], data["v0"])
+
+
+# ---------------------------------------------------------------------- #
+# Driver-side hash mirror (spill sub-bucketing)
+# ---------------------------------------------------------------------- #
+def test_hash_columns_np_matches_device_hash(rng):
+    cols = {"k": rng.integers(-1000, 1000, 256).astype(np.int32),
+            "f": rng.random(256).astype(np.float32),
+            "u": rng.integers(0, 2**31, 256).astype(np.uint32)}
+    t = Table({k: np.asarray(v) for k, v in cols.items()},
+              np.int32(256))
+    for keys in (["k"], ["k", "f"], ["u", "k", "f"]):
+        dev = np.asarray(hash_columns(t, keys))
+        host = hash_columns_np(cols, keys)
+        np.testing.assert_array_equal(dev, host)
