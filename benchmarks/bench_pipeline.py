@@ -189,21 +189,93 @@ def run_oversub(global_rows: int = 100_000, oversub: int = 8,
             f"out-of-core {ooc_stats.rows_dropped})")
 
 
+def run_frontend(global_rows: int = 100_000) -> None:
+    """Fig-9 via the lazy DataFrame frontend vs the raw ``Plan`` builder.
+
+    Both paths execute through ``core.plan.execute`` (re-plan + cached
+    program dispatch per call — the user-facing cost model), so the delta
+    isolates what the frontend layer adds: plan construction captured in
+    the DataFrame, source-dict plumbing, and session-env resolution.
+    Target: <2% wall-clock overhead.  Also asserts bit-identity.
+    """
+    import repro.df as rdf
+    from repro.core import execute
+    from repro.expr import col
+
+    p = min(8, len(jax.devices()))
+    env = CylonEnv(jax.devices()[:p])
+    ld = make_table_data(global_rows, seed=0, exact_values=True)
+    rd = make_table_data(global_rows, seed=1, exact_values=True)
+    rd["w"] = rd.pop("v0")
+    lt = DistTable.from_numpy(ld, p)
+    rt = DistTable.from_numpy(rd, p)
+    cap = lt.capacity
+    tables = {"l": lt, "r": rt}
+
+    plan = (Plan.scan("l")
+            .join(Plan.scan("r"), on="k", out_capacity=cap * 4)
+            .filter((col("v0") > 4) & (col("w") < 250))
+            .groupby(["k"], {"v0": ["sum", "mean"]})
+            .sort(["k"])
+            .with_columns({"v0_sum": col("v0_sum") + 1.0}))
+    front = (rdf.from_table(lt, name="l")
+             .merge(rdf.from_table(rt, name="r"), on="k",
+                    out_capacity=cap * 4)
+             [(col("v0") > 4) & (col("w") < 250)]
+             .groupby("k").agg({"v0": ["sum", "mean"]})
+             .sort_values("k")
+             .assign(v0_sum=col("v0_sum") + 1.0))
+
+    a = execute(plan, env, tables).to_numpy()
+    b = front.collect(env=env).to_numpy()
+    identical = (sorted(a) == sorted(b)
+                 and all(np.array_equal(a[c], b[c]) for c in a))
+
+    t_plan = time_fn(lambda: execute(plan, env, tables).row_counts, iters=5)
+    t_front = time_fn(lambda: front.collect(env=env).row_counts, iters=5)
+    overhead = t_front / t_plan - 1.0
+    record("pipeline(Fig9-df)", f"plan_builder_p{p}", t_plan,
+           parallelism=p, rows=global_rows)
+    record("pipeline(Fig9-df)", f"df_frontend_p{p}", t_front,
+           parallelism=p, rows=global_rows, bit_identical=identical)
+    # the seconds column carries the raw ratio-1 (repo convention for
+    # unitless records); overhead_pct is the human-readable field
+    record("pipeline(Fig9-df)", f"frontend_overhead_p{p}", overhead,
+           parallelism=p, overhead_pct=round(100 * overhead, 2),
+           target_pct="<2", note="ratio-1 not seconds")
+    if overhead > 0.02:
+        print(f"WARNING: df frontend overhead {overhead:.1%} exceeds the "
+              f"2% target (CPU wall-clock is noisy; re-run on an idle "
+              f"machine before reading this as a regression)")
+    if not identical:
+        raise AssertionError("df frontend result != Plan builder result")
+
+
 if __name__ == "__main__":
     import argparse
 
     from .common import dump_json
 
     ap = argparse.ArgumentParser(
-        description="Fig-9 pipeline out-of-core: stream an oversubscribed "
-                    "dataset through the compiled stage DAG in morsels")
+        description="Fig-9 pipeline extras: out-of-core morsel streaming "
+                    "(default) or --frontend=df overhead measurement")
     ap.add_argument("--rows", type=int, default=100_000)
     ap.add_argument("--oversub", type=int, default=8,
                     help="dataset size as a multiple of device capacity")
     ap.add_argument("--capacity-factor", type=float, default=4.0)
-    ap.add_argument("--json", default="BENCH_pr3_out_of_core.json")
+    ap.add_argument("--frontend", choices=["df"], default=None,
+                    help="measure DataFrame-frontend overhead vs raw Plan")
+    ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    run_oversub(args.rows, args.oversub, args.capacity_factor)
-    dump_json(args.json, meta={"bench": "out_of_core",
-                               "oversub": args.oversub, "rows": args.rows})
-    print(f"json -> {args.json}")
+    if args.frontend == "df":
+        json_path = args.json or "BENCH_pr4_df_frontend.json"
+        run_frontend(args.rows)
+        dump_json(json_path, meta={"bench": "df_frontend",
+                                   "rows": args.rows})
+    else:
+        json_path = args.json or "BENCH_pr3_out_of_core.json"
+        run_oversub(args.rows, args.oversub, args.capacity_factor)
+        dump_json(json_path, meta={"bench": "out_of_core",
+                                   "oversub": args.oversub,
+                                   "rows": args.rows})
+    print(f"json -> {json_path}")

@@ -55,6 +55,9 @@ def main() -> None:
         # out-of-core Fig-9 at 8x device capacity (asserts bit-identity)
         "out_of_core": lambda: bench_pipeline.run_oversub(
             max(4000, 100_000 // scale), oversub=8),
+        # lazy DataFrame frontend overhead vs raw Plan (asserts bit-identity)
+        "df_frontend": lambda: bench_pipeline.run_frontend(
+            max(4000, 100_000 // scale)),
         "kernels": bench_kernels.run if not args.quick else bench_kernels.run,
         "moe_shuffle": bench_moe_shuffle.run,
     }

@@ -1,0 +1,55 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Legacy imperative ``Plan`` builder API (kept for reference).
+
+The lazy DataFrame frontend (``examples/pipeline_ops.py``,
+``examples/planner_explain.py``) is the recommended entry point since
+PR 4; this example shows the underlying builder the frontend lowers to —
+the two are bit-identical on the same pipeline.  Typed expressions work
+here too (``.filter(col("v0") > 0)``); the callable forms
+(``.filter(lambda t: ...)``, ``.map_columns``) still run but emit
+``DeprecationWarning``.
+
+  PYTHONPATH=src python examples/legacy_plan_api.py
+"""
+
+import numpy as np
+
+import repro.df as rdf
+from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.expr import col
+
+rng = np.random.default_rng(0)
+N = 20_000
+left = {"k": rng.integers(0, int(N * 0.9), N).astype(np.int32),
+        "v0": rng.integers(0, 256, N).astype(np.float32)}
+right = {"k": rng.integers(0, int(N * 0.9), N).astype(np.int32),
+         "w": rng.integers(0, 256, N).astype(np.float32)}
+
+env = CylonEnv()
+lt = DistTable.from_numpy(left, env.parallelism)
+rt = DistTable.from_numpy(right, env.parallelism)
+tables = {"l": lt, "r": rt}
+
+plan = (Plan.scan("l")
+        .join(Plan.scan("r"), on="k", out_capacity=lt.capacity * 4)
+        .filter(col("w") > 4)
+        .groupby(["k"], {"v0": ["sum", "mean"]})
+        .sort(["k"])
+        .add_scalar(1.0, cols=["v0_sum"]))
+print(plan.explain(tables))
+out = execute(plan, env, tables).to_numpy()
+print(f"rows={len(out['k'])}")
+
+# the frontend path is the same physical plan, bit-for-bit
+front = (rdf.from_table(lt).merge(rdf.from_table(rt), on="k",
+                                  out_capacity=lt.capacity * 4)
+         [col("w") > 4]
+         .groupby("k").agg({"v0": ["sum", "mean"]})
+         .sort_values("k")
+         .assign(v0_sum=col("v0_sum") + 1.0))
+got = front.collect(env=env).to_numpy()
+identical = all(np.array_equal(out[c], got[c]) for c in out)
+print(f"frontend == builder (bit-identical): {identical}")
+assert identical

@@ -1,13 +1,17 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-"""Paper Fig 9's operator pipeline under three execution modes.
+"""Paper Fig 9's operator pipeline via the lazy DataFrame frontend.
 
-join -> groupby -> sort -> add_scalar executed as
+Ordinary dataframe code — merge -> groupby.agg -> sort_values — while the
+planner + pseudo-BSP execution run underneath, in three modes:
   bsp        one compiled BSP program (CylonFlow),
   bsp_staged one dispatch per communication stage,
   amt        per-operator dispatch + allgather shuffle (Dask-DDF-style),
 with wall-time comparison and result parity check.
+
+(The same pipeline written against the imperative ``Plan`` builder lives
+in ``examples/legacy_plan_api.py``.)
 
   PYTHONPATH=src python examples/pipeline_ops.py
 """
@@ -16,7 +20,9 @@ import time
 
 import numpy as np
 
-from repro.core import CylonEnv, DistTable, Plan, execute
+import repro.df as rdf
+from repro.core import DistTable
+from repro.expr import col
 
 rng = np.random.default_rng(0)
 N = 50_000
@@ -25,30 +31,31 @@ left = {"k": rng.integers(0, int(N * 0.9), N).astype(np.int32),
 right = {"k": rng.integers(0, int(N * 0.9), N).astype(np.int32),
          "w": rng.random(N).astype(np.float32)}
 
-env = CylonEnv()
-lt = DistTable.from_numpy(left, env.parallelism)
-rt = DistTable.from_numpy(right, env.parallelism)
+with rdf.session() as env:
+    lt = DistTable.from_numpy(left, env.parallelism)
+    l = rdf.from_table(lt)
+    r = rdf.read_numpy(right)
 
-plan = (Plan.scan("l")
-        .join(Plan.scan("r"), on="k", out_capacity=lt.capacity * 4)
-        .groupby(["k"], {"v0": ["sum", "mean"]})
-        .sort(["k"])
-        .add_scalar(1.0, cols=["v0_sum"]))
-print(f"plan stages (1 + comm boundaries): {plan.num_stages()}")
+    out = (l.merge(r, on="k", out_capacity=lt.capacity * 4)
+           .groupby("k").agg({"v0": ["sum", "mean"]})
+           .sort_values("k")
+           .assign(v0_sum=col("v0_sum") + 1.0))
+    print(f"plan stages (1 + comm boundaries): {out.num_stages()}")
 
-results = {}
-for mode in ("bsp", "bsp_staged", "amt"):
-    t0 = time.perf_counter()
-    out = execute(plan, env, {"l": lt, "r": rt}, mode=mode)
-    dt0 = time.perf_counter() - t0          # includes compile
-    t0 = time.perf_counter()
-    out = execute(plan, env, {"l": lt, "r": rt}, mode=mode)
-    dt = time.perf_counter() - t0           # cached program (stateful env)
-    results[mode] = out.to_numpy()
-    print(f"{mode:10s} first={dt0:7.3f}s cached={dt:7.3f}s "
-          f"rows={len(results[mode]['k'])}")
+    results = {}
+    for mode in ("bsp", "bsp_staged", "amt"):
+        t0 = time.perf_counter()
+        res = out.collect(mode=mode)
+        dt0 = time.perf_counter() - t0          # includes compile
+        t0 = time.perf_counter()
+        res = out.collect(mode=mode)
+        dt = time.perf_counter() - t0           # cached program (stateful env)
+        results[mode] = res.to_numpy()
+        print(f"{mode:10s} first={dt0:7.3f}s cached={dt:7.3f}s "
+              f"rows={len(results[mode]['k'])}")
 
 bsp, amt = results["bsp"], results["amt"]
 parity = all(np.allclose(np.sort(bsp[c]), np.sort(amt[c]), rtol=1e-4)
              for c in bsp)
 print(f"bsp == amt results: {parity}")
+assert parity

@@ -1,11 +1,14 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-"""Query-optimizer demo: EXPLAIN + optimized vs unoptimized execution.
+"""Query-optimizer demo: EXPLAIN + optimized vs unoptimized execution,
+written against the lazy DataFrame frontend.
 
-Builds the paper's Fig-9 pipeline with a dead column and a pushable filter,
-prints both EXPLAIN plans (showing which rules fired), then executes both
-and compares wall-clock, shuffle volume, and result parity.
+Builds the paper's Fig-9 pipeline with a dead column, a conjunction
+filter whose sides split across the join inputs, and a derived column,
+prints both EXPLAIN plans (expressions pretty-printed — no <lambda>
+placeholders), then executes both and compares wall-clock, shuffle
+volume, and result parity.
 
   PYTHONPATH=src python examples/planner_explain.py
 """
@@ -14,7 +17,9 @@ import time
 
 import numpy as np
 
-from repro.core import CylonEnv, DistTable, Plan, execute
+import repro.df as rdf
+from repro.core import DistTable
+from repro.expr import col
 
 rng = np.random.default_rng(0)
 N = 50_000
@@ -24,44 +29,47 @@ left = {"k": rng.integers(0, int(N * 0.9), N).astype(np.int32),
 right = {"k": rng.integers(0, int(N * 0.9), N).astype(np.int32),
          "w": rng.random(N).astype(np.float32)}
 
-env = CylonEnv()
-lt = DistTable.from_numpy(left, env.parallelism)
-rt = DistTable.from_numpy(right, env.parallelism)
-cap = lt.capacity
+with rdf.session() as env:
+    lt = DistTable.from_numpy(left, env.parallelism)
+    rt = DistTable.from_numpy(right, env.parallelism)
+    cap = lt.capacity
+    l, r = rdf.from_table(lt), rdf.from_table(rt)
 
-plan = (Plan.scan("l")
-        .join(Plan.scan("r"), on="k", out_capacity=cap * 4,
-              bucket_capacity=cap, shuffle_out_capacity=cap * 2)
-        .filter(lambda t: t.col("k") % 2 == 0, cols=["k"])
-        .groupby(["k"], {"v0": ["sum", "mean"]}, bucket_capacity=cap * 4)
-        .sort(["k"], bucket_capacity=cap * 4)
-        .add_scalar(1.0, cols=["v0_sum"]))
+    # one conjunction: k-side pushes below the shuffle boundaries, w-side
+    # into the join's right input — each conjunct routed independently
+    out = (l.merge(r, on="k", out_capacity=cap * 4, bucket_capacity=cap,
+                   shuffle_out_capacity=cap * 2)
+           [(col("k") % 2 == 0) & (col("w") > 0.05)]
+           .assign(vw=col("v0") * col("w"))
+           .groupby("k", bucket_capacity=cap * 4)
+           .agg({"vw": ["sum", "mean"]})
+           .sort_values("k", bucket_capacity=cap * 4))
 
-tables = {"l": lt, "r": rt}
-print("================ EXPLAIN (unoptimized) ================")
-print(plan.explain(tables, optimize=False))
-print()
-print("================ EXPLAIN (optimized) ==================")
-print(plan.explain(tables))
-print()
+    print("================ EXPLAIN (unoptimized) ================")
+    print(out.explain(optimize=False))
+    print()
+    print("================ EXPLAIN (optimized) ==================")
+    print(out.explain())
+    print()
 
-results = {}
-for opt in (False, True):
-    tag = "optimized" if opt else "unoptimized"
-    t0 = time.perf_counter()
-    out, stats = execute(plan, env, tables, mode="bsp", optimize=opt,
-                         collect_stats=True)
-    first = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out, stats = execute(plan, env, tables, mode="bsp", optimize=opt,
-                         collect_stats=True)
-    cached = time.perf_counter() - t0
-    results[tag] = out.to_numpy()
-    print(f"{tag:12s} first={first:7.3f}s cached={cached:7.3f}s "
-          f"stages={stats.num_stages} shuffles={stats.num_shuffles} "
-          f"rows_shuffled={stats.rows_shuffled} "
-          f"bytes_shuffled={stats.bytes_shuffled}")
+    results = {}
+    for opt in (False, True):
+        tag = "optimized" if opt else "unoptimized"
+        t0 = time.perf_counter()
+        res, stats = out.collect(mode="bsp", optimize=opt,
+                                 collect_stats=True)
+        first = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res, stats = out.collect(mode="bsp", optimize=opt,
+                                 collect_stats=True)
+        cached = time.perf_counter() - t0
+        results[tag] = res.to_numpy()
+        print(f"{tag:12s} first={first:7.3f}s cached={cached:7.3f}s "
+              f"stages={stats.num_stages} shuffles={stats.num_shuffles} "
+              f"rows_shuffled={stats.rows_shuffled} "
+              f"bytes_shuffled={stats.bytes_shuffled}")
 
 a, b = results["unoptimized"], results["optimized"]
 identical = all(np.array_equal(a[c], b[c]) for c in a)
 print(f"\noptimized == unoptimized results (bit-identical): {identical}")
+assert identical

@@ -33,11 +33,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+import warnings
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Union
 
 import jax
 
 from ..dataframe.table import Table
+from ..expr import Expr, OpaqueExpr, ensure_expr
 
 _ids = itertools.count()
 
@@ -68,20 +70,59 @@ class Plan:
     def add_scalar(self, value, cols: Optional[Sequence[str]] = None) -> "Plan":
         return Plan(Node("add_scalar", [self.node], {"value": value, "cols": cols}))
 
-    def filter(self, pred: Callable[[Table], jax.Array],
+    def filter(self, pred: Union[Expr, Callable[[Table], jax.Array]],
                cols: Optional[Sequence[str]] = None) -> "Plan":
-        """``cols`` (optional) declares which columns ``pred`` reads; the
-        optimizer can only push undeclared predicates past schema-preserving
-        boundaries."""
-        return Plan(Node("filter", [self.node],
-                         {"pred": pred,
-                          "cols": tuple(cols) if cols is not None else None}))
+        """Keep rows where the boolean expression holds.
+
+        ``pred`` should be a typed column expression
+        (``repro.expr.col("v") > 0``), which gives the optimizer exact
+        column liveness (pushdown past joins, dead-column elimination) and
+        the compile cache a value-based key.  Passing a callable
+        ``fn(Table) -> bool array`` is **deprecated**: it is wrapped in an
+        ``OpaqueExpr`` pinning the declared ``cols`` (``None`` = unknown,
+        which blocks pushdown past schema-changing boundaries).
+        """
+        if isinstance(pred, Expr):
+            if cols is not None:
+                raise TypeError(
+                    "cols= is only for the deprecated callable form; typed "
+                    "expressions carry their own column set")
+            expr = pred
+        else:
+            warnings.warn(
+                "Plan.filter(callable) is deprecated; pass a typed "
+                "expression (repro.expr.col(...) > ...) so the optimizer "
+                "sees exact column liveness and the compile cache gets a "
+                "value-based key", DeprecationWarning, stacklevel=2)
+            expr = OpaqueExpr(pred, cols)
+        return Plan(Node("filter", [self.node], {"expr": expr}))
 
     def project(self, cols: Sequence[str]) -> "Plan":
         return Plan(Node("project", [self.node], {"cols": tuple(cols)}))
 
+    def with_columns(self, exprs: Mapping[str, Union[Expr, Any]]) -> "Plan":
+        """Add or replace columns: ``{name: expression}``.
+
+        All expressions read the *input* table (simultaneous assignment,
+        like ``pandas.DataFrame.assign``); bare scalars auto-lift to
+        literals and broadcast to full columns.
+        """
+        return Plan(Node("with_columns", [self.node],
+                         {"exprs": {name: ensure_expr(e)
+                                    for name, e in exprs.items()}}))
+
     def map_columns(self, fn, cols: Sequence[str]) -> "Plan":
-        return Plan(Node("map_columns", [self.node], {"fn": fn, "cols": tuple(cols)}))
+        """**Deprecated**: apply ``fn`` to each named column.  Rewritten to
+        ``with_columns`` over per-column ``OpaqueExpr`` wrappers; prefer
+        typed expressions (``with_columns({"v": col("v") * 2})``)."""
+        warnings.warn(
+            "Plan.map_columns is deprecated; use with_columns with typed "
+            "expressions (repro.expr.col) so the optimizer and compile "
+            "cache see the computation", DeprecationWarning, stacklevel=2)
+        exprs = {c: OpaqueExpr(lambda t, _f=fn, _c=c: _f(t.columns[_c]),
+                               cols=(c,), label=getattr(fn, "__name__", "fn"))
+                 for c in cols}
+        return Plan(Node("with_columns", [self.node], {"exprs": exprs}))
 
     # -- communication ops ---------------------------------------------- #
     def join(self, other: "Plan", on: str, **kw) -> "Plan":

@@ -3,6 +3,7 @@
 from .table import Table, concat_tables
 from .ops_local import (
     add_scalar,
+    filter_expr,
     filter_rows,
     groupby_local,
     hash_columns,
@@ -10,6 +11,7 @@ from .ops_local import (
     join_overflow,
     map_columns,
     sort_local,
+    with_columns,
 )
 from .shuffle import ShuffleStats, default_bucket_capacity, shuffle
 from .groupby import groupby
@@ -18,8 +20,9 @@ from .sort import repartition_balanced, sort
 
 __all__ = [
     "Table", "concat_tables",
-    "add_scalar", "filter_rows", "groupby_local", "hash_columns",
-    "join_local", "join_overflow", "map_columns", "sort_local",
+    "add_scalar", "filter_expr", "filter_rows", "groupby_local",
+    "hash_columns", "join_local", "join_overflow", "map_columns",
+    "sort_local", "with_columns",
     "ShuffleStats", "default_bucket_capacity", "shuffle",
     "groupby", "join", "sort", "repartition_balanced",
 ]

@@ -113,6 +113,30 @@ def filter_rows(table: Table, pred: Callable[[Table], jax.Array]) -> Table:
     return table.take(order, jnp.sum(keep).astype(jnp.int32))
 
 
+def filter_expr(table: Table, expr) -> Table:
+    """Keep rows where the boolean ``repro.expr`` expression holds."""
+    keep = jnp.asarray(expr.evaluate(table))
+    if keep.dtype != jnp.bool_:
+        raise TypeError(
+            f"filter expression must be boolean, got {keep.dtype}: {expr!r}")
+    keep = jnp.broadcast_to(keep, (table.capacity,)) & table.valid_mask()
+    order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)
+    return table.take(order, jnp.sum(keep).astype(jnp.int32))
+
+
+def with_columns(table: Table, exprs: Mapping[str, "object"]) -> Table:
+    """Add/replace columns from ``{name: Expr}``; every expression reads
+    the *input* table (simultaneous assignment).  Scalar results (pure
+    literals) broadcast to full columns."""
+    out = dict(table.columns)
+    for name, e in exprs.items():
+        v = jnp.asarray(e.evaluate(table))
+        if v.ndim == 0:
+            v = jnp.broadcast_to(v, (table.capacity,))
+        out[name] = v
+    return Table(out, table.row_count)
+
+
 def add_scalar(table: Table, value, cols: Optional[Sequence[str]] = None) -> Table:
     """The paper's pipeline terminal op: add a scalar to value columns."""
     names = cols or table.column_names

@@ -1,0 +1,30 @@
+"""``repro.df`` — the user-facing lazy DataFrame API.
+
+Write ordinary dataframe code; the planner, compiled BSP execution, and
+(optionally) out-of-core morsel streaming run underneath:
+
+    import numpy as np
+    import repro.df as rdf
+    from repro.expr import col
+
+    df = rdf.read_numpy({"k": keys, "v": vals})
+    out = (df[df.v * 2 > 5]
+           .assign(v2=df.v + 1)
+           .groupby("k").agg({"v2": ["sum", "mean"]})
+           .sort_values("k"))
+    print(out.explain())        # optimized plan, rules fired
+    table = out.collect()       # executes on the active session env
+    pdf = out.to_pandas()
+
+See ``docs/api.md`` for the full frontend + expression reference.
+"""
+
+from ..expr import Expr, col, lit
+from .frame import DataFrame, GroupBy, from_pandas, from_table, read_numpy
+from .session import get_env, reset_default_env, session, set_default_env
+
+__all__ = [
+    "DataFrame", "GroupBy", "Expr", "col", "lit",
+    "read_numpy", "from_pandas", "from_table",
+    "session", "get_env", "set_default_env", "reset_default_env",
+]

@@ -1,0 +1,341 @@
+"""Lazy ``DataFrame``: pandas/Dask-style frontend over the planner.
+
+A ``DataFrame`` is a *recipe*: it wraps a ``core.plan.Plan`` builder tree
+plus the source tables its scans refer to, and tracks the output schema so
+column references are validated at build time.  Nothing executes until
+``collect()`` / ``to_pandas()``; ``explain()`` shows the optimized plan.
+Every transformation returns a new DataFrame (builders are immutable), so
+partial pipelines can be shared and extended freely — the structural
+fingerprint compile cache means two DataFrames that describe the same
+computation share one compiled program.
+
+Column references are typed expressions (``repro.expr``): ``df.v`` /
+``df["v"]`` is ``col("v")``, so ``df[df.v * 2 > 5]`` builds a declarative
+predicate the optimizer can split, push past joins, and prune columns
+through — none of which is possible with a lambda.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.env import CylonEnv, DistTable
+from ..core.plan import Plan, execute
+from ..core.store import SpillTable
+from ..expr import Col, Expr, ensure_expr
+from ..planner.logical import groupby_schema, join_schema
+from .session import get_env
+
+__all__ = ["DataFrame", "GroupBy", "read_numpy", "from_pandas", "from_table"]
+
+_src_ids = itertools.count()
+
+
+def _source_schema(table: Any) -> Tuple[str, ...]:
+    if hasattr(table, "column_names"):
+        return tuple(sorted(table.column_names))
+    if isinstance(table, Mapping):
+        return tuple(sorted(table))
+    raise TypeError(f"cannot infer a schema from {type(table).__name__}")
+
+
+class DataFrame:
+    """Lazy distributed dataframe (see module docstring).
+
+    Do not construct directly — use ``read_numpy`` / ``from_pandas`` /
+    ``from_table``, or derive from an existing DataFrame.
+    """
+
+    __slots__ = ("plan", "sources", "_schema", "_env")
+
+    def __init__(self, plan: Plan, sources: Dict[str, Any],
+                 schema: Sequence[str], env: Optional[CylonEnv] = None):
+        object.__setattr__(self, "plan", plan)
+        object.__setattr__(self, "sources", sources)
+        object.__setattr__(self, "_schema", tuple(sorted(schema)))
+        # env the data was ingested for (read_numpy(env=...)); preferred
+        # over the ambient session at collect() so the frame keeps running
+        # on the gang its tables are partitioned for
+        object.__setattr__(self, "_env", env)
+
+    def __setattr__(self, name, value):
+        raise AttributeError(
+            "DataFrames are immutable; use assign(...) to add columns")
+
+    # ------------------------------------------------------------------ #
+    # schema / column access
+    # ------------------------------------------------------------------ #
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return self._schema
+
+    def _check_cols(self, cols, what: str) -> None:
+        missing = sorted(set(cols) - set(self._schema))
+        if missing:
+            raise KeyError(f"{what} references unknown column(s) {missing}; "
+                           f"have {list(self._schema)}")
+
+    def _derive(self, plan: Plan, schema: Sequence[str],
+                sources: Optional[Dict[str, Any]] = None,
+                env: Optional[CylonEnv] = None) -> "DataFrame":
+        return DataFrame(plan, self.sources if sources is None else sources,
+                         schema, env if env is not None else self._env)
+
+    def __getattr__(self, name: str) -> Col:
+        # only reached when normal attribute lookup fails; shadowed column
+        # names (e.g. a column called "merge") are reachable via df["merge"]
+        if not name.startswith("_") and name in self._schema:
+            return Col(name)
+        raise AttributeError(f"no attribute or column {name!r} "
+                             f"(columns: {list(self._schema)})")
+
+    def __dir__(self) -> List[str]:
+        return sorted(set(super().__dir__()) | set(self._schema))
+
+    def __getitem__(self, key):
+        if isinstance(key, Expr):
+            return self.filter(key)
+        if isinstance(key, str):
+            self._check_cols([key], "df[...]")
+            return Col(key)
+        if isinstance(key, (list, tuple)):
+            return self.select(key)
+        raise TypeError(f"cannot index a DataFrame with {type(key).__name__}")
+
+    # ------------------------------------------------------------------ #
+    # transformations (all lazy)
+    # ------------------------------------------------------------------ #
+    def filter(self, pred: Expr) -> "DataFrame":
+        """Keep rows where the boolean expression holds
+        (``df[df.v > 0]`` is sugar for ``df.filter(df.v > 0)``)."""
+        if not isinstance(pred, Expr):
+            raise TypeError(
+                "filter takes a typed expression (df.v > 0); for a legacy "
+                "callable use the core Plan builder's deprecated shim")
+        cols = pred.columns()
+        if cols is not None:
+            self._check_cols(cols, "filter predicate")
+        return self._derive(self.plan.filter(pred), self._schema)
+
+    def select(self, cols: Sequence[str]) -> "DataFrame":
+        """Projection: ``df[["k", "v"]]``."""
+        cols = list(cols)
+        self._check_cols(cols, "select")
+        return self._derive(self.plan.project(cols), cols)
+
+    def assign(self, **exprs: Union[Expr, Any]) -> "DataFrame":
+        """Add or replace columns: ``df.assign(v2=df.v * 2)``.
+
+        All expressions read the *input* frame (simultaneous assignment,
+        like pandas); bare scalars broadcast to constant columns.
+        """
+        return self.with_columns(exprs)
+
+    def with_columns(self, exprs: Mapping[str, Union[Expr, Any]]
+                     ) -> "DataFrame":
+        """Dict form of ``assign`` (allows non-identifier column names)."""
+        mapping = {name: ensure_expr(e) for name, e in exprs.items()}
+        for name, e in mapping.items():
+            cols = e.columns()
+            if cols is not None:
+                self._check_cols(cols, f"assign {name!r}")
+        return self._derive(self.plan.with_columns(mapping),
+                            set(self._schema) | set(mapping))
+
+    def merge(self, other: "DataFrame", on: str, **kw) -> "DataFrame":
+        """Inner equi-join (hash-partitioned on ``on``); colliding right
+        columns get the ``_r`` suffix.  Extra ``kw`` (``out_capacity``,
+        ``bucket_capacity``, ``shuffle_out_capacity``, ...) pass through to
+        the join operator."""
+        if not isinstance(other, DataFrame):
+            raise TypeError("merge expects another repro.df.DataFrame")
+        self._check_cols([on], "merge key")
+        other._check_cols([on], "merge key")
+        clash = [n for n in self.sources
+                 if n in other.sources
+                 and other.sources[n] is not self.sources[n]]
+        if clash:
+            # silently keeping one side would make both scans read the
+            # same table and return wrong data
+            raise ValueError(
+                f"merge source name collision on {clash}: the frames were "
+                f"built from different tables under the same scan name — "
+                f"pass distinct name= to from_table/read_numpy")
+        if (self._env is not None and other._env is not None
+                and other._env is not self._env):
+            raise ValueError(
+                "merge of frames ingested for different envs; re-ingest "
+                "one side (read_numpy(..., env=...)) on a common env")
+        sources = {**self.sources, **other.sources}
+        schema = join_schema(self._schema, other._schema, on)
+        return self._derive(self.plan.join(other.plan, on=on, **kw),
+                            schema, sources, env=self._env or other._env)
+
+    def groupby(self, keys: Union[str, Sequence[str]], **kw) -> "GroupBy":
+        """Group by key column(s); terminate with ``.agg(...)``.  Extra
+        ``kw`` (``bucket_capacity``, ``out_capacity``, ``pre_aggregate``,
+        ...) pass through to the groupby operator."""
+        keys = [keys] if isinstance(keys, str) else list(keys)
+        self._check_cols(keys, "groupby keys")
+        return GroupBy(self, keys, kw)
+
+    def sort_values(self, by: Union[str, Sequence[str]], **kw) -> "DataFrame":
+        """Globally sort (ascending) by column(s): sample-sort range
+        partitioning + local sort."""
+        by = [by] if isinstance(by, str) else list(by)
+        self._check_cols(by, "sort_values")
+        return self._derive(self.plan.sort(by, **kw), self._schema)
+
+    def repartition(self, on: Union[str, Sequence[str]], **kw) -> "DataFrame":
+        """Hash-partition rows by key column(s) (an explicit shuffle; the
+        optimizer elides it if placement already holds)."""
+        on = [on] if isinstance(on, str) else list(on)
+        self._check_cols(on, "repartition")
+        return self._derive(self.plan.shuffle(on, **kw), self._schema)
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def collect(self, env: Optional[CylonEnv] = None, mode: str = "bsp",
+                optimize: bool = True, collect_stats: bool = False,
+                morsel_rows: Optional[int] = None, **kw):
+        """Run the accumulated plan; returns a ``DistTable`` (or a
+        host-resident ``SpillTable`` with ``morsel_rows=``, and a
+        ``(result, ExecStats)`` pair with ``collect_stats=True``).
+
+        ``env`` resolution: explicit argument > the env the data was
+        ingested for (``read_numpy(env=...)``) > the active session env
+        (``repro.df.session``).  Extra ``kw`` (``shuffle_impl``,
+        ``a2a_chunks``, ``capacity_factor``, ...) pass through to
+        ``core.plan.execute``.
+        """
+        if env is None:
+            env = self._env if self._env is not None else get_env()
+        if morsel_rows is None:
+            # catch gang mismatches here with a clear message instead of a
+            # shard_map divisibility error deep inside compilation (the
+            # morsel path re-buckets host spills, so it is exempt)
+            for sname, t in self.sources.items():
+                if (isinstance(t, DistTable)
+                        and t.parallelism != env.parallelism):
+                    raise ValueError(
+                        f"source {sname!r} is partitioned for "
+                        f"{t.parallelism} ranks but the resolved env has "
+                        f"{env.parallelism}; pass collect(env=<ingest "
+                        f"env>) or re-ingest under this session")
+        return execute(self.plan, env, self.sources, mode=mode,
+                       optimize=optimize, collect_stats=collect_stats,
+                       morsel_rows=morsel_rows, **kw)
+
+    def to_numpy(self, **kw) -> Dict[str, np.ndarray]:
+        """``collect`` + gather valid rows to host numpy columns."""
+        return self.collect(**kw).to_numpy()
+
+    def to_pandas(self, **kw):
+        """``collect`` + convert to a ``pandas.DataFrame``."""
+        import pandas as pd
+        return pd.DataFrame(self.to_numpy(**kw))
+
+    def explain(self, **kw) -> str:
+        """EXPLAIN the optimized plan (stages, partitioning, fired rules)."""
+        return self.plan.explain(self.sources, **kw)
+
+    def num_stages(self) -> int:
+        return self.plan.num_stages()
+
+    def __repr__(self) -> str:
+        return (f"<repro.df.DataFrame cols={list(self._schema)} "
+                f"sources={sorted(self.sources)} lazy>")
+
+
+class GroupBy:
+    """Intermediate ``df.groupby(keys)`` holder; ``agg`` builds the plan."""
+
+    __slots__ = ("_df", "_keys", "_kw")
+
+    def __init__(self, df: DataFrame, keys: List[str],
+                 kw: Optional[Dict[str, Any]] = None):
+        self._df = df
+        self._keys = keys
+        self._kw = kw or {}
+
+    def agg(self, aggs: Optional[Mapping[str, Union[str, Sequence[str]]]]
+            = None, **named: Union[str, Sequence[str]]) -> DataFrame:
+        """Aggregate: ``.agg({"v": ["sum", "mean"]})`` or ``.agg(v="sum")``.
+
+        Supported: sum / count / min / max / mean (mean decomposes into
+        sum+count so distributed partials stay mergeable).  Output columns
+        are ``{col}_{agg}``.
+        """
+        merged: Dict[str, List[str]] = {}
+        for src in (aggs or {}), named:
+            for colname, names in src.items():
+                names = [names] if isinstance(names, str) else list(names)
+                merged.setdefault(colname, []).extend(
+                    a for a in names if a not in merged.get(colname, []))
+        if not merged:
+            raise ValueError("agg needs at least one {column: aggs} entry")
+        self._df._check_cols(merged, "agg")
+        schema = groupby_schema(self._keys, merged)
+        return self._df._derive(
+            self._df.plan.groupby(self._keys, merged, **self._kw), schema)
+
+
+# ---------------------------------------------------------------------- #
+# Constructors
+# ---------------------------------------------------------------------- #
+def from_table(table: Union[DistTable, SpillTable, Mapping[str, np.ndarray]],
+               name: Optional[str] = None,
+               env: Optional[CylonEnv] = None) -> DataFrame:
+    """Wrap an existing ``DistTable`` / ``SpillTable`` / host column dict
+    as a scan.  Host-resident sources (SpillTable, dicts) require
+    ``collect(morsel_rows=...)`` streaming execution.  ``env`` pins the
+    gang the frame executes on (see ``DataFrame.collect``)."""
+    name = name or f"t{next(_src_ids)}"
+    return DataFrame(Plan.scan(name), {name: table}, _source_schema(table),
+                     env)
+
+
+def read_numpy(data: Mapping[str, np.ndarray], *,
+               env: Optional[CylonEnv] = None,
+               capacity: Optional[int] = None,
+               spill: bool = False, chunk_rows: Optional[int] = None,
+               name: Optional[str] = None) -> DataFrame:
+    """Ingest host numpy columns as a distributed scan.
+
+    Default: block-distribute onto the active env's devices (a
+    ``DistTable``; ``capacity`` sets per-rank slots).  An explicit ``env``
+    both partitions the data for that gang and pins later ``collect()``
+    calls to it.  ``spill=True`` keeps the data host-resident as a
+    ``SpillTable`` (in ``chunk_rows`` pinned chunks) for out-of-core
+    ``collect(morsel_rows=...)`` runs.
+    """
+    p = (env if env is not None else get_env()).parallelism
+    if spill:
+        if capacity is not None:
+            raise TypeError("capacity only applies to device tables "
+                            "(spill=False); use chunk_rows for spills")
+        table: Any = (SpillTable.from_numpy(data, p, chunk_rows=chunk_rows)
+                      if chunk_rows else SpillTable.from_numpy(data, p))
+    else:
+        if chunk_rows is not None:
+            raise TypeError("chunk_rows only applies with spill=True")
+        table = DistTable.from_numpy(dict(data), p, capacity)
+    return from_table(table, name, env)
+
+
+def from_pandas(pdf, **kw) -> DataFrame:
+    """Ingest a ``pandas.DataFrame`` (numeric columns) — see
+    ``read_numpy`` for keyword arguments."""
+    data = {}
+    for colname in pdf.columns:
+        arr = np.asarray(pdf[colname])
+        if not np.issubdtype(arr.dtype, np.number) and arr.dtype != np.bool_:
+            raise TypeError(
+                f"column {colname!r} has unsupported dtype {arr.dtype}; "
+                f"only numeric/bool columns are supported")
+        data[str(colname)] = arr
+    return read_numpy(data, **kw)

@@ -1,0 +1,97 @@
+"""Session management: which ``CylonEnv`` a lazy DataFrame executes on.
+
+The paper's pitch is that users write ordinary dataframe code while the
+HPC environment underneath is supplied for them.  ``repro.df`` therefore
+never requires an explicit env: ``collect()`` resolves the *active* env —
+the innermost ``session(...)`` context manager, else a process-wide
+default created lazily over all local devices:
+
+    import repro.df as rdf
+
+    df = rdf.read_numpy({"k": keys, "v": vals})     # default env
+    out = df[df.k > 0].collect()
+
+    with rdf.session(communicator="ring") as env:   # scoped override
+        out = df2.collect()                         # runs on `env`
+
+Sessions nest (a stack); an explicit ``env=`` argument on ``collect`` /
+``read_numpy`` always wins.  ``set_default_env`` pins the process-wide
+fallback (e.g. a ``DevicePool`` partition) without a ``with`` block.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, List, Optional, Sequence
+
+import jax
+
+from ..core.env import CylonEnv
+
+__all__ = ["session", "get_env", "set_default_env", "reset_default_env"]
+
+_lock = threading.Lock()
+_default: Optional[CylonEnv] = None
+_tls = threading.local()
+
+
+def _stack() -> List[CylonEnv]:
+    """Per-thread session stack: concurrent threads scope independently
+    (the process default below is shared, guarded by ``_lock``)."""
+    try:
+        return _tls.stack
+    except AttributeError:
+        _tls.stack = []
+        return _tls.stack
+
+
+def get_env() -> CylonEnv:
+    """The active env: innermost ``session`` on this thread, else the
+    lazily-created process default (all local devices, XLA communicator)."""
+    global _default
+    stack = _stack()
+    if stack:
+        return stack[-1]
+    with _lock:
+        if _default is None:
+            _default = CylonEnv()
+        return _default
+
+
+def set_default_env(env: CylonEnv) -> None:
+    """Pin the process-wide fallback env (overrides lazy creation)."""
+    global _default
+    with _lock:
+        _default = env
+
+
+def reset_default_env() -> None:
+    """Drop the process default so the next ``get_env`` recreates it
+    (mainly for tests that reconfigure the device mesh)."""
+    global _default
+    with _lock:
+        _default = None
+
+
+@contextlib.contextmanager
+def session(env: Optional[CylonEnv] = None, *,
+            devices: Optional[Sequence[jax.Device]] = None,
+            communicator: str = "xla") -> Iterator[CylonEnv]:
+    """Scope an active env: ``with session(...) as env: df.collect()``.
+
+    Pass an existing ``env``, or let the session build one from
+    ``devices`` (default: all local) and ``communicator``.  The compiled
+    program cache lives on the env, so reusing one session across many
+    ``collect`` calls is what makes repeat execution cheap.
+    """
+    if env is None:
+        env = CylonEnv(devices=devices, communicator=communicator)
+    elif devices is not None:
+        raise TypeError("pass either env= or devices=, not both")
+    stack = _stack()
+    stack.append(env)
+    try:
+        yield env
+    finally:
+        stack.pop()

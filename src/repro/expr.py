@@ -1,0 +1,460 @@
+"""Typed column-expression AST — the declarative frontend of the planner.
+
+The original ``Plan.filter`` / ``Plan.map_columns`` took opaque Python
+callables, which blinded every layer that wants to *reason* about the
+computation: predicate pushdown could not tell which columns a lambda
+touches, projection pushdown had to keep every input column alive, and the
+structural-fingerprint compile cache could only key a callable by its
+bytecode + closure (so two semantically identical lambdas from different
+source lines forced separate compilations).
+
+``Expr`` fixes all three at once.  An expression is a small immutable tree
+
+    col("v") * 2 > lit(5)          # BinOp(">", BinOp("*", Col, Lit), Lit)
+
+supporting arithmetic (``+ - * / // % **``), comparisons
+(``< <= > >= == !=``), boolean algebra (``& | ^ ~``) and unary ops
+(``-x``, ``abs``), and it exposes exactly the three views the engine needs:
+
+* ``columns()``     — the set of input columns read (exact liveness for
+                      projection pushdown and join-side predicate routing),
+* ``fingerprint()`` — a canonical value-based string: equal for any two
+                      structurally equal expressions however/wherever they
+                      were built (stable compile-cache keys),
+* ``evaluate(t)``   — lowering to a jnp computation over ``Table`` columns
+                      (runs inside the compiled shard_map programs).
+
+``OpaqueExpr`` wraps a legacy callable so the deprecated
+``Plan.filter(callable)`` / ``Plan.map_columns`` paths keep executing; it
+pins its *declared* columns (or ``None`` = unknown, blocking pushdown past
+schema-changing boundaries, exactly the old conservative behaviour) and
+fingerprints by bytecode + captured values, the best a callable allows.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, FrozenSet, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Expr", "Col", "Lit", "BinOp", "UnaryOp", "OpaqueExpr",
+           "col", "lit", "ensure_expr", "token"]
+
+
+# ---------------------------------------------------------------------- #
+# Canonical value tokens (shared with the planner's structural fingerprint)
+# ---------------------------------------------------------------------- #
+def token(v: Any) -> str:
+    """Canonical string for a parameter value, usable as a cache-key part.
+
+    Expressions delegate to their value-based ``fingerprint``; callables
+    are hashed by bytecode + defaults + captured closure values (bytecode
+    alone is not identity — two lambdas from one source line may differ
+    only in captured values); arrays are hashed by raw bytes (repr
+    truncates large arrays).
+    """
+    if isinstance(v, Expr):
+        return f"expr:{v.fingerprint()}"
+    if callable(v):
+        code = getattr(v, "__code__", None)
+        if code is None:
+            return f"fn:{getattr(v, '__qualname__', repr(v))}"
+        cells = []
+        for c in (v.__closure__ or ()):
+            try:
+                cells.append(token(c.cell_contents))
+            except ValueError:           # empty cell
+                cells.append("<empty>")
+        extras = (token(v.__defaults__ or ())
+                  + token(getattr(v, "__kwdefaults__", None) or {})
+                  + "|".join(cells))
+        h = hashlib.sha1(code.co_code + repr(code.co_consts).encode()
+                         + extras.encode())
+        return f"fn:{v.__module__}.{v.__qualname__}:{h.hexdigest()[:12]}"
+    if isinstance(v, dict):
+        return "{" + ",".join(f"{k}:{token(v[k])}" for k in sorted(v)) + "}"
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(token(x) for x in v) + "]"
+    if isinstance(v, (np.ndarray, jax.Array)):
+        a = np.asarray(v)
+        return (f"arr:{a.dtype}:{a.shape}:"
+                f"{hashlib.sha1(a.tobytes()).hexdigest()[:12]}")
+    return repr(v)
+
+
+# ---------------------------------------------------------------------- #
+# Operator tables
+# ---------------------------------------------------------------------- #
+_ARITH = {
+    "+": jnp.add, "-": jnp.subtract, "*": jnp.multiply,
+    "/": jnp.true_divide, "//": jnp.floor_divide, "%": jnp.mod,
+    "**": jnp.power,
+}
+_COMPARE = {
+    ">": jnp.greater, ">=": jnp.greater_equal,
+    "<": jnp.less, "<=": jnp.less_equal,
+    "==": jnp.equal, "!=": jnp.not_equal,
+}
+_BOOL = {
+    "&": jnp.bitwise_and, "|": jnp.bitwise_or, "^": jnp.bitwise_xor,
+}
+_BINOPS = {**_ARITH, **_COMPARE, **_BOOL}
+_UNARY = {"-": jnp.negative, "abs": jnp.abs, "~": jnp.invert}
+
+#: precedence for minimal-paren pretty printing — matches *Python's* table
+#: (comparisons bind looser than & | ^), so rendered expressions parse back
+#: to the same tree
+_PREC = {"==": 1, "!=": 1, "<": 1, "<=": 1, ">": 1, ">=": 1,
+         "|": 2, "^": 3, "&": 4,
+         "+": 5, "-": 5, "*": 6, "/": 6, "//": 6, "%": 6, "**": 8}
+
+
+class Expr:
+    """Base class: operator overloads build the tree; subclasses store it."""
+
+    __slots__ = ()
+
+    # -- engine-facing views (implemented by subclasses) ----------------- #
+    def columns(self) -> Optional[FrozenSet[str]]:
+        """Exact set of input columns read, or ``None`` if unknown
+        (opaque callables without declared columns)."""
+        raise NotImplementedError
+
+    def fingerprint(self) -> str:
+        """Canonical value-based identity (compile-cache key component)."""
+        raise NotImplementedError
+
+    def evaluate(self, table) -> jax.Array:
+        """Lower to a jnp value over ``table``'s columns (jit-traceable)."""
+        raise NotImplementedError
+
+    def is_boolean(self) -> bool:
+        """True if this expression provably yields a boolean mask — the
+        requirement for ``&``-conjunction splitting to be a sound rewrite
+        (on integers ``&`` is bitwise, not logical)."""
+        return False
+
+    # -- operator overloads --------------------------------------------- #
+    def _bin(self, op: str, other: Any, swap: bool = False) -> "BinOp":
+        other = ensure_expr(other)
+        return BinOp(op, other, self) if swap else BinOp(op, self, other)
+
+    def __add__(self, o):
+        return self._bin("+", o)
+
+    def __radd__(self, o):
+        return self._bin("+", o, swap=True)
+
+    def __sub__(self, o):
+        return self._bin("-", o)
+
+    def __rsub__(self, o):
+        return self._bin("-", o, swap=True)
+
+    def __mul__(self, o):
+        return self._bin("*", o)
+
+    def __rmul__(self, o):
+        return self._bin("*", o, swap=True)
+
+    def __truediv__(self, o):
+        return self._bin("/", o)
+
+    def __rtruediv__(self, o):
+        return self._bin("/", o, swap=True)
+
+    def __floordiv__(self, o):
+        return self._bin("//", o)
+
+    def __rfloordiv__(self, o):
+        return self._bin("//", o, swap=True)
+
+    def __mod__(self, o):
+        return self._bin("%", o)
+
+    def __rmod__(self, o):
+        return self._bin("%", o, swap=True)
+
+    def __pow__(self, o):
+        return self._bin("**", o)
+
+    def __rpow__(self, o):
+        return self._bin("**", o, swap=True)
+
+    def __gt__(self, o):
+        return self._bin(">", o)
+
+    def __ge__(self, o):
+        return self._bin(">=", o)
+
+    def __lt__(self, o):
+        return self._bin("<", o)
+
+    def __le__(self, o):
+        return self._bin("<=", o)
+
+    # NOTE: == / != build expressions, so Exprs are not usefully hashable
+    # by value and must not be used as dict keys / in sets.
+    def __eq__(self, o):  # type: ignore[override]
+        return self._bin("==", o)
+
+    def __ne__(self, o):  # type: ignore[override]
+        return self._bin("!=", o)
+
+    __hash__ = None  # type: ignore[assignment]
+
+    def __and__(self, o):
+        return self._bin("&", o)
+
+    def __rand__(self, o):
+        return self._bin("&", o, swap=True)
+
+    def __or__(self, o):
+        return self._bin("|", o)
+
+    def __ror__(self, o):
+        return self._bin("|", o, swap=True)
+
+    def __xor__(self, o):
+        return self._bin("^", o)
+
+    def __rxor__(self, o):
+        return self._bin("^", o, swap=True)
+
+    def __neg__(self):
+        return UnaryOp("-", self)
+
+    def __abs__(self):
+        return UnaryOp("abs", self)
+
+    def abs(self) -> "UnaryOp":
+        return UnaryOp("abs", self)
+
+    def __invert__(self):
+        return UnaryOp("~", self)
+
+    def __bool__(self):
+        raise TypeError(
+            "an Expr has no truth value (it is a lazy column expression); "
+            "use & | ~ for boolean logic, not `and`/`or`/`not`")
+
+    def __repr__(self) -> str:
+        return self._render(0)
+
+    def _render(self, parent_prec: int) -> str:
+        raise NotImplementedError
+
+
+class Col(Expr):
+    """Reference to a named input column."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        if not isinstance(name, str):
+            raise TypeError(f"column name must be a str, got {type(name)}")
+        object.__setattr__(self, "name", name)
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset((self.name,))
+
+    def fingerprint(self) -> str:
+        return f"col({self.name})"
+
+    def evaluate(self, table) -> jax.Array:
+        try:
+            return table.columns[self.name]
+        except KeyError:
+            raise KeyError(
+                f"column {self.name!r} not in table "
+                f"(have {list(table.column_names)})") from None
+
+    def _render(self, parent_prec: int) -> str:
+        return self.name
+
+
+class Lit(Expr):
+    """Literal scalar.  Python scalars stay weakly typed (so ``col + 1.0``
+    follows jnp's weak-promotion rules, matching what inline jnp code would
+    do); numpy scalars pin their dtype."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        if isinstance(value, Expr):
+            raise TypeError("lit() of an Expr — pass a scalar")
+        if isinstance(value, (np.ndarray, jax.Array)) and np.ndim(value) != 0:
+            raise TypeError("lit() takes a scalar, not an array")
+        object.__setattr__(self, "value", value)
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> FrozenSet[str]:
+        return frozenset()
+
+    def fingerprint(self) -> str:
+        v = self.value
+        if isinstance(v, (np.generic, np.ndarray, jax.Array)):
+            a = np.asarray(v)
+            return f"lit({a.dtype}:{a.item()!r})"
+        return f"lit({type(v).__name__}:{v!r})"
+
+    def is_boolean(self) -> bool:
+        return isinstance(self.value, (bool, np.bool_))
+
+    def evaluate(self, table) -> jax.Array:
+        return self.value  # jnp ops promote python scalars weakly
+
+    def _render(self, parent_prec: int) -> str:
+        return repr(self.value)
+
+
+class BinOp(Expr):
+    __slots__ = ("op", "left", "right")
+
+    def __init__(self, op: str, left: Expr, right: Expr):
+        if op not in _BINOPS:
+            raise ValueError(f"unknown binary op {op!r}")
+        object.__setattr__(self, "op", op)
+        object.__setattr__(self, "left", ensure_expr(left))
+        object.__setattr__(self, "right", ensure_expr(right))
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> Optional[FrozenSet[str]]:
+        l, r = self.left.columns(), self.right.columns()
+        if l is None or r is None:
+            return None
+        return l | r
+
+    def fingerprint(self) -> str:
+        return (f"({self.left.fingerprint()}{self.op}"
+                f"{self.right.fingerprint()})")
+
+    def is_boolean(self) -> bool:
+        if self.op in _COMPARE:
+            return True
+        if self.op in _BOOL:
+            return self.left.is_boolean() and self.right.is_boolean()
+        return False
+
+    def evaluate(self, table) -> jax.Array:
+        return _BINOPS[self.op](self.left.evaluate(table),
+                                self.right.evaluate(table))
+
+    def _render(self, parent_prec: int) -> str:
+        prec = _PREC[self.op]
+        if self.op == "**":    # right-associative: (a**b)**c needs parens
+            s = (f"{self.left._render(prec + 1)} ** "
+                 f"{self.right._render(prec)}")
+        else:
+            s = (f"{self.left._render(prec)} {self.op} "
+                 f"{self.right._render(prec + 1)}")
+        return f"({s})" if prec < parent_prec else s
+
+
+class UnaryOp(Expr):
+    __slots__ = ("op", "operand")
+
+    def __init__(self, op: str, operand: Expr):
+        if op not in _UNARY:
+            raise ValueError(f"unknown unary op {op!r}")
+        object.__setattr__(self, "op", op)
+        object.__setattr__(self, "operand", ensure_expr(operand))
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> Optional[FrozenSet[str]]:
+        return self.operand.columns()
+
+    def fingerprint(self) -> str:
+        return f"{self.op}({self.operand.fingerprint()})"
+
+    def is_boolean(self) -> bool:
+        return self.op == "~" and self.operand.is_boolean()
+
+    def evaluate(self, table) -> jax.Array:
+        return _UNARY[self.op](self.operand.evaluate(table))
+
+    def _render(self, parent_prec: int) -> str:
+        if self.op == "abs":
+            return f"abs({self.operand._render(0)})"
+        # unary - / ~ bind at 7: looser than ** (so (-a)**2 needs parens —
+        # Python parses "-a ** 2" as -(a**2)), tighter than * and /
+        s = f"{self.op}{self.operand._render(7)}"
+        return f"({s})" if parent_prec > 7 else s
+
+
+class OpaqueExpr(Expr):
+    """Legacy-callable escape hatch (``fn(Table) -> Array``).
+
+    ``cols`` pins the columns the callable reads; ``None`` means unknown,
+    which forces the optimizer into the old conservative behaviour (no
+    pushdown past schema-changing boundaries, full-schema liveness).  The
+    fingerprint falls back to bytecode + captured values — stable for the
+    *same* function object or closures over equal values, but distinct
+    lambdas that compute the same thing still miss the cache (the
+    instability typed expressions exist to fix).
+    """
+
+    __slots__ = ("fn", "_cols", "label")
+
+    def __init__(self, fn: Callable, cols: Optional[Sequence[str]] = None,
+                 label: Optional[str] = None):
+        if not callable(fn):
+            raise TypeError(f"OpaqueExpr needs a callable, got {type(fn)}")
+        object.__setattr__(self, "fn", fn)
+        object.__setattr__(self, "_cols",
+                           None if cols is None else tuple(cols))
+        object.__setattr__(self, "label",
+                           label or getattr(fn, "__name__", "opaque"))
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> Optional[FrozenSet[str]]:
+        return None if self._cols is None else frozenset(self._cols)
+
+    def fingerprint(self) -> str:
+        return f"opaque({token(self.fn)};cols={self._cols})"
+
+    def evaluate(self, table) -> jax.Array:
+        return self.fn(table)
+
+    def _render(self, parent_prec: int) -> str:
+        decl = ",".join(self._cols) if self._cols else "?"
+        return f"<{self.label}:{decl}>"
+
+
+# ---------------------------------------------------------------------- #
+# Factories
+# ---------------------------------------------------------------------- #
+def col(name: str) -> Col:
+    """Reference an input column: ``col("v") * 2 > lit(5)``."""
+    return Col(name)
+
+
+def lit(value) -> Lit:
+    """Literal scalar (explicit form; bare scalars auto-lift in operators)."""
+    return Lit(value)
+
+
+def ensure_expr(v: Any) -> Expr:
+    """Lift scalars to ``Lit``; pass ``Expr`` through; reject the rest."""
+    if isinstance(v, Expr):
+        return v
+    if isinstance(v, (bool, int, float, complex, np.generic)):
+        return Lit(v)
+    if isinstance(v, (np.ndarray, jax.Array)) and np.ndim(v) == 0:
+        return Lit(v)
+    raise TypeError(f"cannot use {type(v).__name__} in a column expression; "
+                    f"expected an Expr or a scalar")

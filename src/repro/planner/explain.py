@@ -25,10 +25,11 @@ def _label(n: LogicalNode) -> str:
     if n.op == "project":
         return f"project[{','.join(p['cols'])}]"
     if n.op == "filter":
-        cols = p.get("cols")
-        return f"filter[{','.join(cols)}]" if cols else "filter[?]"
-    if n.op == "map_columns":
-        return f"map_columns[{','.join(p['cols'])}]"
+        return f"filter[{p['expr']!r}]"
+    if n.op == "with_columns":
+        assigns = ",".join(f"{name}={e!r}"
+                           for name, e in sorted(p["exprs"].items()))
+        return f"with_columns[{assigns}]"
     if n.op == "add_scalar":
         cols = p.get("cols")
         return f"add_scalar[{','.join(cols) if cols else '*'}]"

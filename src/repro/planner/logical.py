@@ -34,7 +34,8 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 #: ops that may execute a shuffle (communication boundaries)
 COMM_OPS = ("shuffle", "join", "groupby", "sort")
 #: purely local ops
-LOCAL_OPS = ("scan", "project", "filter", "map_columns", "add_scalar", "noop")
+LOCAL_OPS = ("scan", "project", "filter", "with_columns", "add_scalar",
+             "noop")
 
 #: paper §V data recipe: ~90% key cardinality (drives groupby estimates)
 DEFAULT_GROUP_RATIO = 0.9
@@ -204,7 +205,16 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
         n.schema = i0.schema
         n.partitioning = i0.partitioning
         n.est_rows = i0.est_rows * DEFAULT_FILTER_SELECTIVITY
-    elif n.op in ("map_columns", "add_scalar"):
+    elif n.op == "with_columns":
+        # assignments may introduce new columns; rewriting a partitioning
+        # column's values breaks the placement property
+        assigned = set(p["exprs"])
+        n.schema = tuple(sorted(set(i0.schema) | assigned))
+        n.partitioning = (Partitioning.none()
+                          if assigned & set(i0.partitioning.cols)
+                          else i0.partitioning)
+        n.est_rows = i0.est_rows
+    elif n.op == "add_scalar":
         n.schema = i0.schema
         touched = p.get("cols")
         touched = set(i0.schema if touched is None else touched)

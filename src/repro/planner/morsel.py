@@ -271,9 +271,9 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
     if node.op == "project":
         return cur.select(p_["cols"])
     if node.op == "filter":
-        return ops_local.filter_rows(cur, p_["pred"])
-    if node.op == "map_columns":
-        return ops_local.map_columns(cur, p_["fn"], p_["cols"])
+        return ops_local.filter_expr(cur, p_["expr"])
+    if node.op == "with_columns":
+        return ops_local.with_columns(cur, p_["exprs"])
     if node.op == "add_scalar":
         return ops_local.add_scalar(cur, p_["value"], p_.get("cols"))
 

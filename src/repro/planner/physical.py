@@ -33,6 +33,7 @@ import numpy as np
 
 from ..comm import Communicator
 from ..dataframe import ops_local
+from ..expr import token as expr_token
 from ..dataframe.groupby import _normalize, finalize_groupby
 from ..dataframe.groupby import groupby as df_groupby
 from ..dataframe.ops_local import hash_columns
@@ -56,35 +57,11 @@ _SEMANTIC = {
 # ---------------------------------------------------------------------- #
 # Structural fingerprint
 # ---------------------------------------------------------------------- #
-def _token(v: Any) -> str:
-    if callable(v):
-        code = getattr(v, "__code__", None)
-        if code is None:
-            return f"fn:{getattr(v, '__qualname__', repr(v))}"
-        # bytecode alone is not identity: two lambdas from the same source
-        # line differ only in captured values — hash defaults and closure
-        # cells too, or structurally different plans share a cache slot
-        cells = []
-        for c in (v.__closure__ or ()):
-            try:
-                cells.append(_token(c.cell_contents))
-            except ValueError:           # empty cell
-                cells.append("<empty>")
-        extras = (_token(v.__defaults__ or ())
-                  + _token(getattr(v, "__kwdefaults__", None) or {})
-                  + "|".join(cells))
-        h = hashlib.sha1(code.co_code + repr(code.co_consts).encode()
-                         + extras.encode())
-        return f"fn:{v.__module__}.{v.__qualname__}:{h.hexdigest()[:12]}"
-    if isinstance(v, dict):
-        return "{" + ",".join(f"{k}:{_token(v[k])}" for k in sorted(v)) + "}"
-    if isinstance(v, (list, tuple)):
-        return "[" + ",".join(_token(x) for x in v) + "]"
-    if isinstance(v, (np.ndarray, jax.Array)):
-        a = np.asarray(v)  # repr truncates large arrays; hash raw bytes
-        return (f"arr:{a.dtype}:{a.shape}:"
-                f"{hashlib.sha1(a.tobytes()).hexdigest()[:12]}")
-    return repr(v)
+# Canonical value tokens live in ``repro.expr`` (expressions fingerprint by
+# VALUE — two structurally equal expression trees share a token however
+# they were built — while legacy callables hash bytecode + captured
+# closure values, the best a callable allows).
+_token = expr_token
 
 
 def fingerprint(root: LogicalNode) -> str:
@@ -205,7 +182,7 @@ def _stat_vec(st: ShuffleStats, width: int) -> jax.Array:
 def _shuffle_kw(node: LogicalNode) -> Dict[str, Any]:
     keep = _SEMANTIC.get(node.op, ())
     return {k: v for k, v in node.params.items()
-            if k not in keep and k not in ("elided", "note", "cols", "pred")}
+            if k not in keep and k not in ("elided", "note", "expr", "exprs")}
 
 
 def eval_node(node: LogicalNode, comm: Communicator,
@@ -231,9 +208,9 @@ def eval_node(node: LogicalNode, comm: Communicator,
     if node.op == "project":
         return ins[0].select(p["cols"])
     if node.op == "filter":
-        return ops_local.filter_rows(ins[0], p["pred"])
-    if node.op == "map_columns":
-        return ops_local.map_columns(ins[0], p["fn"], p["cols"])
+        return ops_local.filter_expr(ins[0], p["expr"])
+    if node.op == "with_columns":
+        return ops_local.with_columns(ins[0], p["exprs"])
     if node.op == "add_scalar":
         return ops_local.add_scalar(ins[0], p["value"], p.get("cols"))
 

@@ -15,11 +15,21 @@ arXiv:2209.06146, turned into rewrites):
                            requirement; the collective term vanishes.
 * join-side selection    — when one join side is already co-partitioned on
                            the key, shuffle only the other side.
-* predicate pushdown     — move filters below shuffles/sorts (and into join
-                           or groupby inputs when the predicate's declared
-                           columns allow it) so fewer rows hit the wire.
+* conjunction splitting  — a filter on ``a & b`` sitting on a communication
+                           boundary splits into two stacked filters so each
+                           conjunct can be pushed independently (e.g. one
+                           side of a join each); conjuncts that end up
+                           adjacent again are re-fused after the fixpoint.
+* predicate pushdown     — move filters below shuffles/sorts/with_columns
+                           (and into join or groupby inputs when the
+                           predicate's column set allows it) so fewer rows
+                           hit the wire.  Typed expressions carry exact
+                           column sets; opaque callables without declared
+                           columns stay put.
 * projection pushdown    — insert projections below communication boundaries
-                           so dead columns never hit the wire.
+                           so dead columns never hit the wire; expression
+                           inputs are pruned exactly (``Expr.columns()``)
+                           and dead ``with_columns`` assignments dropped.
 * pre-aggregation        — algebraic aggs (sum/count/min/max/mean) are
                            locally pre-aggregated before the groupby shuffle
                            so one row per (rank, group) moves instead of one
@@ -30,6 +40,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Set, Tuple
 
+from ..expr import BinOp
 from .logical import COMM_OPS, LogicalNode, annotate, consumers, topo
 
 #: params that carry optimizer decisions rather than user intent
@@ -104,11 +115,46 @@ def select_join_sides(root: LogicalNode) -> List[str]:
 
 
 # ---------------------------------------------------------------------- #
-# Predicate pushdown
+# Conjunction splitting + predicate pushdown
 # ---------------------------------------------------------------------- #
 def _pred_cols(node: LogicalNode) -> Optional[Tuple[str, ...]]:
-    cols = node.params.get("cols")
-    return tuple(cols) if cols is not None else None
+    """Columns the filter's expression reads; None = unknown (opaque)."""
+    cols = node.params["expr"].columns()
+    return None if cols is None else tuple(sorted(cols))
+
+
+def split_conjunctions(root: LogicalNode) -> List[str]:
+    """``filter(a & b)`` directly above a communication boundary becomes
+    ``filter(a)`` over ``filter(b)`` so pushdown can route each conjunct
+    independently (e.g. into different join inputs).  Sound only for
+    provably boolean conjuncts (`&` on integers is bitwise).  Conjuncts
+    that end up adjacent after the fixpoint are re-fused, so a split that
+    enabled no pushdown costs nothing."""
+    fired: List[str] = []
+    for n in topo(root):
+        if n.op != "filter" or n.inputs[0].op not in COMM_OPS:
+            continue
+        e = n.params["expr"]
+        if not (isinstance(e, BinOp) and e.op == "&" and e.is_boolean()):
+            continue
+        inner = LogicalNode("filter", [n.inputs[0]], {"expr": e.right})
+        n.params = {"expr": e.left}
+        n.inputs = [inner]
+        fired.append(f"split-conjunction: filter[{e!r}] split for "
+                     f"independent pushdown")
+    return fired
+
+
+def fuse_adjacent_filters(root: LogicalNode) -> None:
+    """Re-merge stacked filters into one conjunction (post-fixpoint: undoes
+    conjunction splits that enabled no pushdown, saving a compaction)."""
+    ncons = consumers(root)
+    for n in topo(root):
+        while (n.op == "filter" and n.inputs[0].op == "filter"
+               and ncons.get(n.inputs[0].nid, 0) == 1):
+            inner = n.inputs[0]
+            n.params = {"expr": n.params["expr"] & inner.params["expr"]}
+            n.inputs = [inner.inputs[0]]
 
 
 def push_predicates(root: LogicalNode) -> List[str]:
@@ -132,6 +178,14 @@ def push_predicates(root: LogicalNode) -> List[str]:
             n.params, child.params = child.params, n.params
             fired.append(f"predicate-pushdown: filter moved below "
                          f"{n.op}")
+        elif child.op == "with_columns":
+            cols = _pred_cols(n)
+            if cols is None or set(cols) & set(child.params["exprs"]):
+                continue  # predicate reads an assigned column
+            n.op, child.op = child.op, n.op
+            n.params, child.params = child.params, n.params
+            fired.append("predicate-pushdown: filter moved below "
+                         "with_columns")
         elif child.op == "groupby":
             cols = _pred_cols(n)
             if cols is None or not set(cols) <= set(child.params["keys"]):
@@ -178,12 +232,20 @@ def _required_from(node: LogicalNode, required: Set[str], i: int) -> Set[str]:
     if node.op in ("project", "noop"):
         return set(required)
     if node.op == "filter":
-        cols = p.get("cols")
+        cols = node.params["expr"].columns()
         if cols is None:
             return set(node.inputs[i].schema)  # opaque predicate: keep all
         return set(required) | set(cols)
-    if node.op == "map_columns":
-        return set(required) | set(p["cols"])
+    if node.op == "with_columns":
+        # conservative: every assignment's inputs stay live until
+        # prune_dead_assignments drops assignments nobody consumes
+        need = set(required) - set(p["exprs"])
+        for expr in p["exprs"].values():
+            cols = expr.columns()
+            if cols is None:
+                return set(node.inputs[i].schema)
+            need |= cols
+        return need
     if node.op == "add_scalar":
         cols = p.get("cols")
         return set(required) | (set(cols) if cols else set())
@@ -215,8 +277,9 @@ def _required_from(node: LogicalNode, required: Set[str], i: int) -> Set[str]:
     raise ValueError(node.op)
 
 
-def push_projections(root: LogicalNode) -> List[str]:
-    fired: List[str] = []
+def _required_sets(root: LogicalNode) -> Tuple[List[LogicalNode],
+                                               Dict[int, Set[str]]]:
+    """Backward liveness: nid -> columns any consumer needs from that node."""
     order = topo(root)
     required: Dict[int, Set[str]] = {root.nid: set(root.schema)}
     for n in reversed(order):
@@ -224,7 +287,37 @@ def push_projections(root: LogicalNode) -> List[str]:
         for i, inp in enumerate(n.inputs):
             required.setdefault(inp.nid, set()).update(
                 _required_from(n, req, i))
+    return order, required
 
+
+def prune_dead_assignments(root: LogicalNode) -> List[str]:
+    """Drop ``with_columns`` assignments whose target no consumer reads, so
+    their input columns stop pinning liveness (runs before projection
+    pushdown in each pass; a fully-pruned node degenerates to a noop)."""
+    fired: List[str] = []
+    order, required = _required_sets(root)
+    for n in order:
+        if n.op != "with_columns":
+            continue
+        exprs = n.params["exprs"]
+        dead = sorted(set(exprs) - required[n.nid])
+        if not dead:
+            continue
+        # copy before mutating: from_plan shallow-copies params, so the
+        # inner dict is still shared with the user's builder tree
+        n.params["exprs"] = {name: e for name, e in exprs.items()
+                             if name not in dead}
+        fired.append(f"dead-assignment: with_columns drops unused "
+                     f"[{','.join(dead)}]")
+        if not n.params["exprs"]:
+            n.op = "noop"
+            n.params = {"note": "with_columns pruned empty"}
+    return fired
+
+
+def push_projections(root: LogicalNode) -> List[str]:
+    fired: List[str] = []
+    order, required = _required_sets(root)
     for n in order:
         if n.op not in COMM_OPS:
             continue
@@ -276,8 +369,9 @@ def prune_identity_projects(root: LogicalNode) -> None:
 # ---------------------------------------------------------------------- #
 # Driver
 # ---------------------------------------------------------------------- #
-RULES = (elide_shuffles, select_join_sides, push_predicates,
-         push_projections, push_preaggregation)
+RULES = (elide_shuffles, select_join_sides, split_conjunctions,
+         push_predicates, prune_dead_assignments, push_projections,
+         push_preaggregation)
 
 
 def optimize(root: LogicalNode, catalog=None,
@@ -295,6 +389,7 @@ def optimize(root: LogicalNode, catalog=None,
         if not pass_fired:
             break
         fired.extend(pass_fired)
+    fuse_adjacent_filters(root)
     prune_identity_projects(root)
     annotate(root)
     return root, fired

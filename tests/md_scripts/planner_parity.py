@@ -13,6 +13,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 
 from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.expr import col
 
 rng = np.random.default_rng(0)
 N = 4000
@@ -81,10 +82,10 @@ def random_plan(prng):
         cols = None
         if op == "filter":
             thr = float(prng.random())
-            plan = plan.filter(lambda t, _th=thr: t.col("v0") > _th,
-                               cols=["v0"])
+            plan = plan.filter(col("v0") > thr)
         elif op == "add":
-            plan = plan.add_scalar(float(prng.random()), cols=["v0"])
+            plan = plan.with_columns(
+                {"v0": col("v0") + float(prng.random())})
         elif op == "project":
             pass  # projection is exercised via dead-column elimination
         elif op == "shuffle":
@@ -93,7 +94,7 @@ def random_plan(prng):
             plan = plan.groupby(["k"], {"v0": ["sum", "count"]},
                                 bucket_capacity=BIG)
             # after groupby only k / v0_* remain; rebuild a v0 for later ops
-            plan = plan.map_columns(lambda v: v, ["v0_sum"])
+            plan = plan.with_columns({"v0_sum": col("v0_sum") * 1})
             plan = plan.project(["k", "v0_sum"])
             plan = Plan(plan.node)
             return plan  # keep pipelines simple after aggregation

@@ -1,0 +1,348 @@
+"""Tests for the lazy DataFrame frontend (``repro.df``).
+
+* frontend ops vs a pandas oracle (1 device; the distributed machinery
+  degenerates to identity routing but the full planner/executor runs),
+* session/env resolution semantics,
+* Fig-9 pipeline bit-identity: frontend vs the raw ``Plan`` builder, in
+  all three execution modes and under out-of-core morsel streaming,
+* hypothesis property test: random expression trees through ``DataFrame``
+  vs pandas (skipped when hypothesis is absent; CI installs it).
+"""
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+import repro.df as rdf  # noqa: E402
+from repro.core import (CylonEnv, DistTable, Plan, SpillTable,  # noqa: E402
+                        execute)
+from repro.df.session import _stack  # noqa: E402  (per-thread)
+from repro.expr import col, lit  # noqa: E402
+
+
+@pytest.fixture
+def env():
+    e = CylonEnv()
+    rdf.set_default_env(e)
+    yield e
+    rdf.reset_default_env()
+
+
+def _data(rng, n=256, keys=32):
+    return {"k": rng.integers(0, keys, n).astype(np.int32),
+            "v0": rng.integers(0, 64, n).astype(np.float32),
+            "junk": rng.random(n).astype(np.float32)}
+
+
+def _sorted_records(d, keys):
+    order = np.lexsort(tuple(np.asarray(d[k]) for k in reversed(keys)))
+    return {k: np.asarray(v)[order] for k, v in d.items()}
+
+
+# ---------------------------------------------------------------------- #
+# Frontend ops vs pandas
+# ---------------------------------------------------------------------- #
+def test_filter_assign_select_vs_pandas(env, rng):
+    data = _data(rng)
+    df = rdf.read_numpy(data)
+    out = (df[df.v0 * 2 > 10]
+           .assign(v1=df.v0 + 1, flag=df.k % 2)
+           [["k", "v1", "flag"]]
+           .to_pandas())
+    p = pd.DataFrame(data)
+    p = p[p.v0 * 2 > 10]
+    want = pd.DataFrame({"k": p.k, "v1": p.v0 + 1, "flag": p.k % 2})
+    np.testing.assert_array_equal(out["k"], want["k"])
+    np.testing.assert_array_equal(out["v1"],
+                                  want["v1"].astype(np.float32))
+    np.testing.assert_array_equal(out["flag"], want["flag"])
+
+
+def test_merge_groupby_sort_vs_pandas(env, rng):
+    ld, rd = _data(rng), _data(rng, keys=32)
+    rd = {"k": rd["k"], "w": rd["v0"]}
+    out = (rdf.read_numpy(ld).merge(rdf.read_numpy(rd), on="k",
+                                    out_capacity=16384)
+           .groupby("k").agg({"v0": ["sum", "mean"], "w": "max"})
+           .sort_values("k").to_pandas())
+    m = pd.DataFrame(ld).merge(pd.DataFrame(rd), on="k")
+    g = m.groupby("k").agg(v0_sum=("v0", "sum"), v0_mean=("v0", "mean"),
+                           w_max=("w", "max")).reset_index().sort_values("k")
+    np.testing.assert_array_equal(out["k"], g["k"].astype(np.int32))
+    np.testing.assert_allclose(out["v0_sum"],
+                               g["v0_sum"].astype(np.float32), rtol=1e-6)
+    np.testing.assert_allclose(out["v0_mean"],
+                               g["v0_mean"].astype(np.float32), rtol=1e-6)
+    np.testing.assert_array_equal(out["w_max"],
+                                  g["w_max"].astype(np.float32))
+
+
+def test_from_pandas_round_trip(env, rng):
+    pdf = pd.DataFrame({"k": np.arange(10, dtype=np.int32),
+                        "v": np.linspace(0, 1, 10, dtype=np.float32)})
+    out = rdf.from_pandas(pdf)[col("k") % 2 == 0].to_pandas()
+    np.testing.assert_array_equal(out["k"], [0, 2, 4, 6, 8])
+    with pytest.raises(TypeError, match="unsupported dtype"):
+        rdf.from_pandas(pd.DataFrame({"s": ["a", "b"]}))
+
+
+def test_schema_validation_errors(env, rng):
+    df = rdf.read_numpy(_data(rng))
+    with pytest.raises(KeyError, match="unknown column"):
+        df.filter(col("nope") > 0)
+    with pytest.raises(KeyError, match="unknown column"):
+        df[["k", "nope"]]
+    with pytest.raises(AttributeError, match="no attribute or column"):
+        df.nope
+    with pytest.raises(KeyError, match="unknown column"):
+        df.groupby("nope")
+    # derived schemas track renames: after agg only k / v0_sum exist
+    agg = df.groupby("k").agg(v0="sum")
+    assert agg.columns == ("k", "v0_sum")
+    with pytest.raises(KeyError):
+        agg.sort_values("v0")
+
+
+def test_dataframes_immutable_and_shareable(env, rng):
+    df = rdf.read_numpy(_data(rng))
+    with pytest.raises(AttributeError):
+        df.plan = None
+    base = df[df.v0 > 8]
+    a = base.groupby("k").agg(v0="sum")
+    b = base.sort_values("k")          # both extend the same prefix
+    assert a.columns == ("k", "v0_sum")
+    assert b.columns == df.columns
+
+
+def test_repartition_then_groupby_elides_shuffle(env, rng):
+    df = rdf.read_numpy(_data(rng))
+    text = df.repartition("k").groupby("k").agg(v0="sum").explain()
+    assert "shuffle-elision" in text
+
+
+# ---------------------------------------------------------------------- #
+# Session semantics
+# ---------------------------------------------------------------------- #
+def test_session_scopes_env(env, rng):
+    inner = CylonEnv()
+    assert rdf.get_env() is env
+    with rdf.session(inner) as got:
+        assert got is inner and rdf.get_env() is inner
+        with rdf.session() as nested:      # builds a fresh env, nests
+            assert rdf.get_env() is nested
+        assert rdf.get_env() is inner
+    assert rdf.get_env() is env
+    assert not _stack()
+
+
+def test_collect_uses_session_env(rng):
+    rdf.reset_default_env()
+    data = _data(rng, n=64)
+    with rdf.session() as env:
+        df = rdf.read_numpy(data)
+        before = env.cache_misses
+        df.filter(df.v0 > 8).collect()
+        assert env.cache_misses == before + 1   # compiled on the session env
+    rdf.reset_default_env()
+
+
+def test_explicit_env_overrides_session(env, rng):
+    other = CylonEnv()
+    df = rdf.read_numpy(_data(rng, n=64), env=other)
+    df.collect(env=other)
+    assert other.cache_misses == 1 and env.cache_misses == 0
+
+
+# ---------------------------------------------------------------------- #
+# Fig-9: frontend vs raw Plan builder, bit-identical in every mode
+# ---------------------------------------------------------------------- #
+def _fig9_sources(rng, n=512):
+    # integer-valued float payloads: sums are exact, so results must be
+    # BIT-identical regardless of frontend, mode, or morsel split
+    ld = {"k": rng.integers(0, int(n * 0.9), n).astype(np.int32),
+          "v0": rng.integers(0, 256, n).astype(np.float32),
+          "junk": rng.random(n).astype(np.float32)}
+    rd = {"k": rng.integers(0, int(n * 0.9), n).astype(np.int32),
+          "w": rng.integers(0, 256, n).astype(np.float32)}
+    return ld, rd
+
+
+def fig9_frontend(l_df, r_df, cap):
+    return (l_df.merge(r_df, on="k", out_capacity=cap * 4)
+            [(col("v0") > 4) & (col("w") < 250)]
+            .groupby("k").agg({"v0": ["sum", "mean"]})
+            .sort_values("k")
+            .assign(v0_sum=col("v0_sum") + 1.0))
+
+
+def fig9_builder(cap):
+    return (Plan.scan("l").join(Plan.scan("r"), on="k", out_capacity=cap * 4)
+            .filter((col("v0") > 4) & (col("w") < 250))
+            .groupby(["k"], {"v0": ["sum", "mean"]})
+            .sort(["k"])
+            .with_columns({"v0_sum": col("v0_sum") + 1.0}))
+
+
+def test_fig9_frontend_matches_builder_all_modes(env, rng):
+    ld, rd = _fig9_sources(rng)
+    lt = DistTable.from_numpy(ld, env.parallelism)
+    rt = DistTable.from_numpy(rd, env.parallelism)
+    l_df, r_df = rdf.from_table(lt), rdf.from_table(rt)
+    front = fig9_frontend(l_df, r_df, lt.capacity)
+    plan = fig9_builder(lt.capacity)
+    assert "<lambda>" not in front.explain()
+    for mode in ("bsp", "bsp_staged", "amt"):
+        a = front.collect(mode=mode).to_numpy()
+        b = execute(plan, env, {"l": lt, "r": rt}, mode=mode).to_numpy()
+        assert sorted(a) == sorted(b)
+        for c in a:
+            np.testing.assert_array_equal(a[c], b[c], err_msg=(mode, c))
+
+
+def test_fig9_frontend_out_of_core_bit_identical(env, rng):
+    ld, rd = _fig9_sources(rng)
+    lt = DistTable.from_numpy(ld, env.parallelism)
+    rt = DistTable.from_numpy(rd, env.parallelism)
+    ref = fig9_frontend(rdf.from_table(lt), rdf.from_table(rt),
+                        lt.capacity).collect().to_numpy()
+    l_spill = rdf.read_numpy(ld, spill=True, chunk_rows=64)
+    out = fig9_frontend(l_spill, rdf.from_table(rt), lt.capacity).collect(
+        morsel_rows=64, capacity_factor=4.0)
+    assert isinstance(out, SpillTable)
+    o = out.to_numpy()
+    assert sorted(ref) == sorted(o)
+    for c in ref:
+        np.testing.assert_array_equal(ref[c], o[c], err_msg=c)
+
+
+# ---------------------------------------------------------------------- #
+# Hypothesis: random expression trees through DataFrame vs pandas.
+# Guarded with a plain import (not importorskip) so everything above
+# still runs without hypothesis; CI installs it via requirements-dev.txt.
+# ---------------------------------------------------------------------- #
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+
+def _np_eval(e, frame):
+    """Numpy oracle: evaluate an Expr against a dict of numpy columns."""
+    import repro.expr as ex
+    if isinstance(e, ex.Col):
+        return frame[e.name]
+    if isinstance(e, ex.Lit):
+        return e.value
+    if isinstance(e, ex.UnaryOp):
+        v = _np_eval(e.operand, frame)
+        return {"-": np.negative, "abs": np.abs,
+                "~": np.invert}[e.op](v)
+    ops = {"+": np.add, "-": np.subtract, "*": np.multiply,
+           ">": np.greater, ">=": np.greater_equal, "<": np.less,
+           "<=": np.less_equal, "==": np.equal, "!=": np.not_equal,
+           "&": np.bitwise_and, "|": np.bitwise_or, "^": np.bitwise_xor}
+    return ops[e.op](_np_eval(e.left, frame), _np_eval(e.right, frame))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def numeric_exprs(draw, depth=0):
+        """Random arithmetic expression over int32 columns a/b (+ small
+        int literals; ops closed over int32 so the oracle is exact)."""
+        if depth >= 3 or draw(st.booleans()):
+            return draw(st.sampled_from([col("a"), col("b")]))
+        op = draw(st.sampled_from(["+", "-", "*"]))
+        left = draw(numeric_exprs(depth=depth + 1))
+        right = (lit(draw(st.integers(-4, 4))) if draw(st.booleans())
+                 else draw(numeric_exprs(depth=depth + 1)))
+        from repro.expr import BinOp
+        return BinOp(op, left, right)
+
+    @st.composite
+    def bool_exprs(draw):
+        cmp = draw(st.sampled_from([">", ">=", "<", "<=", "==", "!="]))
+        from repro.expr import BinOp
+        e = BinOp(cmp, draw(numeric_exprs()), draw(numeric_exprs()))
+        if draw(st.booleans()):
+            e2 = BinOp(draw(st.sampled_from([">", "<", "=="])),
+                       draw(numeric_exprs()), lit(draw(st.integers(-8, 8))))
+            e = BinOp(draw(st.sampled_from(["&", "|", "^"])), e, e2)
+        if draw(st.booleans()):
+            e = ~e
+        return e
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(pred=bool_exprs(), assign=numeric_exprs(),
+           rows=st.lists(st.tuples(st.integers(-20, 20),
+                                   st.integers(-20, 20)),
+                         min_size=0, max_size=40))
+    def test_random_expr_trees_match_pandas(pred, assign, rows):
+        env = CylonEnv()
+        a = np.array([r[0] for r in rows], np.int32)
+        b = np.array([r[1] for r in rows], np.int32)
+        data = {"a": a, "b": b}
+        df = rdf.read_numpy(data, env=env, capacity=64)
+        got = df.filter(pred).assign(z=assign).collect(env=env).to_numpy()
+
+        mask = np.asarray(_np_eval(pred, data), bool) if len(a) else \
+            np.zeros((0,), bool)
+        want = {"a": a[mask], "b": b[mask]}
+        want["z"] = np.asarray(_np_eval(assign, want)).astype(np.int32) \
+            if mask.any() else np.zeros((mask.sum(),), np.int32)
+        assert sorted(got) == ["a", "b", "z"]
+        np.testing.assert_array_equal(got["a"], want["a"])
+        np.testing.assert_array_equal(got["b"], want["b"])
+        if mask.any():
+            np.testing.assert_array_equal(got["z"], want["z"])
+
+
+def test_merge_rejects_source_name_collision(env, rng):
+    d1, d2 = _data(rng, n=32), _data(rng, n=32)
+    a = rdf.read_numpy(d1, name="t")
+    b = rdf.read_numpy(d2, name="t")      # different table, same scan name
+    with pytest.raises(ValueError, match="source name collision"):
+        a.merge(b, on="k")
+    # same object under the same name is fine (self-merge)
+    self_joined = a.merge(a.assign(v1=a.v0 + 1), on="k",
+                          out_capacity=4096)
+    assert "v0_r" in self_joined.columns
+
+
+def test_read_numpy_rejects_capacity_with_spill(env, rng):
+    with pytest.raises(TypeError, match="capacity only applies"):
+        rdf.read_numpy(_data(rng, n=32), spill=True, capacity=64)
+
+
+def test_session_stack_is_thread_local(env):
+    import threading
+    inner = CylonEnv()
+    seen = {}
+
+    def other_thread():
+        # a session entered on the main thread must not leak here
+        seen["env"] = rdf.get_env()
+
+    with rdf.session(inner):
+        t = threading.Thread(target=other_thread)
+        t.start()
+        t.join()
+    assert seen["env"] is env            # default, not main thread's inner
+
+
+def test_ingest_env_pins_collect_and_mismatch_is_clear(env, rng):
+    # read_numpy(env=X) pins collect() to X even when another env is the
+    # session default...
+    other = CylonEnv()
+    df = rdf.read_numpy(_data(rng, n=64), env=other)
+    df.filter(df.v0 > 8).collect()
+    assert other.cache_misses == 1 and env.cache_misses == 0
+    # ...and a frame whose table is partitioned for a different gang size
+    # fails with a clear message, not a shard_map divisibility error
+    bad = rdf.from_table(DistTable.from_numpy(_data(rng, n=64), 2))
+    with pytest.raises(ValueError, match="partitioned for 2 ranks"):
+        bad.collect()        # session env has 1 device
+

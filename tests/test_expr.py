@@ -1,0 +1,237 @@
+"""Unit tests for the typed column-expression AST (``repro.expr``).
+
+Covers: operator tree construction, column liveness, value-based
+fingerprints, evaluation vs a numpy oracle (dtype promotion, NaN and
+comparison semantics), pretty-printing round-trips, and the OpaqueExpr
+legacy wrapper.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dataframe.ops_local import filter_expr, with_columns
+from repro.dataframe.table import Table
+from repro.expr import (BinOp, Col, Expr, Lit, OpaqueExpr, UnaryOp, col,
+                        ensure_expr, lit, token)
+
+
+def make_table(**cols):
+    return Table.from_arrays({k: np.asarray(v) for k, v in cols.items()})
+
+
+# ---------------------------------------------------------------------- #
+# Tree construction + liveness
+# ---------------------------------------------------------------------- #
+def test_operator_overloads_build_tree():
+    e = col("v") * 2 > lit(5)
+    assert isinstance(e, BinOp) and e.op == ">"
+    assert isinstance(e.left, BinOp) and e.left.op == "*"
+    assert isinstance(e.left.left, Col) and e.left.left.name == "v"
+    assert isinstance(e.right, Lit) and e.right.value == 5
+
+
+def test_columns_exact_liveness():
+    e = (col("a") + col("b") * col("a")) > -col("c")
+    assert e.columns() == frozenset({"a", "b", "c"})
+    assert lit(3).columns() == frozenset()
+
+
+def test_reflected_scalars():
+    a = 2 * col("v")
+    b = col("v") * 2  # multiplication argument order is preserved
+    assert a.fingerprint() != b.fingerprint()
+    r = 0.5 < col("v")  # python reflects to col("v") > 0.5
+    assert r.op == ">" and isinstance(r.left, Col)
+
+
+def test_is_boolean_classification():
+    assert (col("v") > 0).is_boolean()
+    assert ((col("v") > 0) & (col("w") < 1)).is_boolean()
+    assert (~(col("v") > 0)).is_boolean()
+    assert not (col("v") & col("w")).is_boolean()   # bitwise on ints
+    assert not (col("v") + 1).is_boolean()
+    assert not OpaqueExpr(lambda t: t.col("v") > 0).is_boolean()
+
+
+def test_no_truthiness():
+    with pytest.raises(TypeError, match="truth value"):
+        bool(col("v") > 0)
+
+
+def test_immutability_and_validation():
+    e = col("v")
+    with pytest.raises(AttributeError):
+        e.name = "w"
+    with pytest.raises(TypeError):
+        ensure_expr("a string")
+    with pytest.raises(TypeError):
+        lit(np.arange(3))
+    with pytest.raises(ValueError):
+        BinOp("??", col("a"), col("b"))
+
+
+# ---------------------------------------------------------------------- #
+# Fingerprints (value identity)
+# ---------------------------------------------------------------------- #
+def test_fingerprint_value_based_across_construction_sites():
+    def site_a():
+        return (col("v") * 2 > lit(5)) & (col("w") != 0)
+
+    def site_b():
+        left = BinOp(">", BinOp("*", Col("v"), Lit(2)), Lit(5))
+        return left & (col("w") != 0)
+    assert site_a().fingerprint() == site_b().fingerprint()
+
+
+def test_fingerprint_distinguishes_values_and_dtypes():
+    assert (col("v") > 1).fingerprint() != (col("v") > 2).fingerprint()
+    assert (col("v") > 1).fingerprint() != (col("v") > 1.0).fingerprint()
+    assert (col("v") > np.float32(1)).fingerprint() != \
+        (col("v") > 1.0).fingerprint()          # pinned vs weak literal
+    assert (col("v") > 1).fingerprint() != (col("w") > 1).fingerprint()
+    assert (col("a") - col("b")).fingerprint() != \
+        (col("b") - col("a")).fingerprint()     # order matters
+
+
+def test_token_delegates_to_expr_fingerprint():
+    e = col("v") + 1
+    assert token(e) == f"expr:{e.fingerprint()}"
+    assert token({"x": e}) == "{" + f"x:expr:{e.fingerprint()}" + "}"
+
+
+# ---------------------------------------------------------------------- #
+# Evaluation vs numpy oracle
+# ---------------------------------------------------------------------- #
+def test_arithmetic_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    a = rng.random(64).astype(np.float32) + 0.5
+    b = rng.random(64).astype(np.float32) + 0.5
+    t = make_table(a=a, b=b)
+    cases = {
+        "add": (col("a") + col("b"), a + b),
+        "sub": (col("a") - col("b"), a - b),
+        "mul": (col("a") * col("b"), a * b),
+        "div": (col("a") / col("b"), a / b),
+        "floordiv": (col("a") // col("b"), np.floor_divide(a, b)),
+        "mod": (col("a") % col("b"), np.mod(a, b)),
+        "pow": (col("a") ** 2, a ** 2),
+        "neg": (-col("a"), -a),
+        "abs": (abs(col("a") - col("b")), np.abs(a - b)),
+    }
+    for name, (expr, want) in cases.items():
+        got = np.asarray(expr.evaluate(t))
+        assert got.dtype == want.dtype, name
+        np.testing.assert_allclose(got, want, rtol=1e-6, err_msg=name)
+
+
+def test_comparisons_and_boolean_algebra_match_numpy():
+    a = np.array([1, 5, 3, 7, 2], np.int32)
+    b = np.array([4, 5, 1, 0, 2], np.int32)
+    t = make_table(a=a, b=b)
+    for op, np_op in ((">", np.greater), (">=", np.greater_equal),
+                      ("<", np.less), ("<=", np.less_equal),
+                      ("==", np.equal), ("!=", np.not_equal)):
+        got = np.asarray(BinOp(op, col("a"), col("b")).evaluate(t))
+        assert got.dtype == np.bool_
+        np.testing.assert_array_equal(got, np_op(a, b), err_msg=op)
+    e = ((col("a") > 2) & (col("b") < 4)) | ~(col("a") == col("b"))
+    want = ((a > 2) & (b < 4)) | ~(a == b)
+    np.testing.assert_array_equal(np.asarray(e.evaluate(t)), want)
+
+
+def test_dtype_promotion_int_float():
+    i = np.arange(8, dtype=np.int32)
+    f = np.linspace(0, 1, 8, dtype=np.float32)
+    t = make_table(i=i, f=f)
+    assert np.asarray((col("i") + col("f")).evaluate(t)).dtype == np.float32
+    # python scalars stay weak: int32 + 1 keeps int32, int32 + 1.5 -> float
+    assert np.asarray((col("i") + 1).evaluate(t)).dtype == np.int32
+    got = np.asarray((col("i") * 1.5).evaluate(t))
+    assert np.issubdtype(got.dtype, np.floating)
+    np.testing.assert_allclose(got, i * 1.5)
+
+
+def test_nan_comparison_semantics():
+    v = np.array([1.0, np.nan, 3.0, np.nan], np.float32)
+    t = make_table(v=v)
+    with np.errstate(invalid="ignore"):
+        np.testing.assert_array_equal(
+            np.asarray((col("v") > 2.0).evaluate(t)), v > 2.0)
+        np.testing.assert_array_equal(
+            np.asarray((col("v") == col("v")).evaluate(t)), v == v)
+    # filtering drops NaN rows for any comparison (IEEE: NaN cmp -> False)
+    kept = filter_expr(t, col("v") > 0).to_numpy()["v"]
+    np.testing.assert_array_equal(kept, np.array([1.0, 3.0], np.float32))
+
+
+def test_opaque_expr_evaluates_and_declares():
+    t = make_table(v=np.array([1.0, -2.0, 3.0], np.float32))
+    e = OpaqueExpr(lambda tb: tb.col("v") > 0, cols=("v",))
+    assert e.columns() == frozenset({"v"})
+    np.testing.assert_array_equal(np.asarray(e.evaluate(t)),
+                                  [True, False, True])
+    assert OpaqueExpr(lambda tb: tb.col("v")).columns() is None
+
+
+# ---------------------------------------------------------------------- #
+# Table-level helpers
+# ---------------------------------------------------------------------- #
+def test_filter_expr_requires_boolean():
+    t = make_table(v=np.arange(4, dtype=np.int32))
+    with pytest.raises(TypeError, match="must be boolean"):
+        filter_expr(t, col("v") + 1)
+
+
+def test_filter_expr_respects_padding():
+    t = Table.from_arrays({"v": np.array([5, -1, 7], np.int32)}, capacity=8)
+    out = filter_expr(t, col("v") > 0)
+    assert int(out.row_count) == 2
+    np.testing.assert_array_equal(out.to_numpy()["v"], [5, 7])
+
+
+def test_with_columns_simultaneous_and_broadcast():
+    t = make_table(a=np.array([1.0, 2.0], np.float32),
+                   b=np.array([10.0, 20.0], np.float32))
+    out = with_columns(t, {"a": col("b"), "b": col("a"), "c": lit(7.0),
+                           "d": col("a") * col("b")})
+    o = out.to_numpy()
+    np.testing.assert_array_equal(o["a"], [10.0, 20.0])  # swap: reads input
+    np.testing.assert_array_equal(o["b"], [1.0, 2.0])
+    np.testing.assert_array_equal(o["c"], [7.0, 7.0])    # scalar broadcast
+    np.testing.assert_array_equal(o["d"], [10.0, 40.0])
+
+
+def test_missing_column_error_names_have():
+    t = make_table(v=np.arange(4, dtype=np.int32))
+    with pytest.raises(KeyError, match="not in table"):
+        col("nope").evaluate(t)
+
+
+# ---------------------------------------------------------------------- #
+# Pretty-printing (EXPLAIN labels)
+# ---------------------------------------------------------------------- #
+def test_render_minimal_python_accurate_parens():
+    assert repr(col("v") * 2 > lit(5)) == "v * 2 > 5"
+    assert repr((col("a") > 0) & (col("b") < 1)) == "(a > 0) & (b < 1)"
+    assert repr((col("a") + col("b")) * col("c")) == "(a + b) * c"
+    assert repr(-col("v") + 1) == "-v + 1"
+    assert repr(~(col("a") > 0)) == "~(a > 0)"
+    assert repr(abs(col("a") - col("b"))) == "abs(a - b)"
+
+
+def test_render_parses_back_to_same_tree():
+    # the printed form, eval'd with col() bindings, rebuilds the same expr
+    cases = [
+        col("v") * 2 > lit(5),
+        (col("a") > 0) & ((col("b") < 1) | (col("a") == col("b"))),
+        -col("a") + col("b") * col("c"),
+        col("a") % 3 != 0,
+        (col("a") ** col("b")) ** col("c"),   # right-assoc ** needs parens
+        col("a") ** (col("b") ** col("c")),
+        (-col("a")) ** 2,                     # unary base of ** needs parens
+        -(col("a") ** 2),
+    ]
+    names = {"a": col("a"), "b": col("b"), "c": col("c"), "v": col("v")}
+    for e in cases:
+        rebuilt = eval(repr(e), {"__builtins__": {}}, dict(names))
+        assert rebuilt.fingerprint() == e.fingerprint(), repr(e)

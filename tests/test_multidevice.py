@@ -61,6 +61,11 @@ def test_out_of_core_parity():
 
 
 @pytest.mark.multidevice
+def test_df_frontend_parity():
+    _run("df_frontend_parity.py")
+
+
+@pytest.mark.multidevice
 def test_sharded_train():
     _run("sharded_train.py", timeout=1800)
 

@@ -13,6 +13,7 @@ import pytest
 from repro.core import (CylonEnv, CylonStore, DistTable, MorselSource, Plan,
                         SpillTable, execute, repartition, rescatter)
 from repro.dataframe.ops_local import hash_columns, hash_columns_np
+from repro.expr import col
 from repro.dataframe.table import Table
 
 
@@ -102,7 +103,7 @@ def test_morsel_local_plan_bit_identical(rng):
     env = CylonEnv()
     data = {"k": rng.integers(0, 50, 500).astype(np.int32),
             "v0": rng.random(500).astype(np.float32)}
-    plan = (Plan.scan("l").filter(lambda t: t.col("v0") > 0.25, cols=["v0"])
+    plan = (Plan.scan("l").filter(col("v0") > 0.25)
             .add_scalar(2.0, cols=["v0"]))
     ref = execute(plan, env, {"l": DistTable.from_numpy(data, 1)}).to_numpy()
     out = execute(plan, env, {"l": data}, morsel_rows=64)
@@ -197,7 +198,7 @@ def test_eight_morsels_one_cache_miss(rng):
     env = CylonEnv()
     data = {"k": rng.integers(0, 9, 8 * 32).astype(np.int32),
             "v0": rng.random(8 * 32).astype(np.float32)}
-    plan = (Plan.scan("l").filter(lambda t: t.col("k") >= 0, cols=["k"])
+    plan = (Plan.scan("l").filter(col("k") >= 0)
             .add_scalar(1.0, cols=["v0"]))
     h0, m0 = env.cache_hits, env.cache_misses
     out, st = execute(plan, env, {"l": data}, morsel_rows=32,

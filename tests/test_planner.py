@@ -9,8 +9,13 @@ import numpy as np
 import pytest
 
 from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.expr import col, lit
 from repro.planner import (Partitioning, compile_plan, explain, fingerprint,
                            from_plan, optimize)
+
+#: legacy-callable tests below intentionally exercise the deprecated
+#: Plan.filter(callable) shim
+legacy = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 CAT = {"l": (("k", "v0", "junk"), 8000), "r": (("k", "w"), 8000)}
 
@@ -116,13 +121,14 @@ def test_projection_preserves_join_suffix():
 
 def test_predicate_pushdown_below_shuffle():
     plan = (Plan.scan("l").shuffle(["k"])
-            .filter(lambda t: t.col("v0") > 0, cols=["v0"]))
+            .filter(col("v0") > 0))
     opt = compile_plan(plan, CAT)
     order_ops = [n.op for n in opt.order]
     assert order_ops.index("filter") < order_ops.index("shuffle")
     assert any("predicate-pushdown" in f for f in opt.fired)
 
 
+@legacy
 def test_opaque_predicate_not_pushed_into_join():
     plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
             .filter(lambda t: t.col("v0") > 0))       # no cols declared
@@ -133,7 +139,7 @@ def test_opaque_predicate_not_pushed_into_join():
 
 def test_declared_predicate_pushed_into_join_side():
     plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
-            .filter(lambda t: t.col("w") > 0, cols=["w"]))
+            .filter(col("w") > 0))
     opt = compile_plan(plan, CAT)
     join = next(n for n in opt.order if n.op == "join")
     # the filter must now sit under the join's right input subtree
@@ -150,12 +156,12 @@ def test_declared_predicate_pushed_into_join_side():
 def test_predicate_not_pushed_below_capacity_or_dest_shuffle():
     # out_capacity makes the overflow cut observable; dest is row-aligned
     plan = (Plan.scan("l").shuffle(["k"], out_capacity=16)
-            .filter(lambda t: t.col("v0") > 0, cols=["v0"]))
+            .filter(col("v0") > 0))
     opt = compile_plan(plan, CAT)
     order_ops = [n.op for n in opt.order]
     assert order_ops.index("filter") > order_ops.index("shuffle")
     plan2 = (Plan.scan("l").shuffle(["k"], dest=np.zeros(8, np.int32))
-             .filter(lambda t: t.col("v0") > 0, cols=["v0"]))
+             .filter(col("v0") > 0))
     opt2 = compile_plan(plan2, CAT)
     order_ops2 = [n.op for n in opt2.order]
     assert order_ops2.index("filter") > order_ops2.index("shuffle")
@@ -170,6 +176,7 @@ def test_dest_shuffle_has_no_hash_property():
     assert not any("shuffle-elision" in f for f in opt.fired)
 
 
+@legacy
 def test_fingerprint_distinguishes_large_captured_arrays():
     base = np.zeros(5000, np.float32)
     other = base.copy()
@@ -216,6 +223,7 @@ def test_fingerprint_distinguishes_plans():
     assert fa != fb
 
 
+@legacy
 def test_fingerprint_distinguishes_captured_values():
     # same bytecode, different captured threshold -> different plans
     def mk(th):
@@ -226,6 +234,7 @@ def test_fingerprint_distinguishes_captured_values():
     assert fa != fb
 
 
+@legacy
 def test_execute_distinguishes_captured_values(rng):
     env = CylonEnv()
     data = {"k": rng.integers(0, 10, 64).astype(np.int32),
@@ -249,6 +258,7 @@ def test_missing_scan_schema_raises_helpfully():
         explain(plan)          # no tables at all
 
 
+@legacy
 def test_fingerprint_hashes_callables_by_code():
     def pred(t):
         return t.col("v0") > 0
@@ -361,3 +371,204 @@ def test_explain_marks_elided_join_side():
     text = chain.explain(CAT)
     assert "join[on=k] (left-elided)" in text
     assert "join-side-selection" in text
+
+
+# ---------------------------------------------------------------------- #
+# Expression-driven rules (PR 4): conjunction split, with_columns
+# ---------------------------------------------------------------------- #
+def test_conjunction_splits_across_join_sides():
+    # one filter, one conjunct per join side: each must land in its input
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .filter((col("v0") > 0) & (col("w") < 1)))
+    opt = compile_plan(plan, CAT)
+    assert any("split-conjunction" in f for f in opt.fired)
+    join = next(n for n in opt.order if n.op == "join")
+
+    def ops_under(node):
+        seen = set()
+
+        def walk(n):
+            seen.add(n.op)
+            for i in n.inputs:
+                walk(i)
+        walk(node)
+        return seen
+    assert "filter" in ops_under(join.inputs[0])
+    assert "filter" in ops_under(join.inputs[1])
+    assert not any(n.op == "filter" and join in n.inputs for n in opt.order)
+
+
+def test_unpushable_conjunction_fused_back():
+    # both conjuncts read the aggregate output: split enables nothing and
+    # must be re-fused into ONE filter (a single compaction)
+    plan = (Plan.scan("l").groupby(["k"], {"v0": ["sum"]})
+            .filter((col("v0_sum") > 0) & (col("v0_sum") < 10)))
+    opt = compile_plan(plan, CAT)
+    assert sum(1 for n in opt.order if n.op == "filter") == 1
+
+
+def test_bitwise_and_on_ints_not_split():
+    # & on integer expressions is bitwise, not logical: splitting would
+    # change semantics, so the rule must not fire
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .filter((col("k") & col("w")) > 0))
+    opt = compile_plan(plan, CAT)
+    assert not any("split-conjunction" in f for f in opt.fired)
+
+
+def test_filter_pushed_below_with_columns():
+    plan = (Plan.scan("l").with_columns({"v1": col("v0") * 2})
+            .filter(col("k") > 0))
+    opt = compile_plan(plan, CAT)
+    order_ops = [n.op for n in opt.order]
+    assert order_ops.index("filter") < order_ops.index("with_columns")
+
+
+def test_filter_on_assigned_column_not_pushed():
+    plan = (Plan.scan("l").with_columns({"v1": col("v0") * 2})
+            .filter(col("v1") > 0))
+    opt = compile_plan(plan, CAT)
+    order_ops = [n.op for n in opt.order]
+    assert order_ops.index("filter") > order_ops.index("with_columns")
+
+
+def test_dead_assignment_pruned_and_inputs_dropped():
+    # v1 is never consumed; its junk input must not survive to the shuffle
+    plan = (Plan.scan("l")
+            .with_columns({"v1": col("junk") + 1, "v2": col("v0") * 2})
+            .shuffle(["k"]).project(["k", "v2"]))
+    opt = compile_plan(plan, CAT)
+    assert any("dead-assignment" in f for f in opt.fired)
+    wc = next(n for n in opt.order if n.op == "with_columns")
+    assert set(wc.params["exprs"]) == {"v2"}
+    assert any("drop [junk" in f for f in opt.fired)
+
+
+def test_expression_liveness_prunes_inputs_exactly():
+    # filter(v0) + final project(k): junk must be dropped before the wire
+    plan = (Plan.scan("l").shuffle(["k"]).filter(col("v0") > 0)
+            .project(["k"]))
+    opt = compile_plan(plan, CAT)
+    shuf = next(n for n in opt.order if n.op == "shuffle")
+    assert "junk" not in shuf.inputs[0].schema
+
+
+def test_explain_has_no_lambda_placeholders():
+    plan = (Plan.scan("l").join(Plan.scan("r"), on="k")
+            .filter((col("v0") * 2 > lit(5)) & (col("w") < 1))
+            .with_columns({"z": -col("v0") + 1}))
+    text = plan.explain(CAT)
+    assert "<lambda>" not in text and "filter[?]" not in text
+    assert "v0 * 2 > 5" in text
+    assert "z=-v0 + 1" in text
+
+
+# ---------------------------------------------------------------------- #
+# Value-based cache keys for expressions (PR 4 satellite)
+# ---------------------------------------------------------------------- #
+def test_expr_fingerprint_value_based():
+    # same expression built via different code paths -> same fingerprint
+    def build_a():
+        return Plan.scan("l").filter(col("v0") * 2 > lit(5)).shuffle(["k"])
+
+    def build_b():
+        two, five = lit(2), 5
+        return Plan.scan("l").filter((col("v0") * two) > five).shuffle(["k"])
+    fa = fingerprint(from_plan(build_a().node, dict(CAT)))
+    fb = fingerprint(from_plan(build_b().node, dict(CAT)))
+    assert fa == fb
+
+
+def test_expr_plans_share_cache_where_lambdas_miss(rng):
+    """The compile-cache instability fix: structurally identical plans from
+    *different* lambda objects miss the cache (bytecode identity), while the
+    equivalent typed-expression plans hit it (value identity)."""
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 10, 64).astype(np.int32),
+            "v0": rng.random(64).astype(np.float32)}
+    t = DistTable.from_numpy(data, env.parallelism)
+
+    with pytest.warns(DeprecationWarning):
+        p1 = Plan.scan("l").filter(lambda tb: tb.col("v0") > 0.5,
+                                   cols=["v0"])
+    with pytest.warns(DeprecationWarning):
+        # same semantics, different spelling -> different bytecode -> miss
+        p2 = Plan.scan("l").filter(
+            lambda tb: 0.5 < tb.col("v0"), cols=["v0"])
+    execute(p1, env, {"l": t})
+    n0 = len(env._cache)
+    execute(p2, env, {"l": t})
+    assert len(env._cache) == n0 + 1      # lambdas force a miss
+
+    def mk_first():
+        return Plan.scan("l").filter(col("v0") > 0.5)
+
+    def mk_second():  # separately built; 0.5 < col reflects to col > 0.5
+        return Plan.scan("l").filter(0.5 < col("v0"))
+    execute(mk_first(), env, {"l": t})
+    n1 = len(env._cache)
+    out = execute(mk_second(), env, {"l": t})
+    assert len(env._cache) == n1          # exprs hit the same entry
+    assert len(out.to_numpy()["k"]) == (data["v0"] > 0.5).sum()
+
+
+# ---------------------------------------------------------------------- #
+# Backward-compat shims (PR 4 satellite)
+# ---------------------------------------------------------------------- #
+def test_legacy_callable_shim_warns_and_matches_expr_path(rng):
+    """Plan.filter(callable) / map_columns keep working via OpaqueExpr —
+    each emits a DeprecationWarning and is bit-identical to the typed
+    expression path."""
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 16, 96).astype(np.int32),
+            "v0": rng.random(96).astype(np.float32)}
+    t = DistTable.from_numpy(data, env.parallelism)
+
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy_plan = Plan.scan("l").filter(
+            lambda tb: tb.col("v0") > 0.5, cols=["v0"])
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy_plan = legacy_plan.map_columns(lambda v: v * 2.0, ["v0"])
+    new_plan = (Plan.scan("l").filter(col("v0") > 0.5)
+                .with_columns({"v0": col("v0") * 2.0}))
+
+    a = execute(legacy_plan, env, {"l": t}).to_numpy()
+    b = execute(new_plan, env, {"l": t}).to_numpy()
+    assert sorted(a) == sorted(b)
+    for c in a:
+        np.testing.assert_array_equal(a[c], b[c])
+    # the opaque wrapper also keeps the declared-columns pushdown contract
+    opt = compile_plan(legacy_plan.shuffle(["k"]), CAT)
+    labels = [n.op for n in opt.order]
+    assert labels.index("filter") < labels.index("shuffle")
+
+
+def test_optimize_does_not_mutate_builder_plan(rng):
+    """Optimizing (or EXPLAINing) a plan must not corrupt the user's
+    builder tree: dead-assignment pruning once deleted entries from the
+    exprs dict *shared* with the builder node via from_plan's shallow
+    param copy."""
+    env = CylonEnv()
+    data = {"k": rng.integers(0, 16, 64).astype(np.int32),
+            "v0": rng.random(64).astype(np.float32),
+            "junk": rng.random(64).astype(np.float32)}
+    t = DistTable.from_numpy(data, env.parallelism)
+    plan = (Plan.scan("l")
+            .with_columns({"v1": col("junk") + 1, "v2": col("v0") * 2})
+            .shuffle(["k"]).project(["k", "v2"]))
+    compile_plan(plan, CAT)               # optimizer prunes dead v1 ...
+    wc = next(n for n in plan.topo() if n.op == "with_columns")
+    assert set(wc.params["exprs"]) == {"v1", "v2"}   # ... but not here
+    # and an unoptimized run still computes everything as written
+    full = (Plan.scan("l")
+            .with_columns({"v1": col("junk") + 1, "v2": col("v0") * 2}))
+    compile_plan(full.project(["k", "v2"]).shuffle(["k"]), CAT)
+    out = execute(full, env, {"l": t}, optimize=False).to_numpy()
+    np.testing.assert_allclose(out["v1"], data["junk"] + 1, rtol=1e-6)
+
+
+def test_fully_dead_with_columns_degenerates_to_noop():
+    plan = (Plan.scan("l").with_columns({"v1": col("junk") + 1})
+            .shuffle(["k"]).project(["k"]))
+    opt = compile_plan(plan, CAT)
+    assert not any(n.op == "with_columns" for n in opt.order)
