@@ -38,11 +38,19 @@ AXIS = "df"  # default dataframe axis name
 # ---------------------------------------------------------------------- #
 @dataclasses.dataclass
 class DistTable:
-    """Global view of a distributed Table: (p*cap,) columns + (p,) counts."""
+    """Global view of a distributed Table: (p*cap,) columns + (p,) counts.
+
+    ``dictionaries`` maps each dictionary-encoded string column to its
+    sorted dictionary (``dataframe.schema``); the device columns for those
+    names hold int32 codes.  Purely driver-side metadata — it never enters
+    the compiled programs.
+    """
 
     columns: Dict[str, jax.Array]
     row_counts: jax.Array  # (p,) int32
     capacity: int          # per-shard capacity
+    dictionaries: Dict[str, Tuple[str, ...]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def parallelism(self) -> int:
@@ -57,8 +65,13 @@ class DistTable:
                    capacity: Optional[int] = None) -> "DistTable":
         """Block-distribute host rows over ``parallelism`` shards.
 
-        An explicit ``capacity`` — including ``0`` — is honored verbatim and
-        validated against the per-shard row count."""
+        String columns (object / unicode numpy arrays) are dictionary-
+        encoded host-side: the device gets int32 codes, the sorted
+        dictionary lands in ``dictionaries``.  An explicit ``capacity`` —
+        including ``0`` — is honored verbatim and validated against the
+        per-shard row count."""
+        from ..dataframe.schema import encode_columns
+        data, dicts = encode_columns(data)
         n = len(next(iter(data.values())))
         per = -(-n // parallelism)
         if capacity is None:
@@ -75,16 +88,23 @@ class DistTable:
                 buf[r, :len(chunk)] = chunk
                 counts[r] = len(chunk)
             cols[name] = jnp.asarray(buf.reshape((parallelism * capacity,) + arr.shape[1:]))
-        return cls(cols, jnp.asarray(counts), capacity)
+        return cls(cols, jnp.asarray(counts), capacity, dicts)
 
-    def to_numpy(self) -> Dict[str, np.ndarray]:
-        """Gather valid rows from every shard (driver side, not jitted)."""
+    def to_numpy(self, decode: bool = True) -> Dict[str, np.ndarray]:
+        """Gather valid rows from every shard (driver side, not jitted).
+
+        ``decode=True`` (default) maps dictionary-encoded columns back to
+        numpy string arrays; ``decode=False`` returns the raw int32 codes.
+        """
         p, cap = self.parallelism, self.capacity
         counts = np.asarray(self.row_counts)
         out = {}
         for name, arr in self.columns.items():
             a = np.asarray(arr).reshape((p, cap) + arr.shape[1:])
             out[name] = np.concatenate([a[r, :counts[r]] for r in range(p)], axis=0)
+        if decode and self.dictionaries:
+            from ..dataframe.schema import decode_columns
+            out = decode_columns(out, self.dictionaries)
         return out
 
     def total_rows(self) -> int:
@@ -149,7 +169,8 @@ class MorselSource:
             self.h2d_bytes += buf.nbytes
             cols[name] = jnp.asarray(buf.reshape((p * cap,) + ref.shape[1:]))
         self.h2d_bytes += counts.nbytes
-        return DistTable(cols, jnp.asarray(counts), cap)
+        return DistTable(cols, jnp.asarray(counts), cap,
+                         dict(self.spill.dictionaries))
 
     def __iter__(self):
         nxt = self._build(0)

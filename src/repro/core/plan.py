@@ -177,7 +177,11 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
 
     ``env`` is a ``core.env.CylonEnv``; mode in {"bsp", "bsp_staged", "amt"}.
     ``optimize=False`` runs the plan exactly as written (the unoptimized
-    baseline measured by ``benchmarks/bench_pipeline.py``).
+    baseline measured by ``benchmarks/bench_pipeline.py``) — except
+    dictionary resolution (string-literal lowering + recode insertion on
+    dictionary-mismatched joins, ``planner.dictionary``), which is a
+    correctness pass and always runs; result dictionaries ride back on
+    ``DistTable.dictionaries`` (see ``docs/data_model.md``).
     ``shuffle_impl`` ("radix" sort-free | "sorted" baseline) and
     ``a2a_chunks`` (all-to-all pipeline depth) are the plan-wide shuffle
     defaults; per-node params override (see ``docs/shuffle.md``).

@@ -50,15 +50,20 @@ class SpillTable:
 
     ``schema`` (name -> (dtype, trailing shape)) is fixed at construction or
     by the first ``append``, so empty ranks and zero-row tables keep their
-    columns and dtypes.
+    columns and dtypes.  ``dictionaries`` carries the sorted per-column
+    dictionaries of string columns (chunks hold int32 codes), exactly like
+    ``DistTable.dictionaries``; spill/respill/rescatter preserve it.
     """
 
     def __init__(self, parallelism: int,
                  schema: Optional[Mapping[str, Tuple[np.dtype, Tuple[int, ...]]]]
-                 = None):
+                 = None,
+                 dictionaries: Optional[Mapping[str, Tuple[str, ...]]] = None):
         if parallelism < 1:
             raise ValueError(f"parallelism must be >= 1, got {parallelism}")
         self.parallelism = parallelism
+        self.dictionaries: Dict[str, Tuple[str, ...]] = \
+            dict(dictionaries or {})
         self._chunks: List[List[Dict[str, np.ndarray]]] = \
             [[] for _ in range(parallelism)]
         self._schema: Optional[Dict[str, Tuple[np.dtype, Tuple[int, ...]]]] = (
@@ -124,14 +129,21 @@ class SpillTable:
         return {k: np.concatenate([c[k] for c in chunks], axis=0)
                 for k in chunks[0]}
 
-    def to_numpy(self) -> Dict[str, np.ndarray]:
-        """Gather valid rows from every rank in rank order (driver side)."""
+    def to_numpy(self, decode: bool = True) -> Dict[str, np.ndarray]:
+        """Gather valid rows from every rank in rank order (driver side).
+
+        ``decode=True`` (default) maps dictionary-encoded columns back to
+        numpy string arrays; ``decode=False`` returns the raw codes."""
         parts = [self.rank_concat(r) for r in range(self.parallelism)]
         names = self.column_names
         if not names:
             return {}
-        return {k: np.concatenate([p[k] for p in parts], axis=0)
-                for k in names}
+        out = {k: np.concatenate([p[k] for p in parts], axis=0)
+               for k in names}
+        if decode and self.dictionaries:
+            from ..dataframe.schema import decode_columns
+            out = decode_columns(out, self.dictionaries)
+        return out
 
     def num_morsels(self, morsel_rows: int) -> int:
         """Morsels needed to stream the widest rank at ``morsel_rows`` each."""
@@ -143,14 +155,18 @@ class SpillTable:
     def from_numpy(cls, data: Mapping[str, np.ndarray], parallelism: int,
                    chunk_rows: Optional[int] = None) -> "SpillTable":
         """Block-distribute host rows over ``parallelism`` rank buckets,
-        optionally pre-chunked into ``chunk_rows``-row pieces."""
+        optionally pre-chunked into ``chunk_rows``-row pieces.  String
+        columns are dictionary-encoded (chunks hold int32 codes)."""
+        from ..dataframe.schema import encode_columns
         data = {k: np.asarray(v) for k, v in data.items()}
         if not data:
             raise ValueError("need at least one column")
+        data, dicts = encode_columns(data)
         n = len(next(iter(data.values())))
         per = -(-n // parallelism) if n else 0
         out = cls(parallelism,
-                  schema={k: (v.dtype, v.shape[1:]) for k, v in data.items()})
+                  schema={k: (v.dtype, v.shape[1:]) for k, v in data.items()},
+                  dictionaries=dicts)
         for r in range(parallelism):
             block = {k: v[r * per:(r + 1) * per] for k, v in data.items()}
             rows = len(next(iter(block.values())))
@@ -167,7 +183,8 @@ class SpillTable:
         host = {k: np.asarray(v).reshape((p, cap) + v.shape[1:])
                 for k, v in table.columns.items()}
         out = cls(p, schema={k: (v.dtype, v.shape[2:])
-                             for k, v in host.items()})
+                             for k, v in host.items()},
+                  dictionaries=table.dictionaries)
         for r in range(p):
             c = int(counts[r])
             if c:
@@ -205,7 +222,8 @@ def respill(spill: SpillTable, parallelism: int) -> SpillTable:
     ``DistTable``)."""
     if parallelism == spill.parallelism:
         return spill
-    out = SpillTable(parallelism, schema=spill.schema or None)
+    out = SpillTable(parallelism, schema=spill.schema or None,
+                     dictionaries=spill.dictionaries)
     for dest, pieces in enumerate(_route_chunks(spill, parallelism)):
         for piece in pieces:
             out.append(dest, piece)
@@ -244,7 +262,8 @@ def rescatter(spill: SpillTable, parallelism: int,
             counts[d] = pos
         cols[name] = jnp.asarray(
             buf.reshape((parallelism * cap,) + trail))
-    return DistTable(cols, jnp.asarray(counts), cap)
+    return DistTable(cols, jnp.asarray(counts), cap,
+                     dict(spill.dictionaries))
 
 
 def repartition(table: Union[DistTable, SpillTable], parallelism: int,

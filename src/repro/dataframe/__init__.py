@@ -10,9 +10,12 @@ from .ops_local import (
     join_local,
     join_overflow,
     map_columns,
+    recode,
     sort_local,
     with_columns,
 )
+from .schema import (decode_codes, encode_strings, merge_dictionaries,
+                     recode_mapping)
 from .shuffle import ShuffleStats, default_bucket_capacity, shuffle
 from .groupby import groupby
 from .join import join
@@ -22,7 +25,9 @@ __all__ = [
     "Table", "concat_tables",
     "add_scalar", "filter_expr", "filter_rows", "groupby_local",
     "hash_columns", "join_local", "join_overflow", "map_columns",
-    "sort_local", "with_columns",
+    "recode", "sort_local", "with_columns",
+    "decode_codes", "encode_strings", "merge_dictionaries",
+    "recode_mapping",
     "ShuffleStats", "default_bucket_capacity", "shuffle",
     "groupby", "join", "sort", "repartition_balanced",
 ]

@@ -34,7 +34,13 @@ def _mix32(h: jax.Array) -> jax.Array:
 
 
 def hash_columns(table: Table, key_cols: Sequence[str]) -> jax.Array:
-    """Combined 32-bit hash of the key columns (row-wise)."""
+    """Combined 32-bit hash of the key columns (row-wise).
+
+    Dictionary-encoded string columns hash their int32 *codes* directly:
+    the planner recodes join inputs onto a shared dictionary first
+    (``planner.dictionary``), so equal strings always carry equal codes
+    gang-wide and the hash placement stays consistent — no string-aware
+    hashing is ever needed on device."""
     h = jnp.full((table.capacity,), 0x9E3779B9, jnp.uint32)
     for name in key_cols:
         v = table.columns[name]
@@ -134,6 +140,21 @@ def with_columns(table: Table, exprs: Mapping[str, "object"]) -> Table:
         if v.ndim == 0:
             v = jnp.broadcast_to(v, (table.capacity,))
         out[name] = v
+    return Table(out, table.row_count)
+
+
+def recode(table: Table, mappings: Mapping[str, "np.ndarray"]) -> Table:
+    """Remap dictionary codes: ``new = mapping[old]`` per recoded column.
+
+    ``mappings`` maps column name -> static int32 gather table
+    (``dataframe.schema.recode_mapping``), baked into the compiled program
+    by the planner's ``recode`` node.  Padding rows gather garbage (their
+    codes are not meaningful), exactly like every other operator here.
+    """
+    out = dict(table.columns)
+    for name, mapping in mappings.items():
+        m = jnp.asarray(np.asarray(mapping), jnp.int32)
+        out[name] = jnp.take(m, table.columns[name], axis=0, mode="clip")
     return Table(out, table.row_count)
 
 

@@ -11,6 +11,13 @@ naturally produce.
 ``Table`` is a pytree, so it flows through ``jax.jit`` / ``jax.shard_map``
 directly.  Inside a shard_map region ``row_count`` has shape ``()``; the
 driver-side distributed holder (``core.env``) stacks one ``Table`` per shard.
+
+String columns never appear here: they are dictionary-encoded at ingest
+(``dataframe.schema``) and the device sees only their int32 *code* arrays —
+the dictionaries are sorted, so code order equals string order and every
+operator below runs unchanged.  The dictionaries themselves travel on the
+driver-side holders (``DistTable.dictionaries`` /
+``SpillTable.dictionaries``); see ``docs/data_model.md``.
 """
 
 from __future__ import annotations
@@ -61,6 +68,13 @@ class Table:
     def from_arrays(cls, data: Mapping[str, jax.Array], capacity: Optional[int] = None,
                     row_count: Optional[jax.Array] = None) -> "Table":
         """Build a table from equal-length dense arrays, padding to capacity."""
+        for k, v in data.items():
+            if isinstance(v, np.ndarray) and v.dtype.kind in ("O", "U", "S"):
+                raise TypeError(
+                    f"column {k!r} holds strings; device Tables carry int32 "
+                    f"dictionary codes — encode driver-side with "
+                    f"dataframe.schema.encode_strings (or ingest through "
+                    f"DistTable.from_numpy / repro.df)")
         data = {k: jnp.asarray(v) for k, v in data.items()}
         n = next(iter(data.values())).shape[0]
         for k, v in data.items():

@@ -307,7 +307,9 @@ def read_numpy(data: Mapping[str, np.ndarray], *,
     """Ingest host numpy columns as a distributed scan.
 
     Default: block-distribute onto the active env's devices (a
-    ``DistTable``; ``capacity`` sets per-rank slots).  An explicit ``env``
+    ``DistTable``; ``capacity`` sets per-rank slots).  String columns are
+    dictionary-encoded at ingest (the device holds int32 codes over a
+    sorted dictionary — ``docs/data_model.md``).  An explicit ``env``
     both partitions the data for that gang and pins later ``collect()``
     calls to it.  ``spill=True`` keeps the data host-resident as a
     ``SpillTable`` (in ``chunk_rows`` pinned chunks) for out-of-core
@@ -328,14 +330,28 @@ def read_numpy(data: Mapping[str, np.ndarray], *,
 
 
 def from_pandas(pdf, **kw) -> DataFrame:
-    """Ingest a ``pandas.DataFrame`` (numeric columns) — see
-    ``read_numpy`` for keyword arguments."""
+    """Ingest a ``pandas.DataFrame`` — see ``read_numpy`` for keyword
+    arguments.
+
+    Numeric/bool columns pass through; object/string and ``Categorical``
+    columns are dictionary-encoded (sorted dictionary + int32 codes on
+    device, decoded back by ``to_pandas`` — see ``docs/data_model.md``).
+    Anything else (datetimes, nested objects) raises."""
+    import pandas as pd
     data = {}
     for colname in pdf.columns:
-        arr = np.asarray(pdf[colname])
-        if not np.issubdtype(arr.dtype, np.number) and arr.dtype != np.bool_:
+        series = pdf[colname]
+        if isinstance(series.dtype, pd.CategoricalDtype):
+            arr = np.asarray(series.astype(object))
+        else:
+            arr = np.asarray(series)
+        # string-ish columns are validated element-wise by the encoder
+        # itself (schema._as_str_array names the column in its error)
+        if (arr.dtype.kind not in ("O", "U", "S")
+                and not np.issubdtype(arr.dtype, np.number)
+                and arr.dtype != np.bool_):
             raise TypeError(
                 f"column {colname!r} has unsupported dtype {arr.dtype}; "
-                f"only numeric/bool columns are supported")
+                f"supported: numeric, bool, str, Categorical[str]")
         data[str(colname)] = arr
     return read_numpy(data, **kw)

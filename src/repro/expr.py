@@ -282,7 +282,12 @@ class Col(Expr):
 class Lit(Expr):
     """Literal scalar.  Python scalars stay weakly typed (so ``col + 1.0``
     follows jnp's weak-promotion rules, matching what inline jnp code would
-    do); numpy scalars pin their dtype."""
+    do); numpy scalars pin their dtype.
+
+    String literals are allowed in the tree (``col("s") == "oak"``) but
+    never reach the device: the planner lowers them into int32 code
+    comparisons against the column's dictionary
+    (``dataframe.schema.lower_expr``) before compilation."""
 
     __slots__ = ("value",)
 
@@ -310,6 +315,13 @@ class Lit(Expr):
         return isinstance(self.value, (bool, np.bool_))
 
     def evaluate(self, table) -> jax.Array:
+        if isinstance(self.value, (str, np.str_)):
+            raise TypeError(
+                f"string literal {self.value!r} reached evaluation without "
+                f"being lowered against a column dictionary; string "
+                f"literals are only usable in comparisons against a "
+                f"dictionary-encoded column (the planner lowers them — "
+                f"see docs/data_model.md)")
         return self.value  # jnp ops promote python scalars weakly
 
     def _render(self, parent_prec: int) -> str:
@@ -449,10 +461,13 @@ def lit(value) -> Lit:
 
 
 def ensure_expr(v: Any) -> Expr:
-    """Lift scalars to ``Lit``; pass ``Expr`` through; reject the rest."""
+    """Lift scalars to ``Lit``; pass ``Expr`` through; reject the rest.
+
+    Strings lift too (``col("s") == "oak"``): they are lowered into
+    dictionary-code comparisons by the planner, never evaluated raw."""
     if isinstance(v, Expr):
         return v
-    if isinstance(v, (bool, int, float, complex, np.generic)):
+    if isinstance(v, (bool, int, float, complex, str, np.generic)):
         return Lit(v)
     if isinstance(v, (np.ndarray, jax.Array)) and np.ndim(v) == 0:
         return Lit(v)

@@ -11,9 +11,8 @@ from __future__ import annotations
 
 from typing import Any, Dict, Mapping, Optional
 
-from .logical import LogicalNode, build_catalog, from_plan
-from .physical import PhysicalPlan, lower
-from .rules import optimize
+from .logical import LogicalNode
+from .physical import PhysicalPlan
 
 
 def _label(n: LogicalNode) -> str:
@@ -33,6 +32,10 @@ def _label(n: LogicalNode) -> str:
     if n.op == "add_scalar":
         cols = p.get("cols")
         return f"add_scalar[{','.join(cols) if cols else '*'}]"
+    if n.op == "recode":
+        parts = ",".join(f"{c}:|D|={len(p['targets'][c])}"
+                         for c in sorted(p["targets"]))
+        return f"recode[{parts}]"
     if n.op == "shuffle":
         extra = "".join(f"; {k}={p[k]}" for k in ("impl", "a2a_chunks")
                         if k in p)
@@ -100,14 +103,7 @@ def explain(plan: Any, tables: Optional[Mapping[str, Any]] = None,
     ``a2a_chunks`` are the plan-wide shuffle knobs shown in the header
     (per-node overrides appear in the node labels); ``morsel_rows`` marks
     out-of-core morsel execution in the header."""
-    catalog = build_catalog(tables)
-    node = getattr(plan, "node", plan)
-    if isinstance(node, LogicalNode):
-        root, fired = node, []
-    else:
-        root = from_plan(node, catalog)
-        fired = []
-    if optimize_plan:
-        root, fired = optimize(root, catalog)
-    return render(lower(root, fired), mode, shuffle_impl=shuffle_impl,
+    from . import compile_plan  # deferred: the package imports this module
+    return render(compile_plan(plan, tables, optimize_plan=optimize_plan),
+                  mode, shuffle_impl=shuffle_impl,
                   a2a_chunks=a2a_chunks, morsel_rows=morsel_rows)

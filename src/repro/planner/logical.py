@@ -33,9 +33,10 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 #: ops that may execute a shuffle (communication boundaries)
 COMM_OPS = ("shuffle", "join", "groupby", "sort")
-#: purely local ops
+#: purely local ops (``recode`` remaps dictionary codes via a static
+#: gather table — inserted by ``planner.dictionary``, never by users)
 LOCAL_OPS = ("scan", "project", "filter", "with_columns", "add_scalar",
-             "noop")
+             "recode", "noop")
 
 #: paper §V data recipe: ~90% key cardinality (drives groupby estimates)
 DEFAULT_GROUP_RATIO = 0.9
@@ -97,6 +98,9 @@ class LogicalNode:
     schema: Tuple[str, ...] = ()
     partitioning: Partitioning = dataclasses.field(default_factory=Partitioning)
     est_rows: float = 0.0
+    #: per-column dictionaries of dictionary-encoded string columns in the
+    #: output schema (``dataframe.schema``); device columns hold codes
+    dicts: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
     nid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     # -- physical classification (consulted by lowering & staging) ------- #
@@ -177,6 +181,12 @@ def annotate(root: LogicalNode,
     return root
 
 
+def _restrict_dicts(dicts: Mapping[str, Tuple[str, ...]],
+                    schema: Sequence[str]) -> Dict[str, Tuple[str, ...]]:
+    live = set(schema)
+    return {c: d for c, d in dicts.items() if c in live}
+
+
 def _annotate_node(n: LogicalNode, catalog) -> None:
     p = n.params
     ins = n.inputs
@@ -188,32 +198,48 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                     f"scan {name!r} has no schema: pass it in `tables` "
                     f"(a DistTable, a column sequence, or a (cols, rows) "
                     f"pair); known names: {sorted(catalog)}")
-            cols, rows = catalog[name]
+            entry = catalog[name]
+            cols, rows = entry[0], entry[1]
             n.schema = tuple(sorted(cols))
             n.est_rows = float(rows)
+            n.dicts = dict(entry[2]) if len(entry) > 2 else {}
         n.partitioning = Partitioning.none()  # block-distributed source
         return
 
     i0 = ins[0]
     if n.op == "noop":                        # identity left by shuffle elision
         n.schema, n.partitioning, n.est_rows = i0.schema, i0.partitioning, i0.est_rows
+        n.dicts = dict(i0.dicts)
     elif n.op == "project":
         n.schema = tuple(sorted(p["cols"]))
         n.partitioning = i0.partitioning.restrict(n.schema)
         n.est_rows = i0.est_rows
+        n.dicts = _restrict_dicts(i0.dicts, n.schema)
     elif n.op == "filter":
         n.schema = i0.schema
         n.partitioning = i0.partitioning
         n.est_rows = i0.est_rows * DEFAULT_FILTER_SELECTIVITY
+        n.dicts = dict(i0.dicts)
     elif n.op == "with_columns":
         # assignments may introduce new columns; rewriting a partitioning
         # column's values breaks the placement property
+        from ..dataframe.schema import expr_dictionary
         assigned = set(p["exprs"])
         n.schema = tuple(sorted(set(i0.schema) | assigned))
         n.partitioning = (Partitioning.none()
                           if assigned & set(i0.partitioning.cols)
                           else i0.partitioning)
         n.est_rows = i0.est_rows
+        dicts = {c: d for c, d in i0.dicts.items() if c not in assigned}
+        # already-lowered string-literal assignments record their output
+        # dictionary in ``assign_dicts`` (planner.dictionary)
+        assign_dicts = p.get("assign_dicts", {})
+        for name, e in p["exprs"].items():
+            d = (assign_dicts.get(name)
+                 or expr_dictionary(e, i0.dicts))
+            if d is not None:
+                dicts[name] = d
+        n.dicts = dicts
     elif n.op == "add_scalar":
         n.schema = i0.schema
         touched = p.get("cols")
@@ -222,12 +248,23 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                           if touched & set(i0.partitioning.cols)
                           else i0.partitioning)
         n.est_rows = i0.est_rows
+        n.dicts = dict(i0.dicts)
+    elif n.op == "recode":
+        # static per-column code remap onto the target dictionaries; the
+        # recoded columns' hash placement no longer holds (codes changed)
+        n.schema = i0.schema
+        n.partitioning = (Partitioning.none()
+                          if set(p["cols"]) & set(i0.partitioning.cols)
+                          else i0.partitioning)
+        n.est_rows = i0.est_rows
+        n.dicts = {**i0.dicts, **p["targets"]}
     elif n.op == "shuffle":
         n.schema = i0.schema
         # an explicit dest array routes rows arbitrarily — no hash property
         n.partitioning = (Partitioning.none() if "dest" in p
                           else Partitioning.hash_(p["key_cols"]))
         n.est_rows = i0.est_rows
+        n.dicts = dict(i0.dicts)
     elif n.op == "join":
         l, r = ins
         n.schema = join_schema(l.schema, r.schema, p["on"])
@@ -235,6 +272,15 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                           and p.get("elide_right")
                           else Partitioning.hash_((p["on"],)))
         n.est_rows = max(l.est_rows, r.est_rows)
+        # key column comes from the left side (inputs agree post-recode);
+        # colliding right columns follow the ``_r`` suffix rename
+        dicts = dict(l.dicts)
+        lcols = set(l.schema)
+        for c, d in r.dicts.items():
+            if c == p["on"]:
+                continue
+            dicts[c if c not in lcols else c + "_r"] = d
+        n.dicts = _restrict_dicts(dicts, n.schema)
     elif n.op == "groupby":
         n.schema = groupby_schema(p["keys"], p["aggs"])
         if p.get("elide_shuffle"):
@@ -243,10 +289,20 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
         else:
             n.partitioning = Partitioning.hash_(p["keys"])
         n.est_rows = i0.est_rows * DEFAULT_GROUP_RATIO
+        # keys keep their dictionaries; min/max of codes = min/max of
+        # strings (sorted dictionaries), so those outputs stay encoded
+        dicts = {k: i0.dicts[k] for k in p["keys"] if k in i0.dicts}
+        for col, agg_names in p["aggs"].items():
+            if col in i0.dicts:
+                for a in agg_names:
+                    if a in ("min", "max"):
+                        dicts[f"{col}_{a}"] = i0.dicts[col]
+        n.dicts = _restrict_dicts(dicts, n.schema)
     elif n.op == "sort":
         n.schema = i0.schema
         n.partitioning = Partitioning.range_(p["by"][0])
         n.est_rows = i0.est_rows
+        n.dicts = dict(i0.dicts)
     else:
         raise ValueError(f"unknown op {n.op!r}")
 
@@ -269,18 +325,63 @@ def from_plan(node, catalog: Mapping[str, Tuple[Tuple[str, ...], float]]
     return annotate(conv(node), catalog)
 
 
+def copy_dag(root: LogicalNode) -> LogicalNode:
+    """Structural copy of a LogicalNode DAG (sharing preserved, params
+    shallow-copied like ``from_plan``).  ``compile_plan`` copies before
+    the rewrite passes so a caller-held DAG is never mutated — compiling
+    it twice against different catalogs must not leak recode tables or
+    lowered literals from the first run into the second."""
+    memo: Dict[int, LogicalNode] = {}
+
+    def conv(n: LogicalNode) -> LogicalNode:
+        if n.nid in memo:
+            return memo[n.nid]
+        out = LogicalNode(n.op, [conv(i) for i in n.inputs], dict(n.params),
+                          schema=n.schema, partitioning=n.partitioning,
+                          est_rows=n.est_rows, dicts=dict(n.dicts))
+        memo[n.nid] = out
+        return out
+
+    return conv(root)
+
+
 def build_catalog(tables: Optional[Mapping[str, Any]]
-                  ) -> Dict[str, Tuple[Tuple[str, ...], float]]:
-    """Normalize scan metadata: values may be DistTable-likes (``column_names``
-    + ``total_rows``), ``(cols, rows)`` pairs, or plain column sequences."""
-    cat: Dict[str, Tuple[Tuple[str, ...], float]] = {}
+                  ) -> Dict[str, Tuple[Tuple[str, ...], float,
+                                       Dict[str, Tuple[str, ...]]]]:
+    """Normalize scan metadata to ``(columns, est_rows, dictionaries)``.
+
+    Values may be DistTable-likes (``column_names`` + ``total_rows`` +
+    optional ``dictionaries``), numpy column dicts, ``(cols, rows)`` pairs,
+    or plain column sequences; dictionaries default to none (all-numeric).
+    """
+    from ..dataframe.schema import dictionary_of, is_string_array
+    cat: Dict[str, Tuple[Tuple[str, ...], float,
+                         Dict[str, Tuple[str, ...]]]] = {}
     for name, t in (tables or {}).items():
         if hasattr(t, "column_names"):
             rows = float(t.total_rows()) if hasattr(t, "total_rows") else 1024.0
-            cat[name] = (tuple(t.column_names), rows)
-        elif (isinstance(t, tuple) and len(t) == 2
+            dicts = dict(getattr(t, "dictionaries", {}) or {})
+            cat[name] = (tuple(t.column_names), rows, dicts)
+        elif isinstance(t, Mapping):
+            # raw numpy column dict (morsel-streamed source): string
+            # columns will be dictionary-encoded at ingest — mirror the
+            # dictionary here (codes not needed) so the plan agrees.
+            # NOTE: this np.unique runs per compile; for large string
+            # sources ingest once into a SpillTable/DistTable (which
+            # carries .dictionaries) instead of passing raw dicts
+            import numpy as _np
+            cols, dicts, rows = [], {}, 1024.0
+            for cname, arr in t.items():
+                arr = _np.asarray(arr)
+                cols.append(cname)
+                rows = float(len(arr))
+                if is_string_array(arr):
+                    dicts[cname] = dictionary_of(arr)
+            cat[name] = (tuple(cols), rows, dicts)
+        elif (isinstance(t, tuple) and len(t) in (2, 3)
               and not isinstance(t[0], str)):
-            cat[name] = (tuple(t[0]), float(t[1]))
+            dicts = dict(t[2]) if len(t) == 3 else {}
+            cat[name] = (tuple(t[0]), float(t[1]), dicts)
         else:
-            cat[name] = (tuple(t), 1024.0)
+            cat[name] = (tuple(t), 1024.0, {})
     return cat

@@ -63,7 +63,8 @@ from ..dataframe.shuffle import shuffle as df_shuffle
 from ..dataframe.table import Table
 from .logical import LogicalNode, topo
 from .physical import (ExecStats, PhysicalPlan, _row_bytes, _shuffle_kw,
-                       _stat_vec, _sum_stats, _token, eval_node, fingerprint)
+                       _stat_vec, _sum_stats, _token, attach_dictionaries,
+                       check_scan_dictionaries, eval_node, fingerprint)
 
 
 @dataclasses.dataclass
@@ -222,7 +223,8 @@ def _host_sort_ranks(spill: SpillTable, by: Sequence[str]) -> SpillTable:
     (pre-sorting runs on device would be wasted — a vectorized lexsort over
     the concatenation beats a per-row Python k-way merge, and stability
     preserves arrival order for ties)."""
-    out = SpillTable(spill.parallelism, schema=spill.schema)
+    out = SpillTable(spill.parallelism, schema=spill.schema,
+                     dictionaries=spill.dictionaries)
     for r in range(spill.parallelism):
         cols = spill.rank_concat(r)
         n = len(next(iter(cols.values()))) if cols else 0
@@ -276,6 +278,8 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
         return ops_local.with_columns(cur, p_["exprs"])
     if node.op == "add_scalar":
         return ops_local.add_scalar(cur, p_["value"], p_.get("cols"))
+    if node.op == "recode":
+        return ops_local.recode(cur, p_["cols"])
 
     # communication ops: capacities are re-derived from the morsel working
     # capacity W — plan-level bucket/out capacities describe in-core tables.
@@ -498,6 +502,7 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     src_name = chain[0].params["name"]
     if src_name not in tables:
         raise KeyError(f"plan scans missing from tables: [{src_name!r}]")
+    check_scan_dictionaries(pplan.order, tables)
     M = _round8(morsel_rows)
     W = max(M, _round8(int(M * capacity_factor)))
     fp = pplan.fingerprint
@@ -552,6 +557,7 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         elif terminal == "sort":
             spill = _host_sort_ranks(spill, by)
 
+    spill = attach_dictionaries(spill, pplan.root)
     rows, byts, dropped = _sum_stats(collected)
     if dropped:
         warnings.warn(

@@ -213,6 +213,8 @@ def eval_node(node: LogicalNode, comm: Communicator,
         return ops_local.with_columns(ins[0], p["exprs"])
     if node.op == "add_scalar":
         return ops_local.add_scalar(ins[0], p["value"], p.get("cols"))
+    if node.op == "recode":
+        return ops_local.recode(ins[0], p["cols"])
 
     kw = _shuffle_kw(node)
     if shuffle_mode == "direct":
@@ -334,6 +336,50 @@ class ExecStats:
     d2h_bytes: int = 0                 # device->host spill transfer bytes
 
 
+def check_scan_dictionaries(order: Sequence[LogicalNode],
+                            tables: Dict[str, Any]) -> None:
+    """Reject runtime tables whose dictionaries differ from compile time.
+
+    Recode gather tables and lowered string literals are baked into the
+    compiled plan from the *compile-time* catalog; running that plan
+    against a table with a different dictionary would silently decode
+    fabricated strings.  Tables without a ``dictionaries`` attribute (raw
+    numpy dicts) were encoded by ``build_catalog`` at compile time and are
+    re-encoded identically at ingest, so only holder mismatches can occur.
+    """
+    for n in order:
+        if n.op != "scan":
+            continue
+        t = tables.get(n.params["name"])
+        got = getattr(t, "dictionaries", None)
+        if got is None:
+            continue
+        want = {c: d for c, d in n.dicts.items() if c in n.schema}
+        if dict(got) != want:
+            diff = sorted(set(got) ^ set(want)
+                          | {c for c in set(got) & set(want)
+                             if tuple(got[c]) != want[c]})
+            raise ValueError(
+                f"scan {n.params['name']!r}: table dictionaries for "
+                f"{diff} differ from the ones this plan was compiled "
+                f"against — re-run compile_plan/execute with the current "
+                f"tables (recode tables and lowered string literals are "
+                f"baked in at compile time)")
+
+
+def attach_dictionaries(out, root: LogicalNode):
+    """Re-attach driver-side dictionaries to an execution result.
+
+    The compiled programs move int32 codes only; the annotated root knows
+    which output columns are dictionary-encoded and by what dictionary
+    (``LogicalNode.dicts``), so the driver restores the metadata here.
+    """
+    if root.dicts and hasattr(out, "dictionaries"):
+        live = set(getattr(out, "column_names", ()) or root.dicts)
+        out.dictionaries = {c: d for c, d in root.dicts.items() if c in live}
+    return out
+
+
 def _sum_stats(collected) -> Tuple[int, int, int]:
     """``collected``: (p, 3) arrays -> (rows sent, bytes sent, rows dropped)."""
     tot = np.zeros((3,), np.int64)
@@ -373,6 +419,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     missing = [n for n in names if n not in tables]
     if missing:
         raise KeyError(f"plan scans missing from tables: {missing}")
+    check_scan_dictionaries(pplan.order, tables)
     root = pplan.root
     order = pplan.order
     fp = pplan.fingerprint
@@ -410,8 +457,8 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                            shuffle_impl, a2a_chunks))
         if collect_stats:
             out, collected = res
-            return out, mk_stats(1, collected)
-        return res
+            return attach_dictionaries(out, root), mk_stats(1, collected)
+        return attach_dictionaries(res, root)
 
     if mode in ("bsp_staged", "amt"):
         values: Dict[int, Any] = {}
@@ -472,7 +519,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 jax.block_until_ready(val.row_counts)  # completion barrier
                 values[n.nid] = val
 
-        result = values[root.nid]
+        result = attach_dictionaries(values[root.nid], root)
         if collect_stats:
             return result, mk_stats(dispatches, collected)
         return result

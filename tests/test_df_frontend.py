@@ -83,8 +83,16 @@ def test_from_pandas_round_trip(env, rng):
                         "v": np.linspace(0, 1, 10, dtype=np.float32)})
     out = rdf.from_pandas(pdf)[col("k") % 2 == 0].to_pandas()
     np.testing.assert_array_equal(out["k"], [0, 2, 4, 6, 8])
+    # string / categorical columns dictionary-encode and decode back
+    spdf = pd.DataFrame({"s": ["b", "a", "b"],
+                         "c": pd.Categorical(["x", "y", "x"])})
+    sout = rdf.from_pandas(spdf).to_pandas()
+    np.testing.assert_array_equal(sout["s"], spdf["s"])
+    np.testing.assert_array_equal(sout["c"], np.asarray(spdf["c"]))
     with pytest.raises(TypeError, match="unsupported dtype"):
-        rdf.from_pandas(pd.DataFrame({"s": ["a", "b"]}))
+        rdf.from_pandas(pd.DataFrame({"t": pd.to_datetime(["2023-01-01"])}))
+    with pytest.raises(TypeError, match="mixes strings with"):
+        rdf.from_pandas(pd.DataFrame({"s": ["a", 3]}))
 
 
 def test_schema_validation_errors(env, rng):

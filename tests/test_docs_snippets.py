@@ -1,0 +1,83 @@
+"""Executable documentation: every fenced ```python block in README.md and
+docs/*.md runs in CI, so docs can never silently drift from the API again.
+
+Convention (documented in ``docs/index.md``):
+
+* blocks in one file execute **in order in a shared namespace**, so a later
+  snippet may use names an earlier one defined;
+* every file's namespace is seeded with the standard preamble below
+  (numpy/pandas/repro imports plus small example columns ``keys`` /
+  ``vals`` / ``names``), so snippets can stay as short as prose wants them
+  to be;
+* each file runs against a fresh 1-device ``CylonEnv`` session.
+
+Anything not runnable belongs in a non-python fence (```text, ```bash, …).
+"""
+
+import os
+import re
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+import repro.df as rdf  # noqa: E402
+from repro.core import CylonEnv  # noqa: E402
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def _doc_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def _blocks(path):
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    return [m.group(1) for m in _FENCE.finditer(text)]
+
+
+def _preamble():
+    """The namespace every docs snippet may assume (docs/index.md)."""
+    rng = np.random.default_rng(0)
+    return {
+        "np": np,
+        "pd": pd,
+        "rdf": rdf,
+        "rng": rng,
+        "keys": rng.integers(0, 29, 128).astype(np.int32),
+        "vals": rng.integers(0, 8, 128).astype(np.float32),
+        "names": rng.choice(np.array(["ash", "birch", "cedar", "oak"]), 128),
+    }
+
+
+FILES = _doc_files()
+
+
+def test_docs_exist_and_have_snippets():
+    assert any(_blocks(f) for f in FILES), "no python snippets found"
+
+
+@pytest.mark.parametrize("path", FILES,
+                         ids=[os.path.relpath(f, REPO) for f in FILES])
+def test_docs_snippets_execute(path):
+    blocks = _blocks(path)
+    if not blocks:
+        pytest.skip("no python snippets")
+    env = CylonEnv()
+    rdf.set_default_env(env)
+    ns = _preamble()
+    try:
+        for i, block in enumerate(blocks):
+            code = compile(block, f"{os.path.basename(path)}[snippet {i}]",
+                           "exec")
+            exec(code, ns)  # noqa: S102 - executing our own docs is the point
+    finally:
+        rdf.reset_default_env()

@@ -63,11 +63,23 @@ def test_immutability_and_validation():
     with pytest.raises(AttributeError):
         e.name = "w"
     with pytest.raises(TypeError):
-        ensure_expr("a string")
+        ensure_expr(["not", "a", "scalar"])
     with pytest.raises(TypeError):
         lit(np.arange(3))
     with pytest.raises(ValueError):
         BinOp("??", col("a"), col("b"))
+
+
+def test_string_literals_lift_but_never_evaluate_raw():
+    # strings build expressions (df.s == "oak") but must be lowered to
+    # dictionary codes by the planner before evaluation (docs/data_model.md)
+    e = ensure_expr("oak")
+    assert isinstance(e, Lit) and e.value == "oak"
+    cmp = col("s") == "oak"
+    assert isinstance(cmp.right, Lit) and cmp.right.value == "oak"
+    t = make_table(s=np.arange(4, dtype=np.int32))
+    with pytest.raises(TypeError, match="lowered against a column dict"):
+        cmp.evaluate(t)
 
 
 # ---------------------------------------------------------------------- #

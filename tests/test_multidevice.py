@@ -61,6 +61,11 @@ def test_out_of_core_parity():
 
 
 @pytest.mark.multidevice
+def test_string_key_parity():
+    _run("string_key_parity.py")
+
+
+@pytest.mark.multidevice
 def test_df_frontend_parity():
     _run("df_frontend_parity.py")
 

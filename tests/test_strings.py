@@ -1,0 +1,441 @@
+"""Dictionary-encoded string columns end-to-end vs a pandas oracle.
+
+The encoding invariant (``repro.dataframe.schema``): dictionaries are
+lexicographically sorted, so int32 codes are order-isomorphic to their
+strings — sort/min/max/range-partition on codes equals the same on
+strings, and code equality equals string equality within one dictionary.
+Joins across *different* dictionaries go through a planner-inserted
+``recode`` node (visible in EXPLAIN).
+
+Tiers: encoding-layer unit tests, literal-lowering semantics, frontend
+pipelines (join/groupby/sort/filter) against pandas, spill/out-of-core
+paths incl. empty ranks, clear-error checks, and hypothesis property
+tests over random string pools (skipped without hypothesis; CI installs
+it).
+"""
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+import repro.df as rdf  # noqa: E402
+from repro.core import CylonEnv, DistTable, SpillTable  # noqa: E402
+from repro.core.store import repartition, respill  # noqa: E402
+from repro.dataframe.schema import (DictTypeError, decode_codes,  # noqa: E402
+                                    encode_strings, lower_expr,
+                                    merge_dictionaries, recode_mapping)
+from repro.expr import col, lit  # noqa: E402
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture
+def env():
+    e = CylonEnv()
+    rdf.set_default_env(e)
+    yield e
+    rdf.reset_default_env()
+
+
+POOL = ["ash", "birch", "cedar", "elm", "fir", "oak", "pine", "yew"]
+
+
+def _sdata(rng, n=128, pool=POOL):
+    return {"s": rng.choice(np.asarray(pool), n),
+            "v": rng.integers(0, 16, n).astype(np.float32)}
+
+
+def _records(d, keys):
+    d = {k: np.asarray(v) for k, v in d.items()}
+    order = np.lexsort(tuple(d[k] for k in reversed(keys)))
+    return {k: v[order] for k, v in d.items()}
+
+
+def _assert_same(got, want, keys):
+    assert sorted(got) == sorted(want)
+    g, w = _records(got, keys), _records(want, keys)
+    for c in want:
+        if np.asarray(w[c]).dtype.kind in ("U", "O"):
+            np.testing.assert_array_equal(np.asarray(g[c], str),
+                                          np.asarray(w[c], str), err_msg=c)
+        else:
+            np.testing.assert_allclose(np.asarray(g[c], np.float64),
+                                       np.asarray(w[c], np.float64),
+                                       rtol=1e-6, err_msg=c)
+
+
+# ---------------------------------------------------------------------- #
+# Encoding layer
+# ---------------------------------------------------------------------- #
+def test_encode_sorted_and_order_isomorphic(rng):
+    arr = rng.choice(np.asarray(POOL), 64)
+    codes, d = encode_strings(arr)
+    assert list(d) == sorted(set(arr))            # sorted, duplicate-free
+    np.testing.assert_array_equal(decode_codes(codes, d), arr)
+    # order isomorphism: sorting codes sorts strings
+    np.testing.assert_array_equal(
+        decode_codes(np.sort(codes), d), np.sort(arr))
+    assert codes.dtype == np.int32
+
+
+def test_encode_empty_and_object_arrays():
+    codes, d = encode_strings(np.asarray([], dtype=object))
+    assert d == () and codes.shape == (0,)
+    codes, d = encode_strings(np.asarray(["b", "a"], dtype=object))
+    assert d == ("a", "b") and list(codes) == [1, 0]
+    with pytest.raises(TypeError, match="all-string"):
+        encode_strings(np.asarray(["a", 1], dtype=object))
+
+
+def test_decode_rejects_out_of_range_codes():
+    # decode runs on valid rows only; an out-of-range code is upstream
+    # corruption and must fail loudly, never alias a dictionary entry
+    with pytest.raises(ValueError, match="out of range"):
+        decode_codes(np.asarray([0, 2], np.int32), ("a", "b"))
+    with pytest.raises(ValueError, match="out of range"):
+        decode_codes(np.asarray([-1], np.int32), ("a",))
+    with pytest.raises(ValueError, match="out of range"):
+        decode_codes(np.asarray([0], np.int32), ())
+
+
+def test_recode_mapping_roundtrip():
+    old = ("b", "d")
+    new = merge_dictionaries(old, ("a", "c", "d"))
+    assert new == ("a", "b", "c", "d")
+    m = recode_mapping(old, new)
+    codes = np.asarray([0, 1, 1, 0], np.int32)
+    np.testing.assert_array_equal(
+        decode_codes(m[codes], new), decode_codes(codes, old))
+    with pytest.raises(ValueError, match="missing"):
+        recode_mapping(("z",), ("a", "b"))
+    # empty old dictionary still yields a valid (len-1) gather table
+    assert recode_mapping((), ("a",)).shape == (1,)
+
+
+def test_lower_expr_comparison_table():
+    d = {"s": ("ash", "cedar", "oak")}
+    tbl = [  # Exprs are unhashable by design (== builds a tree)
+        (col("s") == "cedar", "s == 1"),
+        (col("s") == "nope", "s == -1"),
+        (col("s") != "oak", "s != 2"),
+        (col("s") < "cedar", "s < 1"),
+        (col("s") <= "cedar", "s < 2"),
+        (col("s") > "cedar", "s >= 2"),
+        (col("s") >= "cedar", "s >= 1"),
+        # absent literal: strictly-between boundary, lo == hi
+        (col("s") < "beech", "s < 1"),
+        (col("s") <= "beech", "s < 1"),
+        (col("s") > "beech", "s >= 1"),
+    ]
+    for e, want in tbl:
+        lowered, out_d = lower_expr(e, d)
+        assert out_d is None
+        assert repr(lowered) == want, repr(e)
+    # reflected: "cedar" < s  ==  s > "cedar"
+    lowered, _ = lower_expr(lit("cedar") < col("s"), d)
+    assert repr(lowered) == "s >= 2"
+
+
+def test_lower_expr_rejections():
+    d = {"s": ("a", "b"), "t": ("a", "c")}
+    with pytest.raises(DictTypeError, match="arithmetic"):
+        lower_expr(col("s") + 1, d)
+    with pytest.raises(DictTypeError, match="numeric"):
+        lower_expr(col("s") == 3, d)
+    with pytest.raises(DictTypeError, match="different dictionaries"):
+        lower_expr(col("s") == col("t"), d)
+    with pytest.raises(DictTypeError, match="boolean"):
+        lower_expr(col("s") & True, d)
+    # same dictionary: plain code comparison is exact
+    lowered, _ = lower_expr(col("s") == col("s"), d)
+    assert repr(lowered) == "s == s"
+    # bare string literal: constant column over a singleton dictionary
+    lowered, out_d = lower_expr(lit("x"), d)
+    assert out_d == ("x",) and lowered.value == 0
+
+
+# ---------------------------------------------------------------------- #
+# Ingest / egress
+# ---------------------------------------------------------------------- #
+def test_disttable_ingest_decodes_back(rng):
+    data = _sdata(rng)
+    t = DistTable.from_numpy(dict(data), 1)
+    assert list(t.dictionaries["s"]) == sorted(set(data["s"]))
+    np.testing.assert_array_equal(t.to_numpy()["s"], data["s"])
+    # decode=False exposes the raw codes
+    raw = t.to_numpy(decode=False)["s"]
+    assert raw.dtype == np.int32
+
+
+def test_spilltable_empty_ranks_keep_dictionaries(rng):
+    data = {k: v[:2] for k, v in _sdata(rng).items()}
+    sp = SpillTable.from_numpy(data, parallelism=4)   # ranks 2,3 empty
+    assert sp.rank_rows(2) == 0 and sp.rank_rows(3) == 0
+    assert sp.dictionaries["s"]
+    np.testing.assert_array_equal(sp.to_numpy()["s"], data["s"])
+    # respill / rescatter / repartition all preserve the dictionaries
+    assert respill(sp, 2).dictionaries == sp.dictionaries
+    dist = repartition(sp, 2)
+    assert dist.dictionaries == sp.dictionaries
+    np.testing.assert_array_equal(dist.to_numpy()["s"], data["s"])
+
+
+def test_device_table_rejects_raw_strings():
+    from repro.dataframe import Table
+    with pytest.raises(TypeError, match="dictionary codes"):
+        Table.from_arrays({"s": np.asarray(["a", "b"])})
+
+
+# ---------------------------------------------------------------------- #
+# Frontend pipelines vs pandas (1 device: full planner/executor runs)
+# ---------------------------------------------------------------------- #
+def test_string_filter_vs_pandas(env, rng):
+    data = _sdata(rng)
+    df = rdf.read_numpy(data)
+    p = pd.DataFrame(data)
+    for e, mask in [
+        (df.s == "oak", p.s == "oak"),
+        (df.s != "oak", p.s != "oak"),
+        (df.s < "elm", p.s < "elm"),
+        (df.s >= "cedar", p.s >= "cedar"),
+        (df.s <= "frost", p.s <= "frost"),      # literal not in the pool
+        ((df.s > "birch") & (df.v > 4), (p.s > "birch") & (p.v > 4)),
+    ]:
+        _assert_same(df[e].to_numpy(),
+                     {c: p[c][mask].to_numpy() for c in p}, ["s", "v"])
+
+
+def test_string_groupby_vs_pandas(env, rng):
+    data = _sdata(rng)
+    out = (rdf.read_numpy(data).groupby("s")
+           .agg({"v": ["sum", "mean", "count"]}).to_numpy())
+    want = (pd.DataFrame(data).groupby("s")
+            .agg(v_sum=("v", "sum"), v_mean=("v", "mean"),
+                 v_count=("v", "count")).reset_index())
+    _assert_same(out, {c: want[c].to_numpy() for c in want}, ["s"])
+
+
+def test_groupby_string_min_max_vs_pandas(env, rng):
+    # min/max of codes == lexicographic min/max of strings
+    data = _sdata(rng)
+    out = (rdf.read_numpy(data).groupby("v")
+           .agg({"s": ["min", "max"]}).to_numpy())
+    want = (pd.DataFrame(data).groupby("v")
+            .agg(s_min=("s", "min"), s_max=("s", "max")).reset_index())
+    _assert_same(out, {c: want[c].to_numpy() for c in want}, ["v"])
+
+
+def test_string_sort_vs_pandas(env, rng):
+    data = _sdata(rng)
+    out = rdf.read_numpy(data).sort_values("s").to_numpy()
+    np.testing.assert_array_equal(out["s"], np.sort(data["s"]))
+
+
+def test_merge_same_dictionary_no_recode(env, rng):
+    ld = _sdata(rng)
+    rd = {"s": ld["s"].copy(), "w": rng.integers(0, 9, 128).astype(np.float32)}
+    dl, dr = rdf.read_numpy(ld, name="l"), rdf.read_numpy(rd, name="r")
+    m = dl.merge(dr, on="s", out_capacity=65536)
+    assert "recode[" not in m.explain()
+    want = pd.DataFrame(ld).merge(pd.DataFrame(rd), on="s")
+    _assert_same(m.to_numpy(), {c: want[c].to_numpy() for c in want},
+                 ["s", "v", "w"])
+
+
+def test_merge_dictionary_mismatch_recodes(env, rng):
+    ld = _sdata(rng, pool=POOL[:5])
+    rd = {"s": rng.choice(np.asarray(POOL[3:]), 128),
+          "w": rng.integers(0, 9, 128).astype(np.float32)}
+    dl, dr = rdf.read_numpy(ld, name="l"), rdf.read_numpy(rd, name="r")
+    m = dl.merge(dr, on="s", out_capacity=65536)
+    text = m.explain()
+    assert "recode[s:|D|=8]" in text
+    assert "recode: join(s)" in text
+    want = pd.DataFrame(ld).merge(pd.DataFrame(rd), on="s")
+    _assert_same(m.to_numpy(), {c: want[c].to_numpy() for c in want},
+                 ["s", "v", "w"])
+    # the result dictionary is the merged (sorted-union) one
+    assert m.collect().dictionaries["s"] == tuple(sorted(set(POOL)))
+
+
+def test_stale_compiled_plan_rejects_different_dictionaries(env, rng):
+    # recode tables + lowered literals are baked in at compile time; a
+    # fingerprint-cached plan must not run against tables whose
+    # dictionaries changed (it would decode fabricated strings)
+    from repro.core import Plan
+    from repro.planner import compile_plan, run_physical
+    t1 = DistTable.from_numpy(
+        {"s": np.asarray(["ash", "oak"]), "v": np.asarray([1, 2], np.int32)}, 1)
+    t2 = DistTable.from_numpy(
+        {"s": np.asarray(["elm", "yew"]), "v": np.asarray([1, 2], np.int32)}, 1)
+    plan = Plan.scan("t").sort(["s"])
+    pplan = compile_plan(plan, {"t": t1})
+    out = run_physical(pplan, env, {"t": t1})        # matching: fine
+    assert list(out.to_numpy()["s"]) == ["ash", "oak"]
+    with pytest.raises(ValueError, match="differ from the ones this plan"):
+        run_physical(pplan, env, {"t": t2})
+    with pytest.raises(ValueError, match="differ from the ones this plan"):
+        from repro.planner import run_morsel
+        run_morsel(pplan, env, {"t": t2}, morsel_rows=8)
+
+
+def test_compile_plan_does_not_mutate_logical_dag(env, rng):
+    # recompiling a caller-held LogicalNode DAG against different
+    # dictionaries must not reuse run-1 recode tables / lowered literals
+    from repro.core import Plan
+    from repro.planner import compile_plan, from_plan, run_physical
+    mk = lambda ks: DistTable.from_numpy(
+        {"s": np.asarray(ks), "v": np.arange(len(ks), dtype=np.int32)}, 1)
+    plan = Plan.scan("l").join(Plan.scan("r"), on="s")
+    t1 = {"l": mk(["ash", "oak"]), "r": mk(["elm", "oak"])}
+    t2 = {"l": mk(["m", "p"]), "r": mk(["o", "p"])}
+    node = from_plan(plan.node, {k: (("s", "v"), 2.0) for k in t1})
+    compile_plan(node, t1)
+    out = run_physical(compile_plan(node, t2), CylonEnv(), t2)
+    assert list(out.to_numpy()["s"]) == ["p"]
+
+
+def test_merge_string_key_vs_numeric_key_raises(env, rng):
+    ld = _sdata(rng)
+    rd = {"s": rng.integers(0, 8, 128).astype(np.int32),
+          "w": rng.integers(0, 9, 128).astype(np.float32)}
+    dl, dr = rdf.read_numpy(ld, name="l"), rdf.read_numpy(rd, name="r")
+    with pytest.raises(TypeError, match="numeric key"):
+        dl.merge(dr, on="s").collect()
+
+
+def test_assign_string_passthrough_and_literal(env, rng):
+    data = _sdata(rng)
+    df = rdf.read_numpy(data).assign(s2=col("s"), tag=lit("hi"))
+    out = df.to_numpy()
+    np.testing.assert_array_equal(out["s2"], data["s"])
+    assert set(out["tag"]) == {"hi"}
+
+
+def test_string_arithmetic_raises_clearly(env, rng):
+    df = rdf.read_numpy(_sdata(rng))
+    with pytest.raises(TypeError, match="arithmetic"):
+        df.assign(bad=df.s + 1).collect()
+    with pytest.raises(TypeError, match="numeric value"):
+        df[df.s > 3].collect()
+    with pytest.raises(TypeError, match="not defined on the"):
+        df.groupby("v").agg({"s": "sum"}).collect()
+
+
+def test_out_of_core_string_pipeline_bit_identical(env, rng):
+    data = _sdata(rng, n=256)
+    pipe_args = dict(name="t")
+    incore = (rdf.read_numpy(data, **pipe_args)
+              [col("s") != "oak"]
+              .groupby("s").agg({"v": ["sum", "count"]})
+              .sort_values("s"))
+    ref = incore.to_numpy()
+    spill_df = rdf.read_numpy(data, spill=True, chunk_rows=32, **pipe_args)
+    ooc = (spill_df[col("s") != "oak"]
+           .groupby("s").agg({"v": ["sum", "count"]})
+           .sort_values("s"))
+    got, stats = ooc.collect(morsel_rows=32, collect_stats=True)
+    assert stats.rows_dropped == 0
+    raw = got.to_numpy()
+    for c in ref:
+        np.testing.assert_array_equal(ref[c], raw[c], err_msg=c)
+
+
+# ---------------------------------------------------------------------- #
+# EXPLAIN golden: the annotated example in docs/planner.md
+# ---------------------------------------------------------------------- #
+GOLDEN_RECODE = """\
+== physical plan: 2 stages, 2 shuffles, mode=bsp, shuffle=radix/c1, fingerprint=54546f12dedd ==
+stage 0:
+  scan[l]                                      rows~      512  part=none         cols=k,v
+  recode[k:|D|=6]                              rows~      512  part=none         cols=k,v
+  filter[k < 4]                                rows~      256  part=none         cols=k,v
+  scan[r]                                      rows~      512  part=none         cols=k,w
+  recode[k:|D|=6]                              rows~      512  part=none         cols=k,w
+  project[k]                                   rows~      512  part=none         cols=k
+  join[on=k]                                   rows~      512  part=hash(k)      cols=k,v
+stage 1:
+  groupby[k; v:sum] (shuffle-elided)           rows~      460  part=hash(k)      cols=k,v_sum
+rules fired:
+  - recode: join(k) left input remapped onto the merged dictionary (|4| -> |6|)
+  - recode: join(k) right input remapped onto the merged dictionary (|4| -> |6|)
+  - shuffle-elision: groupby(k) runs local-only — input already hash(k)
+  - predicate-pushdown: filter on (k) moved into join left input
+  - projection-pushdown: drop [w] before join
+  - projection-pushdown: drop [w] before groupby"""
+
+
+def golden_recode_plan():
+    """The docs/planner.md EXPLAIN example (keep the two in sync)."""
+    from repro.core import Plan
+    left = Plan.scan("l").join(Plan.scan("r"), on="k")
+    return (left.filter(col("k") < "fir")
+            .groupby(["k"], {"v": ["sum"]}))
+
+
+GOLDEN_CAT = {
+    "l": (("k", "v"), 512, {"k": ("ash", "birch", "cedar", "elm")}),
+    "r": (("k", "w"), 512, {"k": ("cedar", "elm", "fir", "oak")}),
+}
+
+
+def test_explain_golden_recode():
+    assert golden_recode_plan().explain(GOLDEN_CAT) == GOLDEN_RECODE
+
+
+# ---------------------------------------------------------------------- #
+# Hypothesis: random string pools vs pandas
+# ---------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    _words = st.text(alphabet="abcdef", min_size=0, max_size=5)
+    _pools = st.lists(_words, min_size=1, max_size=12, unique=True)
+
+    @st.composite
+    def string_tables(draw, value_col="v"):
+        pool = draw(_pools)
+        n = draw(st.integers(1, 48))
+        idx = draw(st.lists(st.integers(0, len(pool) - 1),
+                            min_size=n, max_size=n))
+        vals = draw(st.lists(st.integers(0, 9), min_size=n, max_size=n))
+        return {"s": np.asarray([pool[i] for i in idx]),
+                value_col: np.asarray(vals, np.float32)}
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(data=string_tables())
+    def test_hypothesis_groupby_random_pools(env, data):
+        out = (rdf.read_numpy(data).groupby("s")
+               .agg({"v": ["sum", "count"]}).to_numpy())
+        want = (pd.DataFrame(data).groupby("s")
+                .agg(v_sum=("v", "sum"), v_count=("v", "count"))
+                .reset_index())
+        _assert_same(out, {c: want[c].to_numpy() for c in want}, ["s"])
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(ld=string_tables(), rd=string_tables(value_col="w"))
+    def test_hypothesis_merge_random_pools_forces_recode(env, ld, rd):
+        dl = rdf.from_table(DistTable.from_numpy(dict(ld), 1), name="l")
+        dr = rdf.from_table(DistTable.from_numpy(dict(rd), 1), name="r")
+        m = dl.merge(dr, on="s", out_capacity=8192)
+        want = pd.DataFrame(ld).merge(pd.DataFrame(rd), on="s")
+        _assert_same(m.to_numpy(), {c: want[c].to_numpy() for c in want},
+                     ["s", "v", "w"])
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(data=string_tables(), pivot=_words)
+    def test_hypothesis_ordering_vs_pandas(env, data, pivot):
+        df = rdf.read_numpy(data)
+        p = pd.DataFrame(data)
+        for e, mask in [(df.s < pivot, p.s < pivot),
+                        (df.s >= pivot, p.s >= pivot),
+                        (df.s == pivot, p.s == pivot)]:
+            _assert_same(df[e].to_numpy(),
+                         {c: p[c][mask].to_numpy() for c in p}, ["s", "v"])
