@@ -77,7 +77,11 @@ def run(global_rows: int = 100_000) -> None:
                        rows_shuffled=stats.rows_shuffled,
                        bytes_shuffled=stats.bytes_shuffled,
                        shuffle_impl=stats.shuffle_impl,
-                       a2a_chunks=stats.a2a_chunks)
+                       a2a_chunks=stats.a2a_chunks,
+                       # first (compiling) run: per-stage attribution
+                       wall_time_s=round(stats.wall_time_s, 6),
+                       stage_times=[(n, round(t, 6))
+                                    for n, t in stats.stage_times])
         record("pipeline(Fig9)", f"speedup_bsp_over_amt_p{p}",
                times["amt_unopt"] / times["bsp_unopt"], parallelism=p,
                note="ratio not seconds")
@@ -167,11 +171,15 @@ def run_oversub(global_rows: int = 100_000, oversub: int = 8,
 
     t_ooc = time_fn(do_ooc, warmup=1, iters=3)
     record("pipeline(Fig9-ooc)", f"in_core_p{p}", t_ref, parallelism=p,
-           rows=global_rows, rows_dropped=ref_stats.rows_dropped)
+           rows=global_rows, rows_dropped=ref_stats.rows_dropped,
+           wall_time_s=round(ref_stats.wall_time_s, 6))
     record("pipeline(Fig9-ooc)", f"oversub{oversub}_p{p}", t_ooc,
            parallelism=p, rows=global_rows, oversub=oversub,
            morsel_rows=ooc_stats.morsel_rows, morsels=ooc_stats.morsels,
            dispatches=ooc_stats.dispatches,
+           wall_time_s=round(ooc_stats.wall_time_s, 6),
+           stage_times=[(n, round(t, 6))
+                        for n, t in ooc_stats.stage_times],
            spill_bytes=ooc_stats.spill_bytes,
            h2d_bytes=ooc_stats.h2d_bytes, d2h_bytes=ooc_stats.d2h_bytes,
            rows_shuffled=ooc_stats.rows_shuffled,

@@ -86,8 +86,13 @@ def dump_csv(path: Optional[str] = None) -> str:
     keys = ["bench", "case", "seconds"]
     extra_keys = sorted({k for r in RESULTS for k in r} - set(keys))
     lines = [",".join(keys + extra_keys)]
+
+    def cell(v) -> str:  # quote compound values (e.g. stage_times lists)
+        s = str(v)
+        return '"' + s.replace('"', '""') + '"' if "," in s else s
+
     for r in RESULTS:
-        lines.append(",".join(str(r.get(k, "")) for k in keys + extra_keys))
+        lines.append(",".join(cell(r.get(k, "")) for k in keys + extra_keys))
     out = "\n".join(lines)
     if path:
         with open(path, "w") as f:

@@ -62,17 +62,23 @@ def main() -> None:
         "moe_shuffle": bench_moe_shuffle.run,
     }
     t0 = time.time()
+    suite_seconds = {}
     for name, fn in suites.items():
         if args.only and args.only not in name:
             continue
         print(f"\n=== {name} ===", flush=True)
+        ts = time.time()
         fn()
-    print(f"\n{len(RESULTS)} results in {time.time() - t0:.1f}s")
+        suite_seconds[name] = round(time.time() - ts, 3)
+    total = time.time() - t0
+    print(f"\n{len(RESULTS)} results in {total:.1f}s")
     dump_csv(args.csv)
     print(f"csv -> {args.csv}")
     scale_tag = "smoke" if args.smoke else "quick" if args.quick else "full"
     json_path = args.json or f"BENCH_{scale_tag}.json"
-    dump_json(json_path, meta={"scale": scale_tag, "only": args.only})
+    dump_json(json_path, meta={"scale": scale_tag, "only": args.only,
+                               "suite_seconds": suite_seconds,
+                               "total_seconds": round(total, 3)})
     print(f"json -> {json_path}")
 
 

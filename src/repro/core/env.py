@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 from .. import compat
 from ..comm import Communicator, get_communicator
 from ..dataframe.table import Table
+from ..obs.trace import NULL_TRACER
 
 AXIS = "df"  # default dataframe axis name
 
@@ -132,7 +133,7 @@ class MorselSource:
 
     def __init__(self, source, morsel_rows: int,
                  env: Optional["CylonEnv"] = None,
-                 parallelism: Optional[int] = None):
+                 parallelism: Optional[int] = None, tracer=None):
         from .store import SpillTable  # deferred: store imports env
         if isinstance(source, DistTable):
             source = SpillTable.from_dist(source)
@@ -151,10 +152,12 @@ class MorselSource:
         self._rank_cols = [source.rank_concat(r)
                            for r in range(self.parallelism)]
         self._names = source.column_names
+        self._tracer = tracer if tracer is not None else NULL_TRACER
 
     def _build(self, m: int) -> Optional[DistTable]:
         if m >= self.num_morsels:
             return None
+        b0 = self.h2d_bytes
         p, cap = self.parallelism, self.capacity
         lo, hi = m * cap, (m + 1) * cap
         counts = np.zeros((p,), np.int32)
@@ -169,6 +172,8 @@ class MorselSource:
             self.h2d_bytes += buf.nbytes
             cols[name] = jnp.asarray(buf.reshape((p * cap,) + ref.shape[1:]))
         self.h2d_bytes += counts.nbytes
+        self._tracer.instant(f"h2d:morsel[{m}]", "transfer", morsel=m,
+                             bytes=self.h2d_bytes - b0)
         return DistTable(cols, jnp.asarray(counts), cap,
                          dict(self.spill.dictionaries))
 

@@ -171,7 +171,8 @@ class Plan:
 def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
             optimize: bool = True, collect_stats: bool = False,
             shuffle_impl: str = "radix", a2a_chunks: int = 1,
-            morsel_rows: Optional[int] = None, **morsel_kw):
+            morsel_rows: Optional[int] = None, trace: Any = None,
+            **morsel_kw):
     """Execute a plan against DistTables.  Returns a DistTable, or
     ``(DistTable, planner.ExecStats)`` with ``collect_stats=True``.
 
@@ -192,9 +193,26 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
     ``morsel_rows``-row morsels; the result is a ``SpillTable`` (see
     ``docs/out_of_core.md``).  Extra ``morsel_kw`` (``capacity_factor``,
     ``samples``, ``debug_overflow``) are forwarded to the morsel executor.
+
+    ``trace`` turns on query tracing (``docs/observability.md``): ``True``
+    builds a fresh ``repro.obs.Tracer``, an existing ``Tracer`` is used
+    as-is, and ``None`` consults the ``REPRO_TRACE`` env var.  The finished
+    ``QueryTrace`` is retrievable via ``repro.obs.last_trace()`` (or from
+    the tracer you passed).  Tracing is driver-side only — it never changes
+    what gets compiled.
     """
+    from ..obs.trace import resolve_tracer
     from ..planner import compile_plan, run_physical
+    tracer = resolve_tracer(trace)
     pplan = compile_plan(plan, tables, optimize_plan=optimize)
-    return run_physical(pplan, env, tables, mode, collect_stats=collect_stats,
-                        shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
-                        morsel_rows=morsel_rows, **morsel_kw)
+    with tracer.span("query", "query", mode=mode,
+                     fingerprint=pplan.fingerprint,
+                     stages=pplan.num_stages, shuffles=pplan.num_shuffles):
+        out = run_physical(pplan, env, tables, mode,
+                           collect_stats=collect_stats,
+                           shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
+                           morsel_rows=morsel_rows, tracer=tracer,
+                           **morsel_kw)
+    if tracer.enabled:
+        tracer.finish()
+    return out

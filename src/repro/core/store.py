@@ -29,6 +29,7 @@ from typing import Dict, List, Mapping, Optional, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.trace import NULL_TRACER
 from .env import DistTable
 
 
@@ -215,18 +216,22 @@ def _route_chunks(spill: SpillTable, parallelism: int
     return buckets
 
 
-def respill(spill: SpillTable, parallelism: int) -> SpillTable:
+def respill(spill: SpillTable, parallelism: int,
+            tracer=NULL_TRACER) -> SpillTable:
     """Re-bucket a SpillTable to a different gang size, chunk by chunk.
 
     Host-only (no device materialization — the spill may not fit a
-    ``DistTable``)."""
+    ``DistTable``).  ``tracer`` records a span with rows/bytes moved."""
     if parallelism == spill.parallelism:
         return spill
-    out = SpillTable(parallelism, schema=spill.schema or None,
-                     dictionaries=spill.dictionaries)
-    for dest, pieces in enumerate(_route_chunks(spill, parallelism)):
-        for piece in pieces:
-            out.append(dest, piece)
+    with tracer.span("respill", "spill", from_p=spill.parallelism,
+                     to_p=parallelism, rows=spill.total_rows(),
+                     bytes=spill.nbytes()):
+        out = SpillTable(parallelism, schema=spill.schema or None,
+                         dictionaries=spill.dictionaries)
+        for dest, pieces in enumerate(_route_chunks(spill, parallelism)):
+            for piece in pieces:
+                out.append(dest, piece)
     return out
 
 
@@ -234,14 +239,18 @@ def respill(spill: SpillTable, parallelism: int) -> SpillTable:
 # Bucketed rescatter (replaces the host-gather repartition)
 # ---------------------------------------------------------------------- #
 def rescatter(spill: SpillTable, parallelism: int,
-              capacity: Optional[int] = None) -> DistTable:
+              capacity: Optional[int] = None,
+              tracer=NULL_TRACER) -> DistTable:
     """SpillTable -> DistTable over a (possibly different) gang size.
 
     Rows are routed chunk-by-chunk into per-destination host buckets by
     their global block index — no rank's data is ever concatenated into a
     single full-table host array, so peak extra host memory is one
-    destination shard, not the whole table.
+    destination shard, not the whole table.  ``tracer`` records the H2D
+    volume as an instant event.
     """
+    tracer.instant("rescatter", "transfer", to_p=parallelism,
+                   rows=spill.total_rows(), bytes=spill.nbytes())
     n = spill.total_rows()
     per = -(-max(n, 1) // parallelism)
     cap = capacity if capacity is not None else _round8(per)

@@ -109,14 +109,16 @@ def _unpack_u32(buf: jax.Array, names, dtypes) -> Dict[str, jax.Array]:
     return out
 
 
-def _overflow_warn(send_dropped, recv_dropped):
+def _overflow_warn(rank, send_dropped, recv_dropped, label=""):
     """Host-side overflow check (``debug_overflow=True``): warn, don't drop
-    silently.  Runs as a debug callback so it works under jit/shard_map."""
+    silently — and say *which* op and rank overflowed.  Runs as a debug
+    callback so it works under jit/shard_map (one callback per rank)."""
     import warnings
     sd, rd = int(send_dropped), int(recv_dropped)
     if sd or rd:
+        where = f"{label or 'shuffle'} @ rank {int(rank)}"
         warnings.warn(
-            f"shuffle dropped rows: send_dropped={sd} recv_dropped={rd} "
+            f"{where} dropped rows: send_dropped={sd} recv_dropped={rd} "
             f"(raise bucket_capacity / out_capacity or capacity_factor)",
             RuntimeWarning, stacklevel=2)
 
@@ -133,6 +135,7 @@ def shuffle(
     impl: str = "radix",
     a2a_chunks: int = 1,
     debug_overflow: bool = False,
+    label: str = "",
 ) -> Tuple[Table, ShuffleStats]:
     """Repartition rows across the comm axis by key hash or explicit dest.
 
@@ -141,6 +144,8 @@ def shuffle(
     docstring); ``a2a_chunks`` splits the data collective into k pipelined
     pieces; ``debug_overflow`` emits a host-side warning whenever capacity
     pressure drops rows (they are always *counted* in the stats).
+    ``label`` is a static plan-level tag (e.g. ``"join(k):left"``) used only
+    to attribute overflow warnings — it never affects the computation.
     """
     if impl not in ("radix", "sorted"):
         raise ValueError(f"unknown shuffle impl {impl!r}")
@@ -241,7 +246,8 @@ def shuffle(
 
     recv_dropped = jnp.maximum(total_recv - out_cap, 0)
     if debug_overflow:
-        jax.debug.callback(_overflow_warn, send_dropped, recv_dropped)
+        jax.debug.callback(_overflow_warn, comm.rank(), send_dropped,
+                           recv_dropped, label=label)
 
     out = Table(out_cols, new_count).mask_padding()
     stats = ShuffleStats(sent_counts, recv_counts, send_dropped,

@@ -201,10 +201,18 @@ class DataFrame:
     # ------------------------------------------------------------------ #
     def collect(self, env: Optional[CylonEnv] = None, mode: str = "bsp",
                 optimize: bool = True, collect_stats: bool = False,
-                morsel_rows: Optional[int] = None, **kw):
+                morsel_rows: Optional[int] = None, analyze: bool = False,
+                trace: Any = None, **kw):
         """Run the accumulated plan; returns a ``DistTable`` (or a
         host-resident ``SpillTable`` with ``morsel_rows=``, and a
         ``(result, ExecStats)`` pair with ``collect_stats=True``).
+
+        ``analyze=True`` returns ``(result, obs.QueryReport)`` instead: the
+        EXPLAIN tree annotated with measured per-node rows/bytes/times, a
+        per-stage roofline table, and (when tracing is on, the default under
+        analyze) a Chrome-exportable ``QueryTrace``.  ``trace`` alone turns
+        on query tracing for a plain collect (``repro.obs.last_trace()``
+        retrieves the timeline).  See ``docs/observability.md``.
 
         ``env`` resolution: explicit argument > the env the data was
         ingested for (``read_numpy(env=...)``) > the active session env
@@ -226,9 +234,17 @@ class DataFrame:
                         f"{t.parallelism} ranks but the resolved env has "
                         f"{env.parallelism}; pass collect(env=<ingest "
                         f"env>) or re-ingest under this session")
+        if analyze:
+            from ..obs.analyze import run_analyzed
+            if collect_stats:
+                raise TypeError("analyze=True already collects stats; drop "
+                                "collect_stats")
+            return run_analyzed(self.plan, env, self.sources, mode=mode,
+                                optimize=optimize, morsel_rows=morsel_rows,
+                                trace=True if trace is None else trace, **kw)
         return execute(self.plan, env, self.sources, mode=mode,
                        optimize=optimize, collect_stats=collect_stats,
-                       morsel_rows=morsel_rows, **kw)
+                       morsel_rows=morsel_rows, trace=trace, **kw)
 
     def to_numpy(self, **kw) -> Dict[str, np.ndarray]:
         """``collect`` + gather valid rows to host numpy columns."""
@@ -242,6 +258,17 @@ class DataFrame:
     def explain(self, **kw) -> str:
         """EXPLAIN the optimized plan (stages, partitioning, fired rules)."""
         return self.plan.explain(self.sources, **kw)
+
+    def explain_analyze(self, env: Optional[CylonEnv] = None,
+                        mode: str = "bsp_staged", **kw) -> str:
+        """Execute the plan and render the EXPLAIN tree annotated with
+        measured per-node rows/bytes and per-stage times, plus the
+        per-stage roofline table.  Defaults to ``bsp_staged`` (one dispatch
+        per stage) so stage times are exactly attributable.  Same knobs as
+        ``collect``; the full ``QueryReport`` (Chrome trace, JSON export)
+        comes from ``collect(analyze=True)``."""
+        _, report = self.collect(env=env, mode=mode, analyze=True, **kw)
+        return str(report)
 
     def num_stages(self) -> int:
         return self.plan.num_stages()

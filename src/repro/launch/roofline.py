@@ -143,6 +143,34 @@ def roofline_terms(per_device_flops: float, per_device_bytes: float,
     return terms
 
 
+def stage_roofline(wire_bytes: float, elapsed_s: Optional[float],
+                   parallelism: int,
+                   hbm_bytes: Optional[float] = None) -> Dict[str, float]:
+    """Roofline terms for one *measured* query stage (``repro.obs``).
+
+    ``wire_bytes`` is the stage's global shuffle volume (from
+    ``ExecStats.shuffle_records``); ``hbm_bytes`` defaults to 2x wire (every
+    shuffled byte is packed on the send side and unpacked on the receive
+    side — a lower bound, ignoring the local operator work).  FLOPs are
+    unknown for dataframe ops, so the compute term is 0 and the bound is
+    memory/collective-only.  ``roofline_fraction`` compares that lower
+    bound to the measured stage time: 1.0 means the stage ran at the
+    modeled bandwidth limit, small values mean overhead (dispatch, compile,
+    driver round-trips) dominates.
+    """
+    p = max(1, int(parallelism))
+    wire_dev = float(wire_bytes) / p
+    hbm_total = 2.0 * float(wire_bytes) if hbm_bytes is None else float(hbm_bytes)
+    terms = roofline_terms(0.0, hbm_total / p, wire_dev)
+    terms["wire_bytes"] = float(wire_bytes)
+    terms["hbm_bytes"] = hbm_total
+    terms["elapsed_s"] = float(elapsed_s) if elapsed_s is not None else None
+    terms["roofline_fraction"] = (
+        terms["step_s_lower_bound"] / float(elapsed_s)
+        if elapsed_s else 0.0)
+    return terms
+
+
 def analyze(cell_result: Dict[str, Any], cfg, chips: int) -> Dict[str, Any]:
     """Attach roofline terms to one dry-run cell result dict."""
     ca = cell_result["cost_analysis"]

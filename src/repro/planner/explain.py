@@ -60,6 +60,11 @@ def _label(n: LogicalNode) -> str:
     return n.op
 
 
+#: public alias — EXPLAIN ANALYZE (``repro.obs.analyze``) renders the same
+#: per-node labels with measured actuals appended
+node_label = _label
+
+
 def render(pplan: PhysicalPlan, mode: str = "bsp",
            shuffle_impl: str = "radix", a2a_chunks: int = 1,
            morsel_rows: Optional[int] = None) -> str:

@@ -47,9 +47,11 @@ raises a ``RuntimeWarning`` and reports ``ExecStats.rows_dropped`` — raise
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -61,10 +63,14 @@ from ..dataframe.groupby import (_normalize, combine_groupby_partials,
 from ..dataframe.ops_local import hash_columns_np
 from ..dataframe.shuffle import shuffle as df_shuffle
 from ..dataframe.table import Table
+from ..obs.metrics import record_exec
+from ..obs.trace import NULL_TRACER
 from .logical import LogicalNode, topo
 from .physical import (ExecStats, PhysicalPlan, _row_bytes, _shuffle_kw,
                        _stat_vec, _sum_stats, _token, attach_dictionaries,
-                       check_scan_dictionaries, eval_node, fingerprint)
+                       build_shuffle_records, check_scan_dictionaries,
+                       describe_drops, emit_shuffle_events, eval_node,
+                       fingerprint, pair_stat_labels, plan_stat_labels)
 
 
 @dataclasses.dataclass
@@ -288,10 +294,10 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
     kw = _morsel_shuffle_kw(node, W, shuffle_impl, a2a_chunks, debug_overflow)
 
     if node.op == "shuffle":
+        lbl = f"shuffle({','.join(p_['key_cols'])})"
         out, st = df_shuffle(cur, ctx.comm, key_cols=p_["key_cols"],
-                             out_capacity=W, **kw)
-        stats_out.append((f"shuffle({','.join(p_['key_cols'])})",
-                          _stat_vec(st, _row_bytes(cur))))
+                             out_capacity=W, label=lbl, **kw)
+        stats_out.append((lbl, _stat_vec(st, _row_bytes(cur))))
         return out
 
     if node.op == "join":
@@ -299,7 +305,7 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
         l, r = cur, residents[node.nid]
         if not p_.get("elide_left"):
             l, st = df_shuffle(l, ctx.comm, key_cols=[on], out_capacity=W,
-                               **kw)
+                               label=f"join({on}):left", **kw)
             stats_out.append((f"join({on}):left",
                               _stat_vec(st, _row_bytes(cur))))
         out_cap = p_.get("morsel_out_capacity") or W
@@ -316,7 +322,8 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
         out, st = groupby_partial(cur, ctx.comm, keys, physical,
                                   pre_aggregate=pre,
                                   elide_shuffle=bool(p_.get("elide_shuffle")),
-                                  out_capacity=W, **kw)
+                                  out_capacity=W,
+                                  label=f"groupby({','.join(keys)})", **kw)
         if st is not None:
             stats_out.append(
                 (f"groupby({','.join(keys)})",
@@ -324,6 +331,24 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
         return out
 
     raise ValueError(f"op {node.op!r} cannot run in a morsel segment")
+
+
+def _seg_stat_labels(seg_nodes: Sequence[LogicalNode]) -> List[str]:
+    """Driver-side stat labels for one stream segment, in the exact order
+    ``_eval_stream_node`` appends them (the compiled program returns bare
+    arrays; attribution is reconstructed from the static plan)."""
+    labels: List[str] = []
+    for n in seg_nodes:
+        p_ = n.params
+        if n.op == "shuffle":
+            labels.append(f"shuffle({','.join(p_['key_cols'])})")
+        elif n.op == "join":
+            if not p_.get("elide_left"):
+                labels.append(f"join({p_['on']}):left")
+            labels.append(f"join({p_['on']}):overflow")
+        elif n.op == "groupby" and not p_.get("elide_shuffle"):
+            labels.append(f"groupby({','.join(p_['keys'])})")
+    return labels
 
 
 # ---------------------------------------------------------------------- #
@@ -356,7 +381,8 @@ def _make_sort_prog(node, W, shuffle_impl, a2a_chunks, debug_overflow):
         dest = jnp.searchsorted(splitters, key,
                                 side="right").astype(jnp.int32)
         shuffled, st = df_shuffle(morsel, ctx.comm, dest=dest,
-                                  out_capacity=W, **kw)
+                                  out_capacity=W,
+                                  label=f"sort({','.join(by)})", **kw)
         return shuffled, (_stat_vec(st, _row_bytes(morsel)),)
     return prog
 
@@ -366,7 +392,7 @@ def _make_sort_prog(node, W, shuffle_impl, a2a_chunks, debug_overflow):
 # ---------------------------------------------------------------------- #
 def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
                     a2a_chunks, collected, acc: _Acc,
-                    capacity_factor: float) -> DistTable:
+                    capacity_factor: float, tracer=NULL_TRACER) -> DistTable:
     rroot = jnode.inputs[1]
     sub_order = topo(rroot)
     scan_names = [s.params["name"] for s in sub_order if s.op == "scan"]
@@ -396,21 +422,30 @@ def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
                            _round8(int(r.capacity * capacity_factor)))
             jkw.setdefault("bucket_capacity",
                            _round8(int(r.capacity * capacity_factor)))
-            r, st = df_shuffle(r, ctx.comm, key_cols=[on], **jkw)
+            r, st = df_shuffle(r, ctx.comm, key_cols=[on],
+                               label=f"join({on}):right", **jkw)
             stats.append((f"join({on}):right", _stat_vec(st, width)))
         return r, tuple(a for _, a in stats)
 
     args = [_to_dist(tables[n], env.parallelism) for n in scan_names]
-    resident, stats = env.run(
-        prog, *args,
-        key=("morsel-resident", fingerprint(rroot),
-             # the subtree fingerprint does not cover the join node's own
-             # params (shuffle kwargs, capacities)
-             _token(dict(jnode.params)),
-             env.communicator_name, shuffle_impl, a2a_chunks,
-             capacity_factor, tuple(env._arg_sig(a) for a in args)))
-    acc.dispatches += 1
-    collected.extend(stats)
+    labels = plan_stat_labels(sub_order)
+    if not elide:
+        labels.append(f"join({on}):right")
+    with tracer.span(f"build:join({on})", "stage", ops="resident-build"):
+        resident, stats = env.run(
+            prog, *args,
+            key=("morsel-resident", fingerprint(rroot),
+                 # the subtree fingerprint does not cover the join node's own
+                 # params (shuffle kwargs, capacities)
+                 _token(dict(jnode.params)),
+                 env.communicator_name, shuffle_impl, a2a_chunks,
+                 capacity_factor, tuple(env._arg_sig(a) for a in args)))
+        acc.dispatches += 1
+        pairs = pair_stat_labels(labels, stats)
+        collected.extend(pairs)
+        if tracer.enabled:
+            jax.block_until_ready(resident.row_counts)
+            emit_shuffle_events(tracer, pairs, a2a_chunks)
     return resident
 
 
@@ -485,18 +520,24 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                morsel_rows: int, mode: str = "bsp",
                collect_stats: bool = False, shuffle_impl: str = "radix",
                a2a_chunks: int = 1, capacity_factor: float = 2.0,
-               samples: int = 64, debug_overflow: bool = False):
+               samples: int = 64, debug_overflow: bool = False,
+               tracer=None):
     """Stream a plan over morsels of ``morsel_rows`` rows per rank.
 
     Returns a host-resident ``SpillTable`` (or ``(SpillTable, ExecStats)``
     with ``collect_stats=True``).  Device memory is bounded by the working
     capacity ``W = capacity_factor * morsel_rows`` plus resident build
     sides, independent of the streamed input size.
+
+    ``tracer`` (``repro.obs.Tracer``) records build/segment/combine spans,
+    per-morsel dispatch spans with spill-append volumes, and per-shuffle
+    data events — driver-side only, never part of a compile-cache key.
     """
     if mode == "amt":
         raise ValueError(
             "out-of-core morsel execution requires direct shuffles; the "
             "amt allgather baseline is inherently in-core")
+    tr = tracer if tracer is not None else NULL_TRACER
     p = env.parallelism
     chain = spine(pplan)
     src_name = chain[0].params["name"]
@@ -507,63 +548,98 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     W = max(M, _round8(int(M * capacity_factor)))
     fp = pplan.fingerprint
     acc = _Acc()
-    collected: List[Any] = []
+    collected: List[Tuple[str, Any]] = []
     hits0, misses0 = env.cache_hits, env.cache_misses
+    timing = collect_stats or tr.enabled
+    stage_times: List[Tuple[str, float]] = []
+    t_query0 = time.perf_counter() if timing else 0.0
 
-    residents = {
-        node.nid: _build_resident(env, node, tables, shuffle_impl,
-                                  a2a_chunks, collected, acc,
-                                  capacity_factor)
-        for node in chain if node.op == "join"}
+    residents: Dict[int, DistTable] = {}
+    for node in chain:
+        if node.op != "join":
+            continue
+        t0 = time.perf_counter() if timing else 0.0
+        residents[node.nid] = _build_resident(
+            env, node, tables, shuffle_impl, a2a_chunks, collected, acc,
+            capacity_factor, tracer=tr)
+        if timing:
+            jax.block_until_ready(residents[node.nid].row_counts)
+            stage_times.append((f"build:join({node.params['on']})",
+                                time.perf_counter() - t0))
 
     spill = _as_spill(tables[src_name], p)
     for si, (nodes, terminal) in enumerate(segments(chain[1:])):
-        if terminal == "sort":
-            node = nodes[0]
-            by = node.params["by"]
-            if node.params.get("elide_shuffle"):
-                # range-partitioned already: no device work, just order
-                spill = _host_sort_ranks(spill, by)
-                continue
-            spl = _host_splitters(spill, by[0], p,
-                                  node.params.get("samples", samples))
-            extras: Tuple[Any, ...] = (jnp.asarray(spl),)
-            acc.h2d_bytes += spl.nbytes
-            prog = _make_sort_prog(node, W, shuffle_impl, a2a_chunks,
-                                   debug_overflow)
-        else:
-            join_nodes = [n for n in nodes if n.op == "join"]
-            extras = tuple(residents[n.nid] for n in join_nodes)
-            prog = _make_stream_prog(nodes, [n.nid for n in join_nodes],
-                                     W, shuffle_impl, a2a_chunks,
-                                     debug_overflow)
-        key = ("morsel-seg", fp, si, M, W, shuffle_impl, a2a_chunks,
-               env.communicator_name, debug_overflow,
-               tuple(env._arg_sig(e) for e in extras))
-        source = MorselSource(spill, M, env)
-        out_spill: Optional[SpillTable] = None
-        for morsel in source:
-            out, unit_stats = env.run(prog, morsel, *extras, key=key)
-            acc.dispatches += 1
-            acc.morsels += 1
-            collected.extend(unit_stats)
-            if out_spill is None:
-                out_spill = SpillTable(p, schema=_schema_of(out))
-            _append_out(out_spill, out, acc)
-        acc.h2d_bytes += source.h2d_bytes
-        spill = out_spill
-        if terminal == "groupby":
-            spill = _combine_groupby(env, spill, nodes[-1], M, acc, fp, si)
-        elif terminal == "sort":
-            spill = _host_sort_ranks(spill, by)
+        t0 = time.perf_counter() if timing else 0.0
+        seg_name = f"segment:{si}:{terminal}"
+        with tr.span(seg_name, "stage",
+                     ops=",".join(n.op for n in nodes)) as seg_sp:
+            if terminal == "sort":
+                node = nodes[0]
+                by = node.params["by"]
+                if node.params.get("elide_shuffle"):
+                    # range-partitioned already: no device work, just order
+                    spill = _host_sort_ranks(spill, by)
+                    if timing:
+                        stage_times.append(
+                            (seg_name, time.perf_counter() - t0))
+                    continue
+                spl = _host_splitters(spill, by[0], p,
+                                      node.params.get("samples", samples))
+                extras: Tuple[Any, ...] = (jnp.asarray(spl),)
+                acc.h2d_bytes += spl.nbytes
+                prog = _make_sort_prog(node, W, shuffle_impl, a2a_chunks,
+                                       debug_overflow)
+                seg_labels = [f"sort({','.join(by)})"]
+            else:
+                join_nodes = [n for n in nodes if n.op == "join"]
+                extras = tuple(residents[n.nid] for n in join_nodes)
+                prog = _make_stream_prog(nodes, [n.nid for n in join_nodes],
+                                         W, shuffle_impl, a2a_chunks,
+                                         debug_overflow)
+                seg_labels = _seg_stat_labels(nodes)
+            key = ("morsel-seg", fp, si, M, W, shuffle_impl, a2a_chunks,
+                   env.communicator_name, debug_overflow,
+                   tuple(env._arg_sig(e) for e in extras))
+            source = MorselSource(spill, M, env, tracer=tr)
+            out_spill: Optional[SpillTable] = None
+            for mi, morsel in enumerate(source):
+                with tr.span(f"morsel[{mi}]", "morsel", segment=si):
+                    out, unit_stats = env.run(prog, morsel, *extras, key=key)
+                    acc.dispatches += 1
+                    acc.morsels += 1
+                    unit_pairs = pair_stat_labels(seg_labels, unit_stats)
+                    collected.extend(unit_pairs)
+                    if out_spill is None:
+                        out_spill = SpillTable(p, schema=_schema_of(out))
+                    b0 = acc.spill_bytes
+                    _append_out(out_spill, out, acc)
+                    tr.instant(f"spill:morsel[{mi}]", "spill", segment=si,
+                               bytes=acc.spill_bytes - b0)
+                    if tr.enabled:
+                        emit_shuffle_events(tr, unit_pairs, a2a_chunks)
+            acc.h2d_bytes += source.h2d_bytes
+            seg_sp.set(morsels=source.num_morsels,
+                       h2d_bytes=source.h2d_bytes)
+            spill = out_spill
+            if terminal == "groupby":
+                with tr.span(f"combine:groupby[{si}]", "stage"):
+                    spill = _combine_groupby(env, spill, nodes[-1], M, acc,
+                                             fp, si)
+            elif terminal == "sort":
+                with tr.span(f"host_sort({','.join(by)})", "stage"):
+                    spill = _host_sort_ranks(spill, by)
+        if timing:
+            stage_times.append((seg_name, time.perf_counter() - t0))
 
     spill = attach_dictionaries(spill, pplan.root)
-    rows, byts, dropped = _sum_stats(collected)
+    rows, byts, dropped = _sum_stats([a for _, a in collected])
+    records = build_shuffle_records(collected)
     if dropped:
+        where = describe_drops(records)
         warnings.warn(
             f"out-of-core execution dropped {dropped} rows to capacity "
-            f"pressure — raise capacity_factor (currently "
-            f"{capacity_factor}) or morsel_rows",
+            f"pressure ({where or 'unattributed'}) — raise capacity_factor "
+            f"(currently {capacity_factor}) or morsel_rows",
             RuntimeWarning, stacklevel=2)
     if not collect_stats:
         return spill
@@ -575,5 +651,8 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         cache_hits=env.cache_hits - hits0,
         cache_misses=env.cache_misses - misses0,
         morsel_rows=M, morsels=acc.morsels, spill_bytes=acc.spill_bytes,
-        h2d_bytes=acc.h2d_bytes, d2h_bytes=acc.d2h_bytes)
+        h2d_bytes=acc.h2d_bytes, d2h_bytes=acc.d2h_bytes,
+        wall_time_s=time.perf_counter() - t_query0,
+        stage_times=stage_times, shuffle_records=records)
+    record_exec(stats, fp, stats.wall_time_s)
     return spill, stats

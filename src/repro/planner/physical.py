@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import math
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -32,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..comm import Communicator
+from ..obs.metrics import record_exec
+from ..obs.trace import NULL_TRACER
 from ..dataframe import ops_local
 from ..expr import token as expr_token
 from ..dataframe.groupby import _normalize, finalize_groupby
@@ -177,6 +180,119 @@ def _stat_vec(st: ShuffleStats, width: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------- #
+# Per-shuffle stat attribution (driver-side labels for the in-program
+# stats triples; the compiled programs return arrays only, so the label
+# sequence is reconstructed from the static plan in dispatch order)
+# ---------------------------------------------------------------------- #
+def node_stat_labels(node: LogicalNode) -> List[str]:
+    """Stat labels ``eval_node`` appends for one node, in append order.
+
+    Mirrors ``eval_node`` exactly: shuffle-executing ops contribute one
+    label per shuffle; joins additionally contribute an ``:overflow``
+    entry (local join output capacity pressure, zero wire bytes)."""
+    p = node.params
+    if node.op == "shuffle":
+        return [f"shuffle({','.join(p['key_cols'])})"]
+    if node.op == "join":
+        labels = []
+        if not p.get("elide_left"):
+            labels.append(f"join({p['on']}):left")
+        if not p.get("elide_right"):
+            labels.append(f"join({p['on']}):right")
+        labels.append(f"join({p['on']}):overflow")
+        return labels
+    if node.op == "groupby" and not p.get("elide_shuffle"):
+        return [f"groupby({','.join(p['keys'])})"]
+    if node.op == "sort" and not p.get("elide_shuffle"):
+        return [f"sort({','.join(p['by'])})"]
+    return []
+
+
+def plan_stat_labels(nodes: Sequence[LogicalNode]) -> List[str]:
+    out: List[str] = []
+    for n in nodes:
+        out.extend(node_stat_labels(n))
+    return out
+
+
+def pair_stat_labels(labels: Sequence[str], arrays: Sequence[Any]
+                     ) -> List[Tuple[str, Any]]:
+    """Zip driver-side labels with the in-program stat arrays; falls back
+    to positional labels on a mismatch rather than mis-attributing."""
+    if len(labels) != len(arrays):
+        labels = [f"stats[{i}]" for i in range(len(arrays))]
+    return list(zip(labels, arrays))
+
+
+@dataclasses.dataclass
+class ShuffleRecord:
+    """Aggregated per-label shuffle accounting with per-rank attribution.
+
+    ``per_rank_rows[r]`` — rows rank ``r`` sent through this shuffle;
+    ``per_rank_dropped[r]`` — rows lost at rank ``r`` (send-bucket or
+    receive/ join-output capacity pressure).  ``:overflow`` labels carry
+    drops only (no wire traffic)."""
+
+    label: str
+    rows: int
+    bytes: int
+    dropped: int
+    per_rank_rows: Tuple[int, ...]
+    per_rank_dropped: Tuple[int, ...]
+
+
+def build_shuffle_records(pairs: Sequence[Tuple[str, Any]]
+                          ) -> List[ShuffleRecord]:
+    """Aggregate labeled (p, 3) stat arrays by label (summing across
+    repeated executions of the same plan node, e.g. one per morsel)."""
+    agg: Dict[str, np.ndarray] = {}
+    order: List[str] = []
+    for label, a in pairs:
+        a = np.asarray(a).reshape(-1, 3).astype(np.int64)
+        if label in agg:
+            agg[label] = agg[label] + a
+        else:
+            agg[label] = a.copy()
+            order.append(label)
+    return [ShuffleRecord(
+        label, int(agg[label][:, 0].sum()), int(agg[label][:, 1].sum()),
+        int(agg[label][:, 2].sum()),
+        tuple(int(x) for x in agg[label][:, 0]),
+        tuple(int(x) for x in agg[label][:, 2])) for label in order]
+
+
+def describe_drops(records: Sequence[ShuffleRecord], limit: int = 6) -> str:
+    """Name the op labels and ranks where capacity pressure dropped rows
+    (the attribution the rows_dropped RuntimeWarning reports)."""
+    offenders = [(r.label, rank, d)
+                 for r in records
+                 for rank, d in enumerate(r.per_rank_dropped) if d]
+    parts = [f"{label} @ rank {rank}: {d} rows"
+             for label, rank, d in offenders[:limit]]
+    if len(offenders) > limit:
+        parts.append(f"... {len(offenders) - limit} more")
+    return "; ".join(parts)
+
+
+def emit_shuffle_events(tracer, pairs: Sequence[Tuple[str, Any]],
+                        a2a_chunks: int) -> None:
+    """Per-shuffle (and per all-to-all chunk) instant events under the
+    currently open stage span.  Device-side op timing is invisible to the
+    driver, so these carry data volumes, not durations."""
+    for label, a in pairs:
+        a = np.asarray(a).reshape(-1, 3)
+        rows, byts, dropped = (int(a[:, 0].sum()), int(a[:, 1].sum()),
+                               int(a[:, 2].sum()))
+        with tracer.span(f"shuffle:{label}", "shuffle", rows=rows,
+                         bytes=byts, dropped=dropped):
+            if not label.endswith(":overflow"):
+                for c in range(max(1, a2a_chunks)):
+                    tracer.instant(f"a2a:{label}[chunk {c}]", "chunk",
+                                   chunk=c, chunks=a2a_chunks,
+                                   bytes=byts // max(1, a2a_chunks))
+
+
+# ---------------------------------------------------------------------- #
 # Node evaluation (runs inside shard_map; shared by all modes)
 # ---------------------------------------------------------------------- #
 def _shuffle_kw(node: LogicalNode) -> Dict[str, Any]:
@@ -196,7 +312,7 @@ def eval_node(node: LogicalNode, comm: Communicator,
     shuffle_fn = df_shuffle if shuffle_mode == "direct" else shuffle_allgather
 
     def run_shuffle(label: str, table: Table, **kw) -> Table:
-        out, st = shuffle_fn(table, comm, **kw)
+        out, st = shuffle_fn(table, comm, label=label, **kw)
         if stats_out is not None:
             stats_out.append((label, _stat_vec(st, _row_bytes(table))))
         return out
@@ -261,7 +377,8 @@ def eval_node(node: LogicalNode, comm: Communicator,
         if shuffle_mode == "direct":
             pre = bool(p.get("pre_aggregate", False))
             out, st = df_groupby(ins[0], comm, keys, aggs,
-                                 pre_aggregate=pre, **kw)
+                                 pre_aggregate=pre,
+                                 label=f"groupby({','.join(keys)})", **kw)
             if stats_out is not None:
                 if pre:
                     # the wire carries keys + stage-1 partial-agg columns
@@ -288,7 +405,8 @@ def eval_node(node: LogicalNode, comm: Communicator,
         if p.get("elide_shuffle"):
             return ops_local.sort_local(ins[0], by)
         if shuffle_mode == "direct":
-            out, st = df_sort(ins[0], comm, by, **kw)
+            out, st = df_sort(ins[0], comm, by,
+                              label=f"sort({','.join(by)})", **kw)
             if stats_out is not None:
                 stats_out.append((f"sort({','.join(by)})",
                                   _stat_vec(st, _row_bytes(ins[0]))))
@@ -334,6 +452,19 @@ class ExecStats:
     spill_bytes: int = 0               # valid rows written to host spill
     h2d_bytes: int = 0                 # host->device morsel transfer bytes
     d2h_bytes: int = 0                 # device->host spill transfer bytes
+    # -- timing (populated on collect_stats=True / traced runs; fenced ---- #
+    # -- with jax.block_until_ready so device execution is covered) ------- #
+    wall_time_s: float = 0.0           # end-to-end dispatch+execute wall time
+    #: per-dispatch-unit wall times: (unit label, seconds).  One entry per
+    #: stage in bsp_staged, per operator in amt, per segment (plus resident
+    #: builds / combines) out-of-core; a single "program" entry in bsp,
+    #: where XLA fuses all stages into one dispatch.
+    stage_times: List[Tuple[str, float]] = \
+        dataclasses.field(default_factory=list)
+    #: per-shuffle-label accounting with per-rank attribution (aggregated
+    #: across morsels); rows/bytes sum to rows_shuffled/bytes_shuffled
+    shuffle_records: List["ShuffleRecord"] = \
+        dataclasses.field(default_factory=list)
 
 
 def check_scan_dictionaries(order: Sequence[LogicalNode],
@@ -391,7 +522,8 @@ def _sum_stats(collected) -> Tuple[int, int, int]:
 def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                  mode: str = "bsp", collect_stats: bool = False,
                  shuffle_impl: str = "radix", a2a_chunks: int = 1,
-                 morsel_rows: Optional[int] = None, **morsel_kw):
+                 morsel_rows: Optional[int] = None, tracer=None,
+                 **morsel_kw):
     """Execute a lowered plan against DistTables on a ``CylonEnv``.
 
     Returns a DistTable, or ``(DistTable, ExecStats)`` with
@@ -399,6 +531,16 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     plan-wide shuffle defaults (per-node params override); both are part of
     the compile-cache key and recorded in the stats so benchmark output can
     attribute wins.
+
+    ``tracer`` (a ``repro.obs.Tracer``) records per-dispatch stage spans —
+    fenced with ``jax.block_until_ready`` so durations cover device
+    execution — plus per-shuffle data-volume events when stats are
+    collected.  Tracing is purely driver-side: it is NOT part of any
+    compile-cache key and cannot change what gets compiled.  With
+    ``collect_stats=True`` (tracer or not), ``ExecStats`` additionally
+    carries ``wall_time_s`` / per-unit ``stage_times`` / per-label
+    ``shuffle_records``, and the execution is folded into the process-global
+    ``repro.obs.METRICS`` registry.
 
     ``morsel_rows`` switches to the out-of-core morsel executor
     (``planner.morsel.run_morsel``): the input is streamed through the
@@ -411,10 +553,11 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         return run_morsel(pplan, env, tables, morsel_rows, mode=mode,
                           collect_stats=collect_stats,
                           shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
-                          **morsel_kw)
+                          tracer=tracer, **morsel_kw)
     if morsel_kw:
         raise TypeError(f"unexpected kwargs without morsel_rows: "
                         f"{sorted(morsel_kw)}")
+    tr = tracer if tracer is not None else NULL_TRACER
     names = pplan.scan_names
     missing = [n for n in names if n not in tables]
     if missing:
@@ -426,17 +569,25 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     shuffle_mode = "allgather" if mode == "amt" else "direct"
     eval_kw = dict(shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)
     hits0, misses0 = env.cache_hits, env.cache_misses
+    timing = collect_stats or tr.enabled
+    stage_times: List[Tuple[str, float]] = []
+    t_query0 = time.perf_counter() if timing else 0.0
 
-    def mk_stats(dispatches: int, collected) -> ExecStats:
-        rows, byts, dropped = _sum_stats(collected)
-        return ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
-                         dispatches, rows, byts, pplan.shuffle_labels(),
-                         pplan.fired,
-                         shuffle_impl=("allgather" if mode == "amt"
-                                       else shuffle_impl),
-                         a2a_chunks=a2a_chunks, rows_dropped=dropped,
-                         cache_hits=env.cache_hits - hits0,
-                         cache_misses=env.cache_misses - misses0)
+    def mk_stats(dispatches: int, pairs) -> ExecStats:
+        rows, byts, dropped = _sum_stats([a for _, a in pairs])
+        stats = ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
+                          dispatches, rows, byts, pplan.shuffle_labels(),
+                          pplan.fired,
+                          shuffle_impl=("allgather" if mode == "amt"
+                                        else shuffle_impl),
+                          a2a_chunks=a2a_chunks, rows_dropped=dropped,
+                          cache_hits=env.cache_hits - hits0,
+                          cache_misses=env.cache_misses - misses0,
+                          wall_time_s=time.perf_counter() - t_query0,
+                          stage_times=stage_times,
+                          shuffle_records=build_shuffle_records(pairs))
+        record_exec(stats, fp, stats.wall_time_s)
+        return stats
 
     if mode == "bsp":
         def prog(ctx, *local_tables):
@@ -452,17 +603,30 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 return out, tuple(a for _, a in stats)
             return out
 
-        res = env.run(prog, *[tables[n] for n in names],
-                      key=("bsp", fp, env.communicator_name, collect_stats,
-                           shuffle_impl, a2a_chunks))
+        with tr.span("stage:program", "stage", mode=mode,
+                     stages=pplan.num_stages, dispatch=0) as sp:
+            t0 = time.perf_counter() if timing else 0.0
+            res = env.run(prog, *[tables[n] for n in names],
+                          key=("bsp", fp, env.communicator_name,
+                               collect_stats, shuffle_impl, a2a_chunks))
+            sp.set(compiled=env.cache_misses > misses0)
+            out = res[0] if collect_stats else res
+            if timing:
+                jax.block_until_ready(
+                    (out.row_counts,) + (res[1] if collect_stats else ()))
+                stage_times.append(("program", time.perf_counter() - t0))
+            if collect_stats and tr.enabled:
+                emit_shuffle_events(
+                    tr, pair_stat_labels(plan_stat_labels(order), res[1]),
+                    a2a_chunks)
         if collect_stats:
-            out, collected = res
-            return attach_dictionaries(out, root), mk_stats(1, collected)
-        return attach_dictionaries(res, root)
+            pairs = pair_stat_labels(plan_stat_labels(order), res[1])
+            return attach_dictionaries(out, root), mk_stats(1, pairs)
+        return attach_dictionaries(out, root)
 
     if mode in ("bsp_staged", "amt"):
         values: Dict[int, Any] = {}
-        collected: List[Any] = []
+        collected: List[Tuple[str, Any]] = []
         dispatches = 0
 
         if mode == "bsp_staged":
@@ -470,8 +634,10 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
             for node in order:
                 groups.setdefault(pplan.stage_of[node.nid], []).append(node)
             units = [groups[s] for s in sorted(groups)]
+            unit_names = [f"stage:{s}" for s in sorted(groups)]
         else:
             units = [[node] for node in order]
+            unit_names = [f"op:{i}:{n.op}" for i, n in enumerate(order)]
 
         for uidx, unit in enumerate(units):
             unit_ids = {n.nid for n in unit}
@@ -506,18 +672,33 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
 
             args = [values[e.nid] for e in ext] + \
                    [tables[s.params["name"]] for s in scans]
-            res = env.run(prog, *args,
-                          key=(mode, fp, uidx, env.communicator_name,
-                               collect_stats, shuffle_impl, a2a_chunks))
-            if collect_stats:
-                out_tuple, unit_stats = res
-                collected.extend(unit_stats)
-            else:
-                out_tuple = res
-            dispatches += 1
-            for n, val in zip(outs, out_tuple):
-                jax.block_until_ready(val.row_counts)  # completion barrier
-                values[n.nid] = val
+            with tr.span(unit_names[uidx], "stage", mode=mode,
+                         dispatch=uidx,
+                         ops=",".join(n.op for n in unit)) as sp:
+                t0 = time.perf_counter() if timing else 0.0
+                m0 = env.cache_misses
+                res = env.run(prog, *args,
+                              key=(mode, fp, uidx, env.communicator_name,
+                                   collect_stats, shuffle_impl, a2a_chunks))
+                sp.set(compiled=env.cache_misses > m0)
+                if collect_stats:
+                    out_tuple, unit_stats = res
+                    unit_pairs = pair_stat_labels(
+                        plan_stat_labels(unit), unit_stats)
+                    collected.extend(unit_pairs)
+                else:
+                    out_tuple = res
+                dispatches += 1
+                for n, val in zip(outs, out_tuple):
+                    jax.block_until_ready(val.row_counts)  # completion barrier
+                    values[n.nid] = val
+                if timing:
+                    if collect_stats:
+                        jax.block_until_ready(unit_stats)
+                    stage_times.append(
+                        (unit_names[uidx], time.perf_counter() - t0))
+                if collect_stats and tr.enabled:
+                    emit_shuffle_events(tr, unit_pairs, a2a_chunks)
 
         result = attach_dictionaries(values[root.nid], root)
         if collect_stats:

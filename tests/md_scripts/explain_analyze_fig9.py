@@ -1,0 +1,117 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""EXPLAIN ANALYZE golden scenario on 8 devices: the Fig-9 pipeline
+(join -> groupby -> sort -> add_scalar) under ``bsp_staged``, checked for
+
+1. the annotated tree renders with measured actuals per node,
+2. per-stage times sum to no more than the query wall time,
+3. the report's byte totals match ``ExecStats`` / its shuffle records,
+4. the Chrome trace is valid ``trace_event`` JSON with the expected
+   span categories nested under one query span,
+5. the metrics registry export carries the schema CI archives.
+
+When ``OBS_ARTIFACT_DIR`` is set (the CI multidevice job does), the
+trace and metrics JSON land there as build artifacts.
+"""
+
+import json
+
+import numpy as np
+
+from repro.core import CylonEnv, DistTable, Plan
+from repro.obs import METRICS, run_analyzed
+
+rng = np.random.default_rng(0)
+N = 4000
+CAP = 1024
+ld = {"k": rng.integers(0, 500, N).astype(np.int32),
+      "v0": rng.integers(0, 64, N).astype(np.float32),
+      "junk": rng.random(N).astype(np.float32)}
+rd = {"k": rng.integers(0, 500, N).astype(np.int32),
+      "w": rng.integers(0, 64, N).astype(np.float32)}
+
+env = CylonEnv()
+assert env.parallelism == 8
+TABLES = {"l": DistTable.from_numpy(ld, 8, capacity=CAP),
+          "r": DistTable.from_numpy(rd, 8, capacity=CAP)}
+
+fig9 = (Plan.scan("l")
+        .join(Plan.scan("r"), on="k", out_capacity=16 * CAP,
+              bucket_capacity=2 * CAP)
+        .groupby(["k"], {"v0": ["sum"]}, bucket_capacity=2 * CAP)
+        .sort(["k"], bucket_capacity=2 * CAP)
+        .add_scalar(1.0, cols=["v0_sum"]))
+
+result, report = run_analyzed(fig9, env, TABLES, mode="bsp_staged")
+st = report.stats
+
+# -- 1. annotated tree --------------------------------------------------- #
+text = report.explain_analyze()
+assert "== EXPLAIN ANALYZE: mode=bsp_staged" in text
+assert "join[on=k]" in text and "act: moved" in text
+assert f"rows={N}" in text                       # scan actuals, both sides
+assert f"out_rows={result.total_rows()}" in text
+assert st.rows_dropped == 0, st.shuffle_records
+print(text)
+print()
+print(report.roofline_table())
+
+# -- 2. stage times are attributable and bounded by the wall ------------- #
+stage_names = [name for name, _ in st.stage_times]
+assert stage_names == [f"stage:{i}" for i in range(st.dispatches)], \
+    stage_names
+assert all(secs > 0 for _, secs in st.stage_times)
+assert sum(secs for _, secs in st.stage_times) <= st.wall_time_s + 1e-6
+
+# -- 3. report totals match ExecStats / shuffle records ------------------ #
+d = report.to_dict()
+assert d["rows_shuffled"] == st.rows_shuffled
+assert d["bytes_shuffled"] == st.bytes_shuffled
+recs = st.shuffle_records
+assert sum(r.rows for r in recs) == st.rows_shuffled
+assert sum(r.bytes for r in recs) == st.bytes_shuffled
+assert all(len(r.per_rank_rows) == 8 for r in recs)
+assert all(sum(r.per_rank_rows) == r.rows for r in recs)
+# stage_table slices the same records by stage: wire totals must agree
+# (overflow-bucket records are excluded from the wire by design)
+wire = sum(row["wire_bytes"] for row in report.stage_table())
+overflow = sum(r.bytes for r in recs if r.label.endswith(":overflow"))
+assert wire == st.bytes_shuffled - overflow, (wire, st.bytes_shuffled)
+
+# -- 4. Chrome trace: valid, categorized, nested under one query span ---- #
+payload = report.to_chrome_trace()
+payload = json.loads(json.dumps(payload))        # round-trips as JSON
+evs = payload["traceEvents"]
+assert payload["displayTimeUnit"] == "ms"
+cats = {e["cat"] for e in evs}
+assert {"query", "stage", "shuffle"} <= cats
+roots = [e for e in evs if e["cat"] == "query"]
+assert len(roots) == 1 and roots[0]["ph"] == "X"
+q0, q1 = roots[0]["ts"], roots[0]["ts"] + roots[0]["dur"]
+for e in evs:
+    assert {"name", "cat", "ph", "ts", "pid", "tid"} <= set(e), e
+    assert q0 <= e["ts"] <= q1 + 1e-3, e
+
+# -- 5. metrics export schema -------------------------------------------- #
+snap = json.loads(METRICS.to_json())
+assert {"counters", "gauges", "histograms", "query_records"} <= set(snap)
+assert any(c["labels"] == {"mode": "bsp_staged"} and c["value"] >= 1
+           for c in snap["counters"]["queries_total"])
+rec = snap["query_records"][-1]
+for key in ("fingerprint", "mode", "wall_time_s", "stage_times",
+            "rows_shuffled", "bytes_shuffled", "rows_dropped",
+            "cache_hits", "cache_misses"):
+    assert key in rec, key
+assert rec["fingerprint"] == report.pplan.fingerprint
+
+# -- CI artifacts --------------------------------------------------------- #
+art = os.environ.get("OBS_ARTIFACT_DIR")
+if art:
+    os.makedirs(art, exist_ok=True)
+    report.to_chrome_trace(os.path.join(art, "fig9_trace.json"))
+    report.to_json(os.path.join(art, "fig9_report.json"))
+    METRICS.to_json(os.path.join(art, "metrics.json"))
+    print(f"artifacts -> {art}")
+
+print("explain_analyze_fig9 OK")

@@ -93,3 +93,8 @@ def test_moe_shuffle_parity():
 @pytest.mark.multidevice
 def test_data_pipeline():
     _run("data_pipeline.py")
+
+
+@pytest.mark.multidevice
+def test_explain_analyze_fig9():
+    _run("explain_analyze_fig9.py")

@@ -250,7 +250,7 @@ def test_debug_overflow_warns_on_drop(rng):
     data = _exact_data(rng, 128)
     t = DistTable.from_numpy(data, 1)
     plan = Plan.scan("l").shuffle(["k"], out_capacity=32, debug_overflow=True)
-    with pytest.warns(RuntimeWarning, match="shuffle dropped rows"):
+    with pytest.warns(RuntimeWarning, match=r"shuffle\(k\) @ rank 0 dropped"):
         out = execute(plan, env, {"l": t}, optimize=False)
         np.asarray(out.row_counts)        # force execution + callback
     ok = Plan.scan("l").shuffle(["k"], debug_overflow=True)

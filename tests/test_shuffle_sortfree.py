@@ -104,12 +104,14 @@ def test_debug_overflow_warns():
         warnings.simplefilter("always")
         run_ranks("xla", cols, counts, key_cols=["k"], bucket_capacity=8,
                   debug_overflow=True)
-        assert any("shuffle dropped rows" in str(x.message) for x in w)
+        # the warning names the op label (bare "shuffle" here) and the rank
+        assert any("shuffle @ rank" in str(x.message)
+                   and "dropped rows" in str(x.message) for x in w)
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         run_ranks("xla", cols, counts, key_cols=["k"], bucket_capacity=64,
                   out_capacity=128, debug_overflow=True)
-        assert not any("shuffle dropped rows" in str(x.message) for x in w)
+        assert not any("dropped rows" in str(x.message) for x in w)
 
 
 def test_stats_static_tags_roundtrip_pytree():
