@@ -259,6 +259,124 @@ def run_frontend(global_rows: int = 100_000) -> None:
         raise AssertionError("df frontend result != Plan builder result")
 
 
+def run_faults(global_rows: int = 100_000, which: str = "off",
+               oversub: int = 4) -> None:
+    """Fault-tolerance cost model (``docs/fault_tolerance.md``):
+
+    * ``off``    — fault-tolerance arguments armed but injection disabled:
+      asserts ZERO new compile-cache entries vs the plain run (the harness
+      is driver-side only) and records the wall-clock ratio (target ~1.0);
+    * ``single`` — one injected fault, in-core (stage launch) and streamed
+      (morsel execute): records recovery cost, asserts bit-identity;
+    * ``storm``  — fixed-seed randomized multi-fault plans on the streamed
+      pipeline: every run completes bit-identical with zero drops.
+    """
+    from repro.faults import FaultPlan, random_plan
+
+    p = min(8, len(jax.devices()))
+    env = CylonEnv(jax.devices()[:p])
+    ld = make_table_data(global_rows, seed=0, exact_values=True)
+    rd = make_table_data(global_rows, seed=1, exact_values=True)
+    rd["w"] = rd.pop("v0")
+    lt = DistTable.from_numpy(ld, p)
+    rt = DistTable.from_numpy(rd, p)
+    cap = lt.capacity
+    rows_rank = -(-global_rows // p)
+    morsel = max(8, (-(-rows_rank // oversub) + 7) // 8 * 8)
+    plan = (Plan.scan("l")
+            .join(Plan.scan("r"), on="k", out_capacity=cap * 4,
+                  bucket_capacity=cap * 2, shuffle_out_capacity=cap * 2)
+            .groupby(["k"], {"v0": ["sum"]}, bucket_capacity=cap * 4)
+            .sort(["k"], bucket_capacity=cap * 4))
+    tables_dev = {"l": lt, "r": rt}
+    tables_host = {"l": ld, "r": rd}
+    pplan = compile_plan(plan, tables_dev, optimize_plan=True)
+
+    # fault-free baselines (also warm the compile cache for both paths)
+    ref, _ = run_physical(pplan, env, tables_dev, mode="bsp",
+                          collect_stats=True)
+    ref_np = ref.to_numpy()
+    out, _ = run_physical(pplan, env, tables_host, mode="bsp",
+                          collect_stats=True, morsel_rows=morsel,
+                          capacity_factor=4.0)
+    ooc_np = out.to_numpy()
+
+    def _identical(a, b):
+        return (sorted(a) == sorted(b)
+                and all(np.array_equal(a[c], b[c]) for c in a))
+
+    if which == "off":
+        t_plain = time_fn(lambda: run_physical(
+            pplan, env, tables_dev, mode="bsp").row_counts, iters=5)
+        # snapshot AFTER the plain run: the invariant is that arming the
+        # fault-tolerance arguments compiles nothing the plain run didn't
+        keys0 = set(env._cache)
+        misses0 = env.cache_misses
+        t_armed = time_fn(lambda: run_physical(
+            pplan, env, tables_dev, mode="bsp", retries=5, timeout=60.0,
+            overflow="degrade", faults=False).row_counts, iters=5)
+        sp = run_physical(pplan, env, tables_host, mode="bsp",
+                          morsel_rows=morsel, capacity_factor=4.0,
+                          retries=5, timeout=60.0, faults=False)
+        assert sp.total_rows() == out.total_rows()
+        if set(env._cache) != keys0 or env.cache_misses != misses0:
+            raise AssertionError(
+                "fault-tolerance harness changed the compile cache with "
+                f"injection off ({len(set(env._cache) - keys0)} new keys, "
+                f"{env.cache_misses - misses0} new misses)")
+        record("pipeline(Fig9-faults)", f"off_plain_p{p}", t_plain,
+               parallelism=p, rows=global_rows)
+        record("pipeline(Fig9-faults)", f"off_armed_p{p}", t_armed,
+               parallelism=p, rows=global_rows, new_cache_keys=0,
+               new_cache_misses=0)
+        record("pipeline(Fig9-faults)", f"off_overhead_p{p}",
+               t_armed / t_plain - 1.0, parallelism=p,
+               overhead_pct=round(100 * (t_armed / t_plain - 1.0), 2),
+               note="ratio-1 not seconds")
+    elif which == "single":
+        t_ic = time_fn(lambda: run_physical(
+            pplan, env, tables_dev, mode="bsp").row_counts, iters=3)
+        got, st = run_physical(pplan, env, tables_dev, mode="bsp",
+                               collect_stats=True,
+                               faults="stage:launch@0=raise")
+        assert st.retries == 1 and _identical(ref_np, got.to_numpy())
+        record("pipeline(Fig9-faults)", f"single_in_core_p{p}",
+               st.wall_time_s, parallelism=p, rows=global_rows,
+               baseline_s=round(t_ic, 6), retries=st.retries,
+               faults_injected=st.faults_injected, bit_identical=True)
+        got, st = run_physical(pplan, env, tables_host, mode="bsp",
+                               collect_stats=True, morsel_rows=morsel,
+                               capacity_factor=4.0,
+                               faults="morsel:execute@1=raise")
+        assert st.retries >= 1 and st.rows_dropped == 0
+        assert _identical(ooc_np, got.to_numpy())
+        record("pipeline(Fig9-faults)", f"single_out_of_core_p{p}",
+               st.wall_time_s, parallelism=p, rows=global_rows,
+               morsel_rows=morsel, retries=st.retries,
+               faults_injected=st.faults_injected, bit_identical=True)
+    elif which == "storm":
+        fired = 0
+        t0 = 0.0
+        for seed in range(4):
+            fp = random_plan(seed, nfaults=2, kinds=("raise",),
+                             max_occurrence=4)
+            fp = FaultPlan(fp.specs, seed=fp.seed, hang_s=0.05)
+            got, st = run_physical(pplan, env, tables_host, mode="bsp",
+                                   collect_stats=True, morsel_rows=morsel,
+                                   capacity_factor=4.0, faults=fp)
+            assert st.rows_dropped == 0
+            assert _identical(ooc_np, got.to_numpy()), str(fp)
+            fired += st.faults_injected
+            t0 += st.wall_time_s
+        if not fired:
+            raise AssertionError("storm never fired a fault")
+        record("pipeline(Fig9-faults)", f"storm_p{p}", t0 / 4,
+               parallelism=p, rows=global_rows, seeds=4,
+               faults_injected=fired, rows_dropped=0, bit_identical=True)
+    else:
+        raise ValueError(f"unknown --faults mode {which!r}")
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -266,16 +384,27 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser(
         description="Fig-9 pipeline extras: out-of-core morsel streaming "
-                    "(default) or --frontend=df overhead measurement")
+                    "(default), --frontend=df overhead measurement, or "
+                    "--faults fault-tolerance cost model")
     ap.add_argument("--rows", type=int, default=100_000)
     ap.add_argument("--oversub", type=int, default=8,
                     help="dataset size as a multiple of device capacity")
     ap.add_argument("--capacity-factor", type=float, default=4.0)
     ap.add_argument("--frontend", choices=["df"], default=None,
                     help="measure DataFrame-frontend overhead vs raw Plan")
+    ap.add_argument("--faults", choices=["off", "single", "storm"],
+                    default=None,
+                    help="fault-tolerance bench: disabled-overhead / "
+                         "single-fault recovery / randomized storm")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    if args.frontend == "df":
+    if args.faults:
+        json_path = args.json or "BENCH_pr7_fault_tolerance.json"
+        run_faults(args.rows, args.faults)
+        dump_json(json_path, meta={"bench": "fault_tolerance",
+                                   "faults": args.faults,
+                                   "rows": args.rows})
+    elif args.frontend == "df":
         json_path = args.json or "BENCH_pr4_df_frontend.json"
         run_frontend(args.rows)
         dump_json(json_path, meta={"bench": "df_frontend",

@@ -85,6 +85,10 @@ class Communicator(abc.ABC):
         with each other and with compute).  ``m`` is padded up to a
         multiple of ``chunks`` and the pad sliced back off.  Subclasses
         may override with a schedule-aware pipeline (see ``ring``).
+
+        ``chunks`` must be a positive integer no larger than the capacity
+        axis; invalid values raise ``ValueError`` up front (naming the
+        axis and chunk count) instead of failing deep inside a reshape.
         """
         x, m, csz = self._chunk_split(x, chunks)
         if csz is None:
@@ -98,10 +102,27 @@ class Communicator(abc.ABC):
         """Pad axis 1 to a multiple of ``chunks``; (x, orig_m, chunk_size).
 
         ``chunk_size`` is None when chunking degenerates to one collective.
+        Validates ``chunks`` up front: a zero/negative/non-integer count or
+        more chunks than capacity-axis rows would otherwise surface as an
+        opaque division/reshape error deep inside the collective.
         """
+        if x.ndim < 2:
+            raise ValueError(
+                f"all_to_all_chunked needs a (p, m, ...) block-major array "
+                f"with a capacity axis to chunk; got shape {x.shape}")
+        m = x.shape[1]
+        if not isinstance(chunks, int) or isinstance(chunks, bool) \
+                or chunks < 1:
+            raise ValueError(
+                f"all_to_all_chunked: chunks must be a positive int, got "
+                f"{chunks!r} (capacity axis 1 has {m} rows)")
+        if chunks > max(m, 1):
+            raise ValueError(
+                f"all_to_all_chunked: cannot split the capacity axis "
+                f"(axis 1, {m} rows) into {chunks} chunks — chunks must "
+                f"be <= rows; rows not divisible by chunks are padded")
         if chunks <= 1:
             return x, x.shape[1], None
-        m = x.shape[1]
         mp = -(-m // chunks) * chunks
         if mp != m:
             pad = jnp.zeros((x.shape[0], mp - m) + x.shape[2:], x.dtype)

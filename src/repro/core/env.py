@@ -133,7 +133,8 @@ class MorselSource:
 
     def __init__(self, source, morsel_rows: int,
                  env: Optional["CylonEnv"] = None,
-                 parallelism: Optional[int] = None, tracer=None):
+                 parallelism: Optional[int] = None, tracer=None,
+                 faults=None, token=None):
         from .store import SpillTable  # deferred: store imports env
         if isinstance(source, DistTable):
             source = SpillTable.from_dist(source)
@@ -153,10 +154,18 @@ class MorselSource:
                            for r in range(self.parallelism)]
         self._names = source.column_names
         self._tracer = tracer if tracer is not None else NULL_TRACER
+        # fault-injection hooks (repro.faults): the H2D staging of each
+        # morsel is a registered hazard point; both default to no-ops
+        if faults is None:
+            from ..faults import NULL_FAULTS
+            faults = NULL_FAULTS
+        self._faults = faults
+        self._token = token
 
     def _build(self, m: int) -> Optional[DistTable]:
         if m >= self.num_morsels:
             return None
+        self._faults.check("transfer:h2d", token=self._token, morsel=m)
         b0 = self.h2d_bytes
         p, cap = self.parallelism, self.capacity
         lo, hi = m * cap, (m + 1) * cap

@@ -172,6 +172,8 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
             optimize: bool = True, collect_stats: bool = False,
             shuffle_impl: str = "radix", a2a_chunks: int = 1,
             morsel_rows: Optional[int] = None, trace: Any = None,
+            retries: Any = None, timeout: Any = None,
+            overflow: Any = None, faults: Any = None,
             **morsel_kw):
     """Execute a plan against DistTables.  Returns a DistTable, or
     ``(DistTable, planner.ExecStats)`` with ``collect_stats=True``.
@@ -200,6 +202,14 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
     ``QueryTrace`` is retrievable via ``repro.obs.last_trace()`` (or from
     the tracer you passed).  Tracing is driver-side only — it never changes
     what gets compiled.
+
+    Fault tolerance (``docs/fault_tolerance.md``): ``retries`` (int or
+    ``repro.faults.RetryPolicy``) replays failed dispatch units with
+    exponential backoff; ``timeout`` (seconds or a ``CancellationToken``)
+    deadlines the whole query; ``overflow`` (``raise | warn | degrade``,
+    default ``degrade``) governs capacity-pressure row drops; ``faults``
+    arms a deterministic fault-injection plan (``None`` consults the
+    ``REPRO_FAULTS`` env var).
     """
     from ..obs.trace import resolve_tracer
     from ..planner import compile_plan, run_physical
@@ -212,6 +222,8 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
                            collect_stats=collect_stats,
                            shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
                            morsel_rows=morsel_rows, tracer=tracer,
+                           retries=retries, timeout=timeout,
+                           overflow=overflow, faults=faults,
                            **morsel_kw)
     if tracer.enabled:
         tracer.finish()

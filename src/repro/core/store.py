@@ -193,6 +193,78 @@ class SpillTable:
         return out
 
 
+# ---------------------------------------------------------------------- #
+# Checkpoints: spill buckets as durable replay points
+# ---------------------------------------------------------------------- #
+class Checkpoint:
+    """A schema-stamped, reference-counted guard over a ``SpillTable``.
+
+    Comm-boundary spills are the natural checkpoints of the morsel executor
+    (the boundary-externalization idea): a segment's input spill is
+    read-only while the segment streams, so a failed segment attempt can
+    replay from it verbatim.  The checkpoint makes that contract explicit:
+
+    * ``stamp`` — a cheap content stamp (schema, dictionaries, per-rank
+      row counts, total bytes) taken at creation; ``validate()`` recomputes
+      it before every replay and refuses a mutated or truncated spill.
+    * reference counting — ``retain``/``release`` keep the checkpoint (and
+      the spill it guards) alive across failed attempts; it is only
+      considered consumed when the owning segment commits.  ``released``
+      checkpoints refuse further validation, so a stale replay is an error
+      rather than silent corruption.
+    """
+
+    def __init__(self, spill: SpillTable):
+        self.spill = spill
+        self._refs = 1
+        self.stamp = self._stamp(spill)
+
+    @staticmethod
+    def _stamp(spill: SpillTable) -> Tuple:
+        return (
+            tuple(sorted((k, str(d), tuple(s))
+                         for k, (d, s) in spill.schema.items())),
+            tuple(sorted((k, tuple(v))
+                         for k, v in spill.dictionaries.items())),
+            tuple(spill.rank_rows(r) for r in range(spill.parallelism)),
+            spill.nbytes(),
+        )
+
+    @property
+    def refs(self) -> int:
+        return self._refs
+
+    @property
+    def released(self) -> bool:
+        return self._refs <= 0
+
+    def retain(self) -> "Checkpoint":
+        if self.released:
+            raise RuntimeError("cannot retain a released checkpoint")
+        self._refs += 1
+        return self
+
+    def release(self) -> None:
+        """Drop one reference; at zero the checkpoint is consumed (the
+        spill itself is NOT freed — it may be the caller's input data)."""
+        if self._refs > 0:
+            self._refs -= 1
+
+    def validate(self) -> SpillTable:
+        """Re-stamp the spill and return it for replay; raises on drift."""
+        if self.released:
+            raise RuntimeError(
+                "checkpoint was released (segment already committed); "
+                "replaying from it would read consumed state")
+        now = self._stamp(self.spill)
+        if now != self.stamp:
+            raise RuntimeError(
+                f"checkpoint validation failed: spill changed since the "
+                f"checkpoint was taken (rows {self.stamp[2]} -> {now[2]}, "
+                f"bytes {self.stamp[3]} -> {now[3]})")
+        return self.spill
+
+
 def _route_chunks(spill: SpillTable, parallelism: int
                   ) -> List[List[Dict[str, np.ndarray]]]:
     """Block-route every chunk's rows to per-destination bucket lists by

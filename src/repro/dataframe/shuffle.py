@@ -109,17 +109,38 @@ def _unpack_u32(buf: jax.Array, names, dtypes) -> Dict[str, jax.Array]:
     return out
 
 
+#: (label, rank) pairs that already warned since the last query start —
+#: the morsel executor runs one callback per shuffle PER MORSEL per rank,
+#: so without dedupe a streaming run spams hundreds of identical warnings.
+#: The executors reset this at query start; totals stay exactly attributed
+#: via the end-of-query ``describe_drops`` summary.
+_warned_overflow: set = set()
+
+
+def reset_overflow_warnings() -> None:
+    """Start a fresh warn-once-per-(op label, rank) window (called by the
+    executors at query start)."""
+    _warned_overflow.clear()
+
+
 def _overflow_warn(rank, send_dropped, recv_dropped, label=""):
     """Host-side overflow check (``debug_overflow=True``): warn, don't drop
     silently — and say *which* op and rank overflowed.  Runs as a debug
-    callback so it works under jit/shard_map (one callback per rank)."""
+    callback so it works under jit/shard_map (one callback per rank);
+    deduplicated to once per (op label, rank) per query."""
     import warnings
     sd, rd = int(send_dropped), int(recv_dropped)
     if sd or rd:
-        where = f"{label or 'shuffle'} @ rank {int(rank)}"
+        key = (label or "shuffle", int(rank))
+        if key in _warned_overflow:
+            return
+        _warned_overflow.add(key)
+        where = f"{key[0]} @ rank {key[1]}"
         warnings.warn(
             f"{where} dropped rows: send_dropped={sd} recv_dropped={rd} "
-            f"(raise bucket_capacity / out_capacity or capacity_factor)",
+            f"(raise bucket_capacity / out_capacity or capacity_factor; "
+            f"per-query totals are attributed in the end-of-query "
+            f"summary)",
             RuntimeWarning, stacklevel=2)
 
 

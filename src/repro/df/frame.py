@@ -27,7 +27,7 @@ from ..core.plan import Plan, execute
 from ..core.store import SpillTable
 from ..expr import Col, Expr, ensure_expr
 from ..planner.logical import groupby_schema, join_schema
-from .session import get_env
+from .session import get_env, get_session_defaults
 
 __all__ = ["DataFrame", "GroupBy", "read_numpy", "from_pandas", "from_table"]
 
@@ -202,7 +202,8 @@ class DataFrame:
     def collect(self, env: Optional[CylonEnv] = None, mode: str = "bsp",
                 optimize: bool = True, collect_stats: bool = False,
                 morsel_rows: Optional[int] = None, analyze: bool = False,
-                trace: Any = None, **kw):
+                trace: Any = None, timeout: Any = None, retries: Any = None,
+                overflow: Any = None, faults: Any = None, **kw):
         """Run the accumulated plan; returns a ``DistTable`` (or a
         host-resident ``SpillTable`` with ``morsel_rows=``, and a
         ``(result, ExecStats)`` pair with ``collect_stats=True``).
@@ -219,9 +220,25 @@ class DataFrame:
         (``repro.df.session``).  Extra ``kw`` (``shuffle_impl``,
         ``a2a_chunks``, ``capacity_factor``, ...) pass through to
         ``core.plan.execute``.
+
+        Fault tolerance (``docs/fault_tolerance.md``): ``timeout`` (s)
+        deadlines the query, ``retries`` replays faulted dispatch units
+        with backoff, ``overflow`` (``raise | warn | degrade``) governs
+        capacity-pressure drops, ``faults`` injects a deterministic fault
+        plan.  ``None`` falls back to the active session's defaults
+        (``session(timeout=..., ...)``), then the library defaults.
         """
         if env is None:
             env = self._env if self._env is not None else get_env()
+        defaults = get_session_defaults()
+        if timeout is None:
+            timeout = defaults.get("timeout")
+        if retries is None:
+            retries = defaults.get("retries")
+        if overflow is None:
+            overflow = defaults.get("overflow")
+        if faults is None:
+            faults = defaults.get("faults")
         if morsel_rows is None:
             # catch gang mismatches here with a clear message instead of a
             # shard_map divisibility error deep inside compilation (the
@@ -241,10 +258,14 @@ class DataFrame:
                                 "collect_stats")
             return run_analyzed(self.plan, env, self.sources, mode=mode,
                                 optimize=optimize, morsel_rows=morsel_rows,
-                                trace=True if trace is None else trace, **kw)
+                                trace=True if trace is None else trace,
+                                timeout=timeout, retries=retries,
+                                overflow=overflow, faults=faults, **kw)
         return execute(self.plan, env, self.sources, mode=mode,
                        optimize=optimize, collect_stats=collect_stats,
-                       morsel_rows=morsel_rows, trace=trace, **kw)
+                       morsel_rows=morsel_rows, trace=trace,
+                       timeout=timeout, retries=retries, overflow=overflow,
+                       faults=faults, **kw)
 
     def to_numpy(self, **kw) -> Dict[str, np.ndarray]:
         """``collect`` + gather valid rows to host numpy columns."""

@@ -29,11 +29,17 @@ import jax
 
 from ..core.env import CylonEnv
 
-__all__ = ["session", "get_env", "set_default_env", "reset_default_env"]
+__all__ = ["session", "get_env", "set_default_env", "reset_default_env",
+           "get_session_defaults"]
 
 _lock = threading.Lock()
 _default: Optional[CylonEnv] = None
 _tls = threading.local()
+
+#: fault-tolerance knobs a session may default for every collect() in its
+#: scope (an explicit collect() argument always wins); see
+#: ``docs/fault_tolerance.md``
+_DEFAULT_KEYS = ("timeout", "retries", "overflow", "faults")
 
 
 def _stack() -> List[CylonEnv]:
@@ -44,6 +50,25 @@ def _stack() -> List[CylonEnv]:
     except AttributeError:
         _tls.stack = []
         return _tls.stack
+
+
+def _defaults_stack() -> List[dict]:
+    """Per-thread stack of session-scoped collect() defaults (parallel to
+    ``_stack`` but pushed only by sessions that set any)."""
+    try:
+        return _tls.defaults
+    except AttributeError:
+        _tls.defaults = []
+        return _tls.defaults
+
+
+def get_session_defaults() -> dict:
+    """Effective fault-tolerance defaults for this thread: innermost
+    session values win, outer sessions fill the gaps."""
+    merged: dict = {}
+    for layer in _defaults_stack():
+        merged.update(layer)
+    return merged
 
 
 def get_env() -> CylonEnv:
@@ -77,21 +102,34 @@ def reset_default_env() -> None:
 @contextlib.contextmanager
 def session(env: Optional[CylonEnv] = None, *,
             devices: Optional[Sequence[jax.Device]] = None,
-            communicator: str = "xla") -> Iterator[CylonEnv]:
+            communicator: str = "xla",
+            timeout=None, retries=None, overflow=None,
+            faults=None) -> Iterator[CylonEnv]:
     """Scope an active env: ``with session(...) as env: df.collect()``.
 
     Pass an existing ``env``, or let the session build one from
     ``devices`` (default: all local) and ``communicator``.  The compiled
     program cache lives on the env, so reusing one session across many
     ``collect`` calls is what makes repeat execution cheap.
+
+    ``timeout`` / ``retries`` / ``overflow`` / ``faults`` set the
+    session-wide fault-tolerance defaults applied to every ``collect()``
+    in scope (``docs/fault_tolerance.md``); a per-call argument overrides,
+    and nested sessions override outer ones per key.  A session-level
+    ``timeout`` is a *per-query* deadline, re-armed at each collect.
     """
     if env is None:
         env = CylonEnv(devices=devices, communicator=communicator)
     elif devices is not None:
         raise TypeError("pass either env= or devices=, not both")
+    layer = {k: v for k, v in (("timeout", timeout), ("retries", retries),
+                               ("overflow", overflow), ("faults", faults))
+             if v is not None}
     stack = _stack()
     stack.append(env)
+    _defaults_stack().append(layer)
     try:
         yield env
     finally:
         stack.pop()
+        _defaults_stack().pop()

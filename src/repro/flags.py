@@ -1,26 +1,58 @@
-"""Trace-time build flags (cost-accounting controls for the dry-run).
+"""Process-wide build/run flags.
 
-XLA's ``HloCostAnalysis`` counts a while-loop body ONCE (no trip-count
-multiplication), so scanned programs under-report flops/bytes/collectives.
-The dry-run therefore lowers *counting builds* with every scan unrolled at
-one and two periods of depth and extrapolates per-period costs (see
-``launch/dryrun.py``).  These flags switch the scans to unrolled form at
-trace time; production/training builds leave them off.
+Two families live here:
+
+* **Trace-time build flags** (cost-accounting controls for the dry-run).
+  XLA's ``HloCostAnalysis`` counts a while-loop body ONCE (no trip-count
+  multiplication), so scanned programs under-report flops/bytes/collectives.
+  The dry-run therefore lowers *counting builds* with every scan unrolled at
+  one and two periods of depth and extrapolates per-period costs (see
+  ``launch/dryrun.py``).  These flags switch the scans to unrolled form at
+  trace time; production/training builds leave them off.
+
+* **Fault injection** (``repro.faults``).  ``FLAGS.faults`` holds a fault
+  plan string (``site[@occ][xN]=kind;...``); when unset, the ``REPRO_FAULTS``
+  env var is consulted.  ``fault_injection(...)`` scopes a plan; the
+  executors resolve the active plan via ``repro.faults.resolve_faults``.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
+from typing import Optional
 
 
 @dataclasses.dataclass
 class _Flags:
     unroll_layers: bool = False   # layer-period scan -> unrolled
     unroll_inner: bool = False    # CE chunks + attention kv blocks -> unrolled
+    faults: Optional[str] = None  # fault plan string; None -> $REPRO_FAULTS
 
 
 FLAGS = _Flags()
+
+
+def fault_spec() -> Optional[str]:
+    """The active fault plan string: ``FLAGS.faults`` if set, else the
+    ``REPRO_FAULTS`` env var ("" / "0" mean off)."""
+    if FLAGS.faults is not None:
+        return FLAGS.faults or None
+    spec = os.environ.get("REPRO_FAULTS", "")
+    return spec if spec not in ("", "0") else None
+
+
+@contextlib.contextmanager
+def fault_injection(spec: str):
+    """Scope a fault plan string: every execution inside the block resolves
+    it (unless an explicit ``faults=`` argument overrides)."""
+    old = FLAGS.faults
+    FLAGS.faults = spec
+    try:
+        yield
+    finally:
+        FLAGS.faults = old
 
 
 @contextlib.contextmanager

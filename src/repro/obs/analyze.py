@@ -81,10 +81,14 @@ def render_analyze(pplan, stats, scan_rows: Optional[Dict[str, int]] = None,
     records = {r.label: r for r in stats.shuffle_records}
     stage_secs = _stage_seconds(stats)
     cache = f"{stats.cache_hits} hits / {stats.cache_misses} misses"
+    ft = ""
+    if getattr(stats, "retries", 0) or getattr(stats, "degraded", 0):
+        ft = (f" retries={getattr(stats, 'retries', 0)} "
+              f"degraded={getattr(stats, 'degraded', 0)}")
     lines = [
         f"== EXPLAIN ANALYZE: mode={stats.mode}, "
         f"wall={stats.wall_time_s:.4f}s, dispatches={stats.dispatches} "
-        f"(compile cache: {cache}) ==",
+        f"(compile cache: {cache}){ft} ==",
         f"   shuffled {stats.rows_shuffled} rows / "
         f"{_fmt_bytes(stats.bytes_shuffled)}"
         + (f", dropped {stats.rows_dropped}" if stats.rows_dropped else "")
@@ -220,6 +224,9 @@ class QueryReport:
             "rows_dropped": st.rows_dropped,
             "cache_hits": st.cache_hits,
             "cache_misses": st.cache_misses,
+            "retries": getattr(st, "retries", 0),
+            "degraded": getattr(st, "degraded", 0),
+            "faults_injected": getattr(st, "faults_injected", 0),
             "scan_rows": self.scan_rows,
             "result_rows": self.result_rows,
             "shuffle_records": [

@@ -234,6 +234,18 @@ def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
         stats.cache_hits)
     reg.counter("compile_cache_misses_total", "compile-cache misses").inc(
         stats.cache_misses)
+    if getattr(stats, "retries", 0):
+        reg.counter("retries_total",
+                    "dispatch units replayed after a fault").inc(
+            stats.retries, mode=mode)
+    if getattr(stats, "degraded", 0):
+        reg.counter("degraded_total",
+                    "capacity-degrade re-executions").inc(
+            stats.degraded, mode=mode)
+    if getattr(stats, "faults_injected", 0):
+        reg.counter("faults_injected_total",
+                    "faults fired by the active FaultPlan").inc(
+            stats.faults_injected, mode=mode)
     if wall_time_s > 0:
         reg.histogram("query_wall_s", "end-to-end query wall time").observe(
             wall_time_s, mode=mode)
@@ -255,5 +267,8 @@ def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
         "morsels": getattr(stats, "morsels", 0),
         "spill_bytes": getattr(stats, "spill_bytes", 0),
         "h2d_bytes": getattr(stats, "h2d_bytes", 0),
+        "retries": getattr(stats, "retries", 0),
+        "degraded": getattr(stats, "degraded", 0),
+        "faults_injected": getattr(stats, "faults_injected", 0),
     }
     return reg.record_query(record)

@@ -39,9 +39,13 @@ Device memory is bounded by the *working capacity* ``W = capacity_factor x
 morsel_rows`` (shuffle receive / join output headroom), the resident build
 sides, and the groupby combine sub-bucket size — never by the streamed
 input.  Capacity pressure drops are ALWAYS counted (the morsel programs
-collect the overflow triple unconditionally): a run that dropped rows
-raises a ``RuntimeWarning`` and reports ``ExecStats.rows_dropped`` — raise
-``capacity_factor`` (skewed keys, exploding joins) to fix it.
+collect the overflow triple unconditionally) and what happens next is the
+``overflow=`` policy (``repro.faults.OverflowPolicy``): the default
+``degrade`` re-executes the overflowing segment with halved morsel size
+(then grown working capacity) until every row fits; ``warn`` keeps the
+truncated result and raises one ``RuntimeWarning`` attributing the drops;
+``raise`` fails the query with ``CapacityOverflow``.  See
+``docs/fault_tolerance.md``.
 """
 
 from __future__ import annotations
@@ -56,11 +60,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.env import DistTable, MorselSource
-from ..core.store import SpillTable, _round8
+from ..core.store import Checkpoint, SpillTable, _round8
+from ..faults import (CapacityOverflow, OverflowPolicy, resolve_faults,
+                      resolve_overflow, resolve_retry, resolve_token,
+                      run_with_retries)
 from ..dataframe import ops_local
 from ..dataframe.groupby import (_normalize, combine_groupby_partials,
                                  groupby_partial)
 from ..dataframe.ops_local import hash_columns_np
+from ..dataframe.shuffle import reset_overflow_warnings
 from ..dataframe.shuffle import shuffle as df_shuffle
 from ..dataframe.table import Table
 from ..obs.metrics import record_exec
@@ -453,7 +461,8 @@ def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
 # Cross-morsel groupby combine (hash sub-buckets, rank-local)
 # ---------------------------------------------------------------------- #
 def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
-                     M: int, acc: _Acc, fp: str, si: int) -> SpillTable:
+                     M: int, acc: _Acc, fp: str, si: int,
+                     faults=None, token=None) -> SpillTable:
     keys = list(gnode.params["keys"])
     physical, post = _normalize(gnode.params["aggs"])
     p = part_spill.parallelism
@@ -501,6 +510,8 @@ def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
             acc.h2d_bytes += buf.nbytes
             cols[name] = jnp.asarray(buf.reshape((p * cap_b,) + trail))
         acc.h2d_bytes += counts.nbytes
+        if faults is not None:
+            faults.check("spill:combine", token=token, segment=si, bucket=b)
         dist = DistTable(cols, jnp.asarray(counts), cap_b)
         out = env.run(prog, dist,
                       key=("morsel-combine", fp, si, cap_b,
@@ -516,12 +527,20 @@ def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
 # ---------------------------------------------------------------------- #
 # Driver
 # ---------------------------------------------------------------------- #
+#: bound on capacity-degrade re-executions: halving morsel_rows from any
+#: sane starting point down to 8 plus a few working-capacity doublings
+#: fits comfortably; past this the overflow is not capacity-shaped.
+_MAX_DEGRADE_BUILD = 8
+_MAX_DEGRADE_SEG = 24
+
+
 def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                morsel_rows: int, mode: str = "bsp",
                collect_stats: bool = False, shuffle_impl: str = "radix",
                a2a_chunks: int = 1, capacity_factor: float = 2.0,
                samples: int = 64, debug_overflow: bool = False,
-               tracer=None):
+               tracer=None, retries=None, timeout=None, overflow=None,
+               faults=None):
     """Stream a plan over morsels of ``morsel_rows`` rows per rank.
 
     Returns a host-resident ``SpillTable`` (or ``(SpillTable, ExecStats)``
@@ -532,12 +551,33 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     ``tracer`` (``repro.obs.Tracer``) records build/segment/combine spans,
     per-morsel dispatch spans with spill-append volumes, and per-shuffle
     data events — driver-side only, never part of a compile-cache key.
+
+    Fault tolerance (``repro.faults``, ``docs/fault_tolerance.md``): each
+    segment's input spill is a schema-stamped ``core.store.Checkpoint``; a
+    segment attempt that faults (``retries`` replays with backoff, fenced
+    by ``timeout``) is replayed from that checkpoint verbatim, and its
+    partial output spill is discarded — committed results come only from
+    the attempt that succeeded, so recovered runs are bit-identical to
+    fault-free ones.  ``overflow`` (default ``degrade``) re-executes an
+    overflowing segment with halved ``morsel_rows`` (then grown working
+    capacity) until no row is dropped; ``faults`` arms a deterministic
+    ``FaultPlan`` (None consults ``REPRO_FAULTS``).
     """
     if mode == "amt":
         raise ValueError(
             "out-of-core morsel execution requires direct shuffles; the "
             "amt allgather baseline is inherently in-core")
     tr = tracer if tracer is not None else NULL_TRACER
+    reset_overflow_warnings()
+    fr = resolve_faults(faults)
+    policy = resolve_retry(retries)
+    token = resolve_token(timeout)
+    ovf = resolve_overflow(overflow)
+    counters = {"retries": 0, "degraded": 0}
+
+    def _count_retry(attempt, exc):
+        counters["retries"] += 1
+
     p = env.parallelism
     chain = spine(pplan)
     src_name = chain[0].params["name"]
@@ -559,87 +599,213 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         if node.op != "join":
             continue
         t0 = time.perf_counter() if timing else 0.0
-        residents[node.nid] = _build_resident(
-            env, node, tables, shuffle_impl, a2a_chunks, collected, acc,
-            capacity_factor, tracer=tr)
+        jname = f"build:join({node.params['on']})"
+        cf = capacity_factor
+        for _ in range(_MAX_DEGRADE_BUILD):
+            def _build_once(_node=node, _cf=cf, _jname=jname):
+                token.check(_jname)
+                # corrupt-capacity scales the build headroom (part of the
+                # compile key, so a corrupted build compiles separately
+                # and cannot poison the clean cache entry)
+                scale = fr.capacity("build:resident", 256, token=token,
+                                    join=_node.nid) / 256.0
+                pairs: List[Tuple[str, Any]] = []
+                dist = _build_resident(env, _node, tables, shuffle_impl,
+                                       a2a_chunks, pairs, acc, _cf * scale,
+                                       tracer=tr)
+                return dist, pairs
+
+            dist, pairs = run_with_retries(
+                _build_once, policy=policy, token=token, tracer=tr,
+                label=jname, on_retry=_count_retry)
+            _, _, b_drop = _sum_stats([a for _, a in pairs])
+            if b_drop and ovf == OverflowPolicy.DEGRADE:
+                counters["degraded"] += 1
+                cf *= 2.0
+                continue
+            if b_drop and ovf == OverflowPolicy.RAISE:
+                raise CapacityOverflow(
+                    f"{jname} dropped {b_drop} rows at "
+                    f"capacity_factor={cf} (overflow='raise')")
+            break
+        else:
+            raise CapacityOverflow(
+                f"{jname} still dropping rows after "
+                f"{_MAX_DEGRADE_BUILD} capacity doublings "
+                f"(capacity_factor={cf})")
+        residents[node.nid] = dist
+        collected.extend(pairs)
         if timing:
             jax.block_until_ready(residents[node.nid].row_counts)
-            stage_times.append((f"build:join({node.params['on']})",
-                                time.perf_counter() - t0))
+            stage_times.append((jname, time.perf_counter() - t0))
 
-    spill = _as_spill(tables[src_name], p)
-    for si, (nodes, terminal) in enumerate(segments(chain[1:])):
-        t0 = time.perf_counter() if timing else 0.0
-        seg_name = f"segment:{si}:{terminal}"
-        with tr.span(seg_name, "stage",
-                     ops=",".join(n.op for n in nodes)) as seg_sp:
-            if terminal == "sort":
-                node = nodes[0]
-                by = node.params["by"]
-                if node.params.get("elide_shuffle"):
+    def _respill():
+        token.check("spill:respill")
+        fr.check("spill:respill", token=token)
+        return _as_spill(tables[src_name], p)
+
+    spill = run_with_retries(_respill, policy=policy, token=token,
+                             tracer=tr, label="spill:respill",
+                             on_retry=_count_retry)
+
+    live_ckpts: List[Checkpoint] = []
+    try:
+        for si, (nodes, terminal) in enumerate(segments(chain[1:])):
+            t0 = time.perf_counter() if timing else 0.0
+            seg_name = f"segment:{si}:{terminal}"
+            with tr.span(seg_name, "stage",
+                         ops=",".join(n.op for n in nodes)) as seg_sp:
+                if terminal == "sort" and \
+                        nodes[0].params.get("elide_shuffle"):
                     # range-partitioned already: no device work, just order
-                    spill = _host_sort_ranks(spill, by)
+                    token.check(seg_name)
+                    spill = _host_sort_ranks(spill, nodes[0].params["by"])
                     if timing:
                         stage_times.append(
                             (seg_name, time.perf_counter() - t0))
                     continue
-                spl = _host_splitters(spill, by[0], p,
-                                      node.params.get("samples", samples))
-                extras: Tuple[Any, ...] = (jnp.asarray(spl),)
-                acc.h2d_bytes += spl.nbytes
-                prog = _make_sort_prog(node, W, shuffle_impl, a2a_chunks,
-                                       debug_overflow)
-                seg_labels = [f"sort({','.join(by)})"]
-            else:
-                join_nodes = [n for n in nodes if n.op == "join"]
-                extras = tuple(residents[n.nid] for n in join_nodes)
-                prog = _make_stream_prog(nodes, [n.nid for n in join_nodes],
-                                         W, shuffle_impl, a2a_chunks,
-                                         debug_overflow)
-                seg_labels = _seg_stat_labels(nodes)
-            key = ("morsel-seg", fp, si, M, W, shuffle_impl, a2a_chunks,
-                   env.communicator_name, debug_overflow,
-                   tuple(env._arg_sig(e) for e in extras))
-            source = MorselSource(spill, M, env, tracer=tr)
-            out_spill: Optional[SpillTable] = None
-            for mi, morsel in enumerate(source):
-                with tr.span(f"morsel[{mi}]", "morsel", segment=si):
-                    out, unit_stats = env.run(prog, morsel, *extras, key=key)
-                    acc.dispatches += 1
-                    acc.morsels += 1
-                    unit_pairs = pair_stat_labels(seg_labels, unit_stats)
-                    collected.extend(unit_pairs)
-                    if out_spill is None:
-                        out_spill = SpillTable(p, schema=_schema_of(out))
-                    b0 = acc.spill_bytes
-                    _append_out(out_spill, out, acc)
-                    tr.instant(f"spill:morsel[{mi}]", "spill", segment=si,
-                               bytes=acc.spill_bytes - b0)
-                    if tr.enabled:
-                        emit_shuffle_events(tr, unit_pairs, a2a_chunks)
-            acc.h2d_bytes += source.h2d_bytes
-            seg_sp.set(morsels=source.num_morsels,
-                       h2d_bytes=source.h2d_bytes)
-            spill = out_spill
-            if terminal == "groupby":
-                with tr.span(f"combine:groupby[{si}]", "stage"):
-                    spill = _combine_groupby(env, spill, nodes[-1], M, acc,
-                                             fp, si)
-            elif terminal == "sort":
-                with tr.span(f"host_sort({','.join(by)})", "stage"):
-                    spill = _host_sort_ranks(spill, by)
-        if timing:
-            stage_times.append((seg_name, time.perf_counter() - t0))
+
+                # the segment's input spill is its replay checkpoint:
+                # validated before every attempt, released only on commit
+                ckpt = Checkpoint(spill)
+                live_ckpts.append(ckpt)
+                M_seg, W_seg = M, W
+
+                def _segment_attempt(_nodes=nodes, _terminal=terminal,
+                                     _si=si, _seg_name=seg_name):
+                    seg_in = ckpt.validate()
+                    token.check(_seg_name)
+                    W_a = fr.capacity("segment:launch", W_seg, token=token,
+                                      segment=_si)
+                    if _terminal == "sort":
+                        node = _nodes[0]
+                        by = node.params["by"]
+                        spl = _host_splitters(
+                            seg_in, by[0], p,
+                            node.params.get("samples", samples))
+                        extras: Tuple[Any, ...] = (jnp.asarray(spl),)
+                        acc.h2d_bytes += spl.nbytes
+                        prog = _make_sort_prog(node, W_a, shuffle_impl,
+                                               a2a_chunks, debug_overflow)
+                        seg_labels = [f"sort({','.join(by)})"]
+                    else:
+                        join_nodes = [n for n in _nodes if n.op == "join"]
+                        extras = tuple(residents[n.nid]
+                                       for n in join_nodes)
+                        prog = _make_stream_prog(
+                            _nodes, [n.nid for n in join_nodes], W_a,
+                            shuffle_impl, a2a_chunks, debug_overflow)
+                        seg_labels = _seg_stat_labels(_nodes)
+                    key = ("morsel-seg", fp, _si, M_seg, W_a, shuffle_impl,
+                           a2a_chunks, env.communicator_name,
+                           debug_overflow,
+                           tuple(env._arg_sig(e) for e in extras))
+                    source = MorselSource(seg_in, M_seg, env, tracer=tr,
+                                          faults=fr, token=token)
+                    out_spill: Optional[SpillTable] = None
+                    pairs: List[Tuple[str, Any]] = []
+                    for mi, morsel in enumerate(source):
+                        with tr.span(f"morsel[{mi}]", "morsel",
+                                     segment=_si):
+                            if mi == 0:
+                                fr.check("morsel:compile", token=token,
+                                         segment=_si)
+                            fr.check("morsel:execute", token=token,
+                                     segment=_si, morsel=mi)
+                            out, unit_stats = env.run(prog, morsel,
+                                                      *extras, key=key)
+                            acc.dispatches += 1
+                            acc.morsels += 1
+                            unit_pairs = pair_stat_labels(seg_labels,
+                                                          unit_stats)
+                            pairs.extend(unit_pairs)
+                            if out_spill is None:
+                                out_spill = SpillTable(
+                                    p, schema=_schema_of(out))
+                            b0 = acc.spill_bytes
+                            fr.check("transfer:d2h", token=token,
+                                     segment=_si, morsel=mi)
+                            _append_out(out_spill, out, acc)
+                            fr.check("spill:append", token=token,
+                                     segment=_si, morsel=mi)
+                            tr.instant(f"spill:morsel[{mi}]", "spill",
+                                       segment=_si,
+                                       bytes=acc.spill_bytes - b0)
+                            if tr.enabled:
+                                emit_shuffle_events(tr, unit_pairs,
+                                                    a2a_chunks)
+                    acc.h2d_bytes += source.h2d_bytes
+                    res = out_spill
+                    if _terminal == "groupby":
+                        # the combiner runs inside the attempt: a fault
+                        # mid-combine replays the whole segment from its
+                        # input checkpoint (partials are discarded)
+                        with tr.span(f"combine:groupby[{_si}]", "stage"):
+                            res = _combine_groupby(env, res, _nodes[-1],
+                                                   M_seg, acc, fp, _si,
+                                                   faults=fr, token=token)
+                    elif _terminal == "sort":
+                        with tr.span(f"host_sort({','.join(by)})",
+                                     "stage"):
+                            res = _host_sort_ranks(res, by)
+                    return (res, pairs, source.num_morsels,
+                            source.h2d_bytes)
+
+                for _ in range(_MAX_DEGRADE_SEG):
+                    out_spill, attempt_pairs, seg_morsels, seg_h2d = \
+                        run_with_retries(_segment_attempt, policy=policy,
+                                         token=token, tracer=tr,
+                                         label=seg_name,
+                                         on_retry=_count_retry)
+                    _, _, seg_drop = _sum_stats(
+                        [a for _, a in attempt_pairs])
+                    if seg_drop and ovf == OverflowPolicy.DEGRADE:
+                        # never drop a row: replay smaller morsels against
+                        # the same working capacity (skew / join explosion
+                        # shrinks relative to W); once morsels bottom out,
+                        # grow the working capacity itself
+                        counters["degraded"] += 1
+                        if M_seg > 8:
+                            M_seg = max(8, _round8(M_seg // 2))
+                        else:
+                            W_seg = _round8(W_seg * 2)
+                        continue
+                    if seg_drop and ovf == OverflowPolicy.RAISE:
+                        raise CapacityOverflow(
+                            f"{seg_name} dropped {seg_drop} rows "
+                            f"(overflow='raise'); raise capacity_factor "
+                            f"or use overflow='degrade'")
+                    break
+                else:
+                    raise CapacityOverflow(
+                        f"{seg_name} still dropping rows after "
+                        f"{_MAX_DEGRADE_SEG} degrade steps "
+                        f"(morsel_rows={M_seg}, working_capacity={W_seg})")
+
+                # commit: only the successful attempt's stats are recorded
+                collected.extend(attempt_pairs)
+                ckpt.release()
+                seg_sp.set(morsels=seg_morsels, h2d_bytes=seg_h2d)
+                spill = out_spill
+            if timing:
+                stage_times.append((seg_name, time.perf_counter() - t0))
+    finally:
+        # a cancelled/failed query releases its checkpoints (the spills
+        # they guard belong to the run and are dropped with it)
+        for c in live_ckpts:
+            if not c.released:
+                c.release()
 
     spill = attach_dictionaries(spill, pplan.root)
     rows, byts, dropped = _sum_stats([a for _, a in collected])
     records = build_shuffle_records(collected)
-    if dropped:
+    if dropped and ovf == OverflowPolicy.WARN:
         where = describe_drops(records)
         warnings.warn(
             f"out-of-core execution dropped {dropped} rows to capacity "
             f"pressure ({where or 'unattributed'}) — raise capacity_factor "
-            f"(currently {capacity_factor}) or morsel_rows",
+            f"(currently {capacity_factor}) or morsel_rows, or use "
+            f"overflow='degrade' to trade speed for completeness",
             RuntimeWarning, stacklevel=2)
     if not collect_stats:
         return spill
@@ -653,6 +819,8 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         morsel_rows=M, morsels=acc.morsels, spill_bytes=acc.spill_bytes,
         h2d_bytes=acc.h2d_bytes, d2h_bytes=acc.d2h_bytes,
         wall_time_s=time.perf_counter() - t_query0,
-        stage_times=stage_times, shuffle_records=records)
+        stage_times=stage_times, shuffle_records=records,
+        retries=counters["retries"], degraded=counters["degraded"],
+        faults_injected=fr.injected)
     record_exec(stats, fp, stats.wall_time_s)
     return spill, stats

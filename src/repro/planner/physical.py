@@ -26,6 +26,7 @@ import dataclasses
 import hashlib
 import math
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -33,6 +34,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..comm import Communicator
+from ..faults import (CapacityOverflow, OverflowPolicy, resolve_faults,
+                      resolve_overflow, resolve_retry, resolve_token,
+                      run_with_retries)
 from ..obs.metrics import record_exec
 from ..obs.trace import NULL_TRACER
 from ..dataframe import ops_local
@@ -465,6 +469,10 @@ class ExecStats:
     #: across morsels); rows/bytes sum to rows_shuffled/bytes_shuffled
     shuffle_records: List["ShuffleRecord"] = \
         dataclasses.field(default_factory=list)
+    # -- fault tolerance (repro.faults; docs/fault_tolerance.md) ---------- #
+    retries: int = 0           # dispatch units replayed after a fault
+    degraded: int = 0          # capacity-degrade re-executions (overflow)
+    faults_injected: int = 0   # faults the active FaultPlan fired this query
 
 
 def check_scan_dictionaries(order: Sequence[LogicalNode],
@@ -523,6 +531,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                  mode: str = "bsp", collect_stats: bool = False,
                  shuffle_impl: str = "radix", a2a_chunks: int = 1,
                  morsel_rows: Optional[int] = None, tracer=None,
+                 retries=None, timeout=None, overflow=None, faults=None,
                  **morsel_kw):
     """Execute a lowered plan against DistTables on a ``CylonEnv``.
 
@@ -547,16 +556,41 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     compiled stage DAG in fixed-capacity morsels and the result is returned
     as a host-resident ``core.store.SpillTable``.  Extra ``morsel_kw``
     (``capacity_factor``, ``samples``, ``debug_overflow``) are forwarded.
+
+    Fault tolerance (``repro.faults``, ``docs/fault_tolerance.md``):
+    ``retries`` (None | int | ``RetryPolicy``) replays failed dispatch
+    units with exponential backoff; ``timeout`` (seconds or a
+    ``CancellationToken``) fences every dispatch and backoff sleep;
+    ``overflow`` (``raise | warn | degrade``, default ``degrade``) decides
+    what to do when capacity pressure drops rows — ``degrade`` re-executes
+    out-of-core until every row fits (observable drops require
+    ``collect_stats=True`` in-core; the morsel executor always counts).
+    ``faults`` arms a deterministic ``FaultPlan`` (None consults
+    ``REPRO_FAULTS``).  All of this is driver-side: with injection
+    disabled, compile-cache keys are identical to a run without the
+    harness.
     """
     if morsel_rows is not None:
         from .morsel import run_morsel
         return run_morsel(pplan, env, tables, morsel_rows, mode=mode,
                           collect_stats=collect_stats,
                           shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
-                          tracer=tracer, **morsel_kw)
+                          tracer=tracer, retries=retries, timeout=timeout,
+                          overflow=overflow, faults=faults, **morsel_kw)
     if morsel_kw:
         raise TypeError(f"unexpected kwargs without morsel_rows: "
                         f"{sorted(morsel_kw)}")
+    from ..dataframe.shuffle import reset_overflow_warnings
+    reset_overflow_warnings()
+    fr = resolve_faults(faults)
+    policy = resolve_retry(retries)
+    token = resolve_token(timeout)
+    ovf = resolve_overflow(overflow)
+    counters = {"retries": 0}
+
+    def _count_retry(attempt, exc):
+        counters["retries"] += 1
+
     tr = tracer if tracer is not None else NULL_TRACER
     names = pplan.scan_names
     missing = [n for n in names if n not in tables]
@@ -585,9 +619,56 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                           cache_misses=env.cache_misses - misses0,
                           wall_time_s=time.perf_counter() - t_query0,
                           stage_times=stage_times,
-                          shuffle_records=build_shuffle_records(pairs))
+                          shuffle_records=build_shuffle_records(pairs),
+                          retries=counters["retries"],
+                          faults_injected=fr.injected)
         record_exec(stats, fp, stats.wall_time_s)
         return stats
+
+    def finish(result, stats):
+        """Apply the overflow policy to a finished stats run: raise, warn
+        once (attributed), or degrade — replay the whole plan out-of-core
+        (drops are counted unconditionally there, and the morsel executor's
+        own degrade loop shrinks morsels until everything fits), then
+        re-scatter the spill back to a device-resident ``DistTable``."""
+        if not stats.rows_dropped or ovf == OverflowPolicy.WARN:
+            if stats.rows_dropped:
+                warnings.warn(
+                    f"capacity pressure dropped {stats.rows_dropped} rows "
+                    f"({describe_drops(stats.shuffle_records)}) — raise "
+                    f"capacities or use overflow='degrade'",
+                    RuntimeWarning, stacklevel=3)
+            return result, stats
+        if ovf == OverflowPolicy.RAISE:
+            raise CapacityOverflow(
+                f"capacity pressure dropped {stats.rows_dropped} rows "
+                f"({describe_drops(stats.shuffle_records)}); raise "
+                f"bucket/out capacities or use overflow='degrade'")
+        # degrade: the in-core capacities were wrong, so in-core replay
+        # cannot help — stream the plan out-of-core instead, starting at
+        # the scan tables' own per-rank capacity
+        from ..core.store import rescatter
+        from .morsel import run_morsel
+        caps = [t.capacity for t in (tables[n] for n in names)
+                if hasattr(t, "capacity")]
+        m0 = max(caps) if caps else 128
+        try:
+            spill, d_stats = run_morsel(
+                pplan, env, tables, m0, mode="bsp", collect_stats=True,
+                shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks, tracer=tr,
+                retries=policy, timeout=token,
+                overflow=OverflowPolicy.DEGRADE, faults=fr)
+        except ValueError as e:
+            raise CapacityOverflow(
+                f"capacity pressure dropped {stats.rows_dropped} rows "
+                f"({describe_drops(stats.shuffle_records)}) and the plan "
+                f"cannot degrade to out-of-core execution ({e}); raise "
+                f"capacities or handle overflow='raise'") from e
+        out = attach_dictionaries(rescatter(spill, env.parallelism), root)
+        d_stats.degraded += 1
+        d_stats.retries += stats.retries
+        d_stats.dispatches += stats.dispatches
+        return out, d_stats
 
     if mode == "bsp":
         def prog(ctx, *local_tables):
@@ -606,9 +687,20 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         with tr.span("stage:program", "stage", mode=mode,
                      stages=pplan.num_stages, dispatch=0) as sp:
             t0 = time.perf_counter() if timing else 0.0
-            res = env.run(prog, *[tables[n] for n in names],
-                          key=("bsp", fp, env.communicator_name,
-                               collect_stats, shuffle_impl, a2a_chunks))
+
+            def dispatch():
+                token.check("stage:program")
+                fr.check("stage:launch", token=token, stage=0)
+                if pplan.num_shuffles:
+                    for c in range(max(1, a2a_chunks)):
+                        fr.check("a2a:chunk", token=token, stage=0, chunk=c)
+                return env.run(prog, *[tables[n] for n in names],
+                               key=("bsp", fp, env.communicator_name,
+                                    collect_stats, shuffle_impl, a2a_chunks))
+
+            res = run_with_retries(dispatch, policy=policy, token=token,
+                                   tracer=tr, label="stage:program",
+                                   on_retry=_count_retry)
             sp.set(compiled=env.cache_misses > misses0)
             out = res[0] if collect_stats else res
             if timing:
@@ -621,7 +713,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                     a2a_chunks)
         if collect_stats:
             pairs = pair_stat_labels(plan_stat_labels(order), res[1])
-            return attach_dictionaries(out, root), mk_stats(1, pairs)
+            return finish(attach_dictionaries(out, root), mk_stats(1, pairs))
         return attach_dictionaries(out, root)
 
     if mode in ("bsp_staged", "amt"):
@@ -677,9 +769,24 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                          ops=",".join(n.op for n in unit)) as sp:
                 t0 = time.perf_counter() if timing else 0.0
                 m0 = env.cache_misses
-                res = env.run(prog, *args,
-                              key=(mode, fp, uidx, env.communicator_name,
-                                   collect_stats, shuffle_impl, a2a_chunks))
+                has_comm = any(n.is_comm() for n in unit)
+
+                def dispatch(_uidx=uidx, _args=args, _prog=prog,
+                             _has_comm=has_comm):
+                    token.check(unit_names[_uidx])
+                    fr.check("stage:launch", token=token, stage=_uidx)
+                    if _has_comm:
+                        for c in range(max(1, a2a_chunks)):
+                            fr.check("a2a:chunk", token=token, stage=_uidx,
+                                     chunk=c)
+                    return env.run(
+                        _prog, *_args,
+                        key=(mode, fp, _uidx, env.communicator_name,
+                             collect_stats, shuffle_impl, a2a_chunks))
+
+                res = run_with_retries(dispatch, policy=policy, token=token,
+                                       tracer=tr, label=unit_names[uidx],
+                                       on_retry=_count_retry)
                 sp.set(compiled=env.cache_misses > m0)
                 if collect_stats:
                     out_tuple, unit_stats = res
@@ -702,7 +809,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
 
         result = attach_dictionaries(values[root.nid], root)
         if collect_stats:
-            return result, mk_stats(dispatches, collected)
+            return finish(result, mk_stats(dispatches, collected))
         return result
 
     raise ValueError(f"unknown mode {mode!r}")

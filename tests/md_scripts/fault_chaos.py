@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Chaos suite: fault-tolerant execution on 8 devices under fixed-seed
+randomized fault plans (``repro.faults.random_plan``).
+
+1. Out-of-core join+groupby+sort pipeline under 8 randomized plans
+   (raise + short hangs at random sites/occurrences): every run completes
+   BIT-IDENTICAL to the fault-free reference with zero dropped rows, and
+   the sweep as a whole actually fired faults.
+2. In-core bsp_staged storm: consecutive stage-launch and all-to-all
+   chunk faults burn most of one unit's retry budget; recovery is
+   bit-identical.
+3. corrupt-capacity chaos: corrupted working capacities force the degrade
+   path; the result is still bit-identical (integer payloads + final
+   sort) with zero drops.
+
+When ``OBS_ARTIFACT_DIR`` is set (the CI chaos step sets it), a
+machine-readable summary of every chaos run lands there.
+"""
+
+import json
+
+import numpy as np
+
+from repro.core import CylonEnv, DistTable, Plan, execute
+from repro.faults import FaultPlan, RetryPolicy, random_plan
+
+rng = np.random.default_rng(11)
+N = 8_000
+ld = {"k": rng.integers(0, N // 2, N).astype(np.int32),
+      "v0": rng.integers(0, 100, N).astype(np.float32)}
+rd = {"k": rng.integers(0, N // 2, N).astype(np.int32),
+      "w": rng.integers(0, 100, N).astype(np.float32)}
+
+env = CylonEnv()
+assert env.parallelism == 8
+MORSEL = -(-N // 8 // 4) // 8 * 8          # rows/rank/4, 8-aligned
+
+# integer-valued payloads + a final sort: bit-identity is meaningful even
+# when recovery (or degrade) reshapes the execution
+pipe = (Plan.scan("l")
+        .join(Plan.scan("r"), on="k")
+        .groupby(["k"], {"v0": ["sum"], "w": ["max"]})
+        .sort(["k"]))
+tables = {"l": ld, "r": rd}
+
+ref, rst = execute(pipe, env, tables, morsel_rows=MORSEL,
+                   collect_stats=True, faults=False)
+assert rst.rows_dropped == 0
+ref_np = ref.to_numpy()
+assert ref_np["k"].size > 0
+
+runs = []
+
+# --- 1. randomized single/double faults, 8 fixed seeds ------------------ #
+fired_total = 0
+for seed in range(8):
+    fp = random_plan(seed, nfaults=2, kinds=("raise", "hang"),
+                     max_occurrence=4)
+    fp = FaultPlan(fp.specs, seed=fp.seed, hang_s=0.05)
+    out, st = execute(pipe, env, tables, morsel_rows=MORSEL,
+                      collect_stats=True, faults=fp)
+    assert st.rows_dropped == 0, (seed, st.rows_dropped)
+    got = out.to_numpy()
+    assert sorted(got) == sorted(ref_np)
+    for c in ref_np:
+        np.testing.assert_array_equal(ref_np[c], got[c], err_msg=str(fp))
+    assert st.retries >= st.faults_injected > 0 or st.faults_injected == 0
+    fired_total += st.faults_injected
+    runs.append({"phase": "random", "seed": seed, "plan": str(fp),
+                 "faults_injected": st.faults_injected,
+                 "retries": st.retries, "degraded": st.degraded,
+                 "rows_dropped": st.rows_dropped})
+assert fired_total > 0, "chaos sweep never fired a fault"
+print(f"random plans: {fired_total} faults fired across 8 seeds, "
+      f"0 rows dropped, bit-identical")
+
+# --- 2. in-core storm: consecutive faults burn most of the budget ------- #
+lt = DistTable.from_numpy(ld, 8)
+rt = DistTable.from_numpy(rd, 8)
+ic_tables = {"l": lt, "r": rt}
+ic_ref, _ = execute(pipe, env, ic_tables, mode="bsp_staged", a2a_chunks=2,
+                    collect_stats=True, faults=False)
+ic_ref_np = ic_ref.to_numpy()
+# @* fires on retry visits too: three stage launches + two a2a chunks in
+# a row fault before anything passes, so one unit eats 5 of its 6 retries
+out, st = execute(pipe, env, ic_tables, mode="bsp_staged", a2a_chunks=2,
+                  collect_stats=True,
+                  faults="stage:launch@*x3=raise;a2a:chunk@*x2=raise",
+                  retries=RetryPolicy(retries=6, backoff_s=0.001))
+assert st.faults_injected >= 3 and st.retries == st.faults_injected
+got = out.to_numpy()
+for c in ic_ref_np:
+    np.testing.assert_array_equal(ic_ref_np[c], got[c])
+runs.append({"phase": "storm", "plan": "stage:launch@*;a2a:chunk@*",
+             "faults_injected": st.faults_injected, "retries": st.retries,
+             "degraded": st.degraded, "rows_dropped": st.rows_dropped})
+print(f"in-core storm: {st.faults_injected} faults, recovered "
+      f"bit-identical")
+
+# --- 3. corrupt-capacity chaos: degrade, never drop --------------------- #
+out, st = execute(pipe, env, tables, morsel_rows=MORSEL, collect_stats=True,
+                  faults="segment:launch@*x2=corrupt-capacity;"
+                         "build:resident@0=corrupt-capacity")
+assert st.faults_injected > 0
+assert st.rows_dropped == 0, st.rows_dropped
+got = out.to_numpy()
+for c in ref_np:
+    np.testing.assert_array_equal(ref_np[c], got[c])
+runs.append({"phase": "corrupt", "plan": "segment+build corrupt-capacity",
+             "faults_injected": st.faults_injected, "retries": st.retries,
+             "degraded": st.degraded, "rows_dropped": st.rows_dropped})
+print(f"corrupt-capacity: {st.faults_injected} corruptions, "
+      f"{st.degraded} degrades, 0 rows dropped, bit-identical")
+
+art = os.environ.get("OBS_ARTIFACT_DIR")
+if art:
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "fault_chaos.json"), "w") as f:
+        json.dump({"rows": N, "parallelism": 8, "morsel_rows": MORSEL,
+                   "runs": runs}, f, indent=1, sort_keys=True)
+    print(f"chaos artifacts -> {art}/fault_chaos.json")
+
+print("OK")

@@ -1,0 +1,443 @@
+"""Fault-tolerant execution (``repro.faults``, ``docs/fault_tolerance.md``).
+
+The central property: ANY single injected fault at ANY registered site is
+recovered by checkpoint replay + retry, and the recovered result is
+**bit-identical** to the fault-free run — committed outputs come only from
+the attempt that succeeded.  Around it: the deterministic fault plan
+machinery, overflow policies, deadlines/cancellation, checkpoint guards,
+the chunked all-to-all validation, warning dedupe, and the
+zero-overhead-when-disabled compile-cache invariant.
+"""
+
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+try:  # optional: the randomized property test; the deterministic
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # sweep below covers every site without it
+    HAVE_HYPOTHESIS = False
+
+from repro import flags  # noqa: E402
+from repro.comm import get_communicator  # noqa: E402
+from repro.core.env import CylonEnv, DistTable  # noqa: E402
+from repro.core.plan import Plan, execute  # noqa: E402
+from repro.core.store import Checkpoint, SpillTable  # noqa: E402
+from repro.expr import col  # noqa: E402
+from repro.faults import (SITES, CancellationToken, CapacityOverflow,  # noqa: E402
+                          FaultPlan, FaultSpec, InjectedFault,
+                          OverflowPolicy, QueryCancelled, QueryTimeout,
+                          RetryPolicy, parse_fault_plan, random_plan,
+                          resolve_faults)
+
+# ---------------------------------------------------------------------- #
+# Shared single-device env + canonical queries (built lazily, reused so
+# hypothesis examples pay compile cost once)
+# ---------------------------------------------------------------------- #
+_STATE: dict = {}
+
+
+def _env() -> CylonEnv:
+    if "env" not in _STATE:
+        _STATE["env"] = CylonEnv()
+    return _STATE["env"]
+
+
+def _morsel_case():
+    """Out-of-core query visiting every morsel-executor fault site:
+    resident join build, streamed filter+join segment, groupby combine."""
+    if "morsel" not in _STATE:
+        n = 96
+        tables = {
+            "l": {"k": (np.arange(n) % 7).astype(np.int32),
+                  "v0": np.linspace(0.0, 1.0, n).astype(np.float32)},
+            "r": {"k": np.arange(7, dtype=np.int32),
+                  "w": (np.arange(7) * 2.0).astype(np.float32)},
+        }
+        plan = (Plan.scan("l").filter(col("v0") >= 0.0)
+                .join(Plan.scan("r"), on="k")
+                .groupby(["k"], {"v0": ["sum"]}))
+        sp, stats = execute(plan, _env(), tables, morsel_rows=32,
+                            collect_stats=True, faults=False)
+        assert stats.rows_dropped == 0 and stats.retries == 0
+        _STATE["morsel"] = (plan, tables, sp.to_numpy())
+        _STATE["morsel_count"] = stats.morsels
+    return _STATE["morsel"]
+
+
+def _staged_case():
+    """In-core bsp_staged query (covers stage:launch / a2a:chunk)."""
+    if "staged" not in _STATE:
+        n = 128
+        tables = {"l": DistTable.from_numpy(
+            {"k": (np.arange(n) % 11).astype(np.int32),
+             "v0": np.arange(n, dtype=np.float32)}, _env().parallelism)}
+        plan = Plan.scan("l").groupby(["k"], {"v0": ["sum", "count"]})
+        out, stats = execute(plan, _env(), tables, mode="bsp_staged",
+                             collect_stats=True, faults=False)
+        assert stats.retries == 0
+        _STATE["staged"] = (plan, tables, out.to_numpy())
+    return _STATE["staged"]
+
+
+def _assert_same(ref, got):
+    assert sorted(ref) == sorted(got)
+    for c in ref:
+        np.testing.assert_array_equal(ref[c], got[c])
+
+
+# ---------------------------------------------------------------------- #
+# THE property: one fault anywhere -> recovered, bit-identical
+# ---------------------------------------------------------------------- #
+def _check_single_fault(site: str, at: int, require_fire: bool = False):
+    plan_obj = FaultPlan((FaultSpec(site, kind="raise", at=at),))
+    if site in ("stage:launch", "a2a:chunk"):
+        qplan, tables, ref = _staged_case()
+        out, stats = execute(qplan, _env(), tables, mode="bsp_staged",
+                             collect_stats=True, faults=plan_obj)
+    else:
+        qplan, tables, ref = _morsel_case()
+        out, stats = execute(qplan, _env(), tables, morsel_rows=32,
+                             collect_stats=True, faults=plan_obj)
+    _assert_same(ref, out.to_numpy())
+    assert stats.rows_dropped == 0
+    if require_fire:
+        assert stats.faults_injected == 1, f"site {site} never visited"
+    # if the site was visited often enough for the fault to fire, the
+    # recovery must be visible in the stats
+    if stats.faults_injected:
+        assert stats.retries > 0, f"site {site} fault not retried"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=24, deadline=None)
+    @given(site=st.sampled_from(SITES), at=st.integers(0, 2))
+    def test_single_fault_any_site_recovers_bit_identical(site, at):
+        _check_single_fault(site, at)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_single_fault_any_site_recovers_bit_identical():
+        pass
+
+
+def test_single_fault_every_site_fires_and_recovers():
+    """Deterministic sweep at occurrence 0: every registered site is
+    actually visited by the canonical queries (the randomized property
+    would silently pass on a never-visited site)."""
+    for site in SITES:
+        _check_single_fault(site, at=0, require_fire=True)
+
+
+# ---------------------------------------------------------------------- #
+# Fixed adversarial cases
+# ---------------------------------------------------------------------- #
+def test_fault_during_resident_build_spill():
+    # the build side is evaluated+shuffled once and kept device-resident;
+    # a fault there must replay the whole build, not leave a torn resident
+    qplan, tables, ref = _morsel_case()
+    out, stats = execute(qplan, _env(), tables, morsel_rows=32,
+                         collect_stats=True,
+                         faults="build:resident@0=raise")
+    assert stats.faults_injected == 1 and stats.retries > 0
+    _assert_same(ref, out.to_numpy())
+
+
+def test_fault_on_last_morsel():
+    # 96 rows / 32-row morsels = 3 morsels in the first streamed segment
+    # (occurrence 2 is its last); the fault-free run's morsel count gives
+    # the last morsel of the whole query.  A faulted last morsel means the
+    # attempt's nearly-complete output spill is discarded wholesale and
+    # rebuilt, not re-appended
+    qplan, tables, ref = _morsel_case()
+    total = _STATE["morsel_count"]
+    for occ in (2, total - 1):
+        out, stats = execute(qplan, _env(), tables, morsel_rows=32,
+                             collect_stats=True,
+                             faults=f"morsel:execute@{occ}=raise")
+        assert stats.faults_injected == 1 and stats.retries > 0
+        _assert_same(ref, out.to_numpy())
+
+
+def test_hang_fault_expires_and_is_retried():
+    qplan, tables, ref = _morsel_case()
+    plan_obj = FaultPlan((FaultSpec("morsel:execute", kind="hang", at=1),),
+                         hang_s=0.05)
+    out, stats = execute(qplan, _env(), tables, morsel_rows=32,
+                         collect_stats=True, faults=plan_obj)
+    assert stats.retries > 0
+    _assert_same(ref, out.to_numpy())
+
+
+def test_timeout_mid_backoff():
+    # a persistent fault + slow backoff: the deadline must fire from
+    # inside the backoff sleep, not wait for the next dispatch
+    qplan, tables, _ = _staged_case()
+    plan_obj = FaultPlan((FaultSpec("stage:launch", kind="raise",
+                                    at=0, times=99),))
+    pol = RetryPolicy(retries=50, backoff_s=0.5, backoff_max_s=0.5)
+    t0 = time.monotonic()
+    with pytest.raises(QueryTimeout):
+        execute(qplan, _env(), tables, mode="bsp_staged",
+                collect_stats=True, faults=plan_obj, retries=pol,
+                timeout=0.3)
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_hang_fault_respects_deadline():
+    qplan, tables, _ = _staged_case()
+    plan_obj = FaultPlan((FaultSpec("stage:launch", kind="hang",
+                                    at=0, times=99),), hang_s=30.0)
+    t0 = time.monotonic()
+    with pytest.raises(QueryTimeout):
+        execute(qplan, _env(), tables, mode="bsp_staged",
+                faults=plan_obj, timeout=0.3)
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_cancellation_token():
+    qplan, tables, _ = _staged_case()
+    tok = CancellationToken()
+    tok.cancel("shed load")
+    with pytest.raises(QueryCancelled, match="shed load"):
+        execute(qplan, _env(), tables, mode="bsp_staged", timeout=tok)
+
+
+def test_retries_exhausted_raises_injected_fault():
+    # at=None fires on EVERY visit, so replays keep faulting until the
+    # retry budget runs out — the last injected fault surfaces as-is
+    qplan, tables, _ = _staged_case()
+    plan_obj = FaultPlan((FaultSpec("stage:launch", kind="raise",
+                                    at=None, times=99),))
+    with pytest.raises(InjectedFault):
+        execute(qplan, _env(), tables, mode="bsp_staged", faults=plan_obj,
+                retries=RetryPolicy(retries=2, backoff_s=0.001))
+
+
+def test_corrupt_capacity_degrades_and_recovers():
+    # a corrupted working capacity drops rows on the first attempt; the
+    # degrade loop must re-execute until the full result is produced
+    qplan, tables, ref = _morsel_case()
+    out, stats = execute(qplan, _env(), tables, morsel_rows=32,
+                         collect_stats=True,
+                         faults="segment:launch@0=corrupt-capacity")
+    assert stats.rows_dropped == 0
+    got = out.to_numpy()
+    rs, gs = np.argsort(ref["k"]), np.argsort(got["k"])
+    np.testing.assert_array_equal(ref["k"][rs], got["k"][gs])
+    # degrade legitimately reshapes morsels, so float32 sums may differ in
+    # the last bit (different accumulation order) — equal values, not bits
+    np.testing.assert_allclose(ref["v0_sum"][rs], got["v0_sum"][gs],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# FaultPlan machinery: parsing, determinism, validation
+# ---------------------------------------------------------------------- #
+def test_parse_fault_plan_syntax():
+    p = parse_fault_plan("morsel:execute@1x2=raise;spill:*=hang;seed=7")
+    assert p.seed == 7
+    assert p.specs[0] == FaultSpec("morsel:execute", kind="raise",
+                                   at=1, times=2)
+    assert p.specs[1].site == "spill:*" and p.specs[1].kind == "hang"
+    assert "morsel:execute@1x2=raise" in str(p)
+
+
+def test_fault_spec_rejects_unknown_site_and_kind():
+    with pytest.raises(ValueError, match="matches no registered site"):
+        FaultSpec("no:such:site")
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("morsel:execute", kind="explode")
+
+
+def test_fault_run_is_deterministic():
+    spec = "morsel:execute@1=raise"
+    r1, r2 = resolve_faults(spec), resolve_faults(spec)
+    for run in (r1, r2):
+        run.check("morsel:execute", morsel=0)      # occurrence 0: no fire
+    with pytest.raises(InjectedFault):
+        r1.check("morsel:execute", morsel=1)
+    with pytest.raises(InjectedFault):
+        r2.check("morsel:execute", morsel=1)
+    assert r1.injected == r2.injected == 1
+    # exhausted: occurrence 2 passes
+    r1.check("morsel:execute", morsel=2)
+
+
+def test_random_plan_deterministic():
+    a, b = random_plan(123, nfaults=3), random_plan(123, nfaults=3)
+    assert str(a) == str(b)
+    assert str(random_plan(124, nfaults=3)) != str(a)
+
+
+def test_repro_faults_flag_plumbing():
+    qplan, tables, ref = _staged_case()
+    with flags.fault_injection("stage:launch@0=raise"):
+        out, stats = execute(qplan, _env(), tables, mode="bsp_staged",
+                             collect_stats=True)
+    assert stats.faults_injected == 1 and stats.retries > 0
+    _assert_same(ref, out.to_numpy())
+
+
+def test_session_level_defaults():
+    import repro.df as rdf
+    n = 64
+    data = {"k": (np.arange(n) % 5).astype(np.int32),
+            "v": np.ones(n, np.float32)}
+    with rdf.session(faults="stage:launch@0=raise", retries=3) as env:
+        df = rdf.read_numpy(data, env=env)
+        out, stats = df.groupby("k").agg(v="sum").collect(
+            mode="bsp_staged", collect_stats=True)
+        assert stats.faults_injected == 1 and stats.retries > 0
+        # explicit per-call argument overrides the session default
+        _, stats2 = df.groupby("k").agg(v="sum").collect(
+            mode="bsp_staged", collect_stats=True, faults=False)
+        assert stats2.faults_injected == 0
+
+
+# ---------------------------------------------------------------------- #
+# Checkpoints (core.store.Checkpoint)
+# ---------------------------------------------------------------------- #
+def _spill(n=32, p=2):
+    return SpillTable.from_numpy(
+        {"k": np.arange(n, dtype=np.int32),
+         "v": np.ones(n, np.float32)}, p)
+
+
+def test_checkpoint_validate_roundtrip():
+    sp = _spill()
+    ck = Checkpoint(sp)
+    assert ck.validate() is sp           # replay reads the same spill
+    assert ck.validate() is sp           # any number of times
+    ck.release()
+    assert ck.released
+    with pytest.raises(RuntimeError, match="released"):
+        ck.validate()
+
+
+def test_checkpoint_detects_mutation():
+    sp = _spill()
+    ck = Checkpoint(sp)
+    sp.append(0, {"k": np.array([99], np.int32),
+                  "v": np.array([1.0], np.float32)})
+    with pytest.raises(RuntimeError, match="changed since"):
+        ck.validate()
+
+
+def test_checkpoint_refcount():
+    ck = Checkpoint(_spill())
+    ck.retain()
+    ck.release()
+    assert not ck.released               # one reference still held
+    ck.validate()
+    ck.release()
+    assert ck.released
+    with pytest.raises(RuntimeError, match="released"):
+        ck.retain()
+
+
+# ---------------------------------------------------------------------- #
+# Chunked all-to-all validation (satellite: clear errors up front)
+# ---------------------------------------------------------------------- #
+def test_all_to_all_chunked_validates_chunks():
+    comm = get_communicator("xla", "df")
+    x = np.zeros((2, 4, 3), np.float32)
+    with pytest.raises(ValueError, match="chunks must be a positive int"):
+        comm.all_to_all_chunked(x, chunks=0)
+    with pytest.raises(ValueError, match="chunks must be a positive int"):
+        comm.all_to_all_chunked(x, chunks=-2)
+    with pytest.raises(ValueError, match="chunks must be a positive int"):
+        comm.all_to_all_chunked(x, chunks=2.5)
+    with pytest.raises(ValueError, match="chunks must be a positive int"):
+        comm.all_to_all_chunked(x, chunks=True)
+    with pytest.raises(ValueError,
+                       match=r"capacity axis \(axis 1, 4 rows\) into 9"):
+        comm.all_to_all_chunked(x, chunks=9)
+    with pytest.raises(ValueError, match=r"got shape \(5,\)"):
+        comm.all_to_all_chunked(np.zeros((5,), np.float32), chunks=2)
+
+
+# ---------------------------------------------------------------------- #
+# Overflow warning dedupe (satellite: once per (label, rank) per query)
+# ---------------------------------------------------------------------- #
+def test_overflow_warning_deduped_per_label_and_rank():
+    # the morsel executor fires the debug_overflow callback once per
+    # shuffle PER MORSEL per rank; dedupe to one warning per (label, rank)
+    # per query, reset at the next query start
+    from repro.dataframe.shuffle import (_overflow_warn,
+                                         reset_overflow_warnings)
+    reset_overflow_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        for _ in range(5):                       # 5 morsels, same site
+            _overflow_warn(0, 8, 0, label="join(k):left")
+        _overflow_warn(1, 8, 0, label="join(k):left")   # other rank
+        _overflow_warn(0, 0, 4, label="groupby(k)")     # other op
+        _overflow_warn(0, 0, 0, label="sort(k)")        # no drop: silent
+    msgs = [str(w.message) for w in rec]
+    assert len(msgs) == 3
+    assert sum("join(k):left @ rank 0" in m for m in msgs) == 1
+    assert sum("join(k):left @ rank 1" in m for m in msgs) == 1
+    assert sum("groupby(k) @ rank 0" in m for m in msgs) == 1
+    reset_overflow_warnings()                    # next query warns afresh
+    with pytest.warns(RuntimeWarning, match=r"join\(k\):left @ rank 0"):
+        _overflow_warn(0, 8, 0, label="join(k):left")
+
+
+def test_overflow_summary_warns_once_per_query():
+    # an exploding join drops on every morsel under overflow="warn"; the
+    # end-of-query summary must be ONE warning attributing the total
+    env = _env()
+    tables = {"l": {"k": np.zeros(64, np.int32),
+                    "v0": np.ones(64, np.float32)},
+              "r": {"k": np.zeros(16, np.int32),
+                    "w": np.ones(16, np.float32)}}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        _, stats = execute(plan, env, tables, optimize=False,
+                           morsel_rows=16, collect_stats=True,
+                           overflow="warn")
+    assert stats.rows_dropped > 0
+    summary = [w for w in rec
+               if "out-of-core execution dropped" in str(w.message)]
+    assert len(summary) == 1
+    assert str(stats.rows_dropped) in str(summary[0].message)
+
+
+# ---------------------------------------------------------------------- #
+# Zero overhead when disabled: identical compile-cache keys
+# ---------------------------------------------------------------------- #
+def test_injection_disabled_compiles_nothing_new():
+    qplan, tables, _ = _morsel_case()
+    env = _env()
+    keys0 = set(env._cache)
+    m0 = env.cache_misses
+    # same query, fault-tolerance knobs at defaults + explicit: no new
+    # compiled programs, so the keys cannot depend on the harness
+    for kw in ({}, {"retries": 5, "timeout": 60.0, "faults": False,
+                    "overflow": "degrade"}):
+        _, stats = execute(qplan, env, tables, morsel_rows=32,
+                           collect_stats=True, **kw)
+        assert stats.cache_misses == 0
+    assert set(env._cache) == keys0
+    assert env.cache_misses == m0
+
+
+def test_overflow_policy_validation():
+    qplan, tables, _ = _staged_case()
+    with pytest.raises(ValueError, match="overflow"):
+        execute(qplan, _env(), tables, overflow="explode")
+    assert OverflowPolicy.ALL == ("raise", "warn", "degrade")
+
+
+def test_explain_analyze_reports_retries():
+    from repro.obs.analyze import run_analyzed
+    qplan, tables, _ = _staged_case()
+    _, report = run_analyzed(qplan, _env(), tables, mode="bsp_staged",
+                             faults="stage:launch@0=raise")
+    text = report.explain_analyze()
+    assert "retries=1" in text and "degraded=0" in text
+    assert report.to_dict()["retries"] == 1

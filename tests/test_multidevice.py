@@ -98,3 +98,8 @@ def test_data_pipeline():
 @pytest.mark.multidevice
 def test_explain_analyze_fig9():
     _run("explain_analyze_fig9.py")
+
+
+@pytest.mark.multidevice
+def test_fault_chaos():
+    _run("fault_chaos.py")

@@ -306,7 +306,7 @@ def test_morsel_drop_warning_attributes_loss(rng):
     with pytest.warns(RuntimeWarning,
                       match=r"capacity pressure \(join\(k\).*@ rank 0"):
         execute(plan, env, {"l": ld, "r": rd}, optimize=False,
-                morsel_rows=16)
+                morsel_rows=16, overflow="warn")
 
 
 # ---------------------------------------------------------------------- #

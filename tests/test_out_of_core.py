@@ -166,18 +166,53 @@ def test_morsel_respills_mismatched_parallelism(rng):
 
 def test_morsel_warns_on_capacity_pressure(rng):
     # an exploding all-equal-key join overflows the per-morsel working
-    # capacity; the loss must be loud even without collect_stats
+    # capacity; under overflow="warn" the loss must be loud even without
+    # collect_stats (the default "degrade" policy instead recovers —
+    # see test_morsel_degrade_recovers_every_row)
     env = CylonEnv()
     ld = {"k": np.zeros(64, np.int32), "v0": np.ones(64, np.float32)}
     rd = {"k": np.zeros(64, np.int32), "w": np.ones(64, np.float32)}
     plan = Plan.scan("l").join(Plan.scan("r"), on="k")
     with pytest.warns(RuntimeWarning, match="out-of-core execution dropped"):
         execute(plan, env, {"l": ld, "r": rd}, optimize=False,
-                morsel_rows=16)
+                morsel_rows=16, overflow="warn")
     with pytest.warns(RuntimeWarning):
         _, st = execute(plan, env, {"l": ld, "r": rd}, optimize=False,
-                        morsel_rows=16, collect_stats=True)
+                        morsel_rows=16, collect_stats=True, overflow="warn")
     assert st.rows_dropped > 0
+
+
+def test_morsel_degrade_recovers_every_row(rng):
+    # the default policy: the same exploding join re-executes with halved
+    # morsels / grown working capacity until every row fits — zero drops,
+    # result identical to an amply-capacitated run
+    env = CylonEnv()
+    ld = {"k": np.zeros(64, np.int32),
+          "v0": np.arange(64, dtype=np.float32)}
+    rd = {"k": np.zeros(8, np.int32), "w": np.arange(8, dtype=np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k")
+    sp, st = execute(plan, env, {"l": ld, "r": rd}, optimize=False,
+                     morsel_rows=16, collect_stats=True)
+    assert st.rows_dropped == 0
+    assert st.degraded > 0
+    out = sp.to_numpy()
+    assert len(out["k"]) == 64 * 8
+    order = np.lexsort((out["w"], out["v0"]))
+    ref_v = np.repeat(np.arange(64, dtype=np.float32), 8)
+    ref_w = np.tile(np.arange(8, dtype=np.float32), 64)
+    np.testing.assert_array_equal(out["v0"][order], ref_v)
+    np.testing.assert_array_equal(out["w"][order], ref_w)
+
+
+def test_morsel_overflow_raise_policy(rng):
+    from repro.faults import CapacityOverflow
+    env = CylonEnv()
+    ld = {"k": np.zeros(64, np.int32), "v0": np.ones(64, np.float32)}
+    rd = {"k": np.zeros(64, np.int32), "w": np.ones(64, np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k")
+    with pytest.raises(CapacityOverflow, match="dropped"):
+        execute(plan, env, {"l": ld, "r": rd}, optimize=False,
+                morsel_rows=16, overflow="raise")
 
 
 def test_morsel_rejects_amt_and_dest_shuffle(rng):
@@ -230,7 +265,9 @@ def test_rows_dropped_counts_shuffle_overflow(rng):
     data = _exact_data(rng, 128)
     t = DistTable.from_numpy(data, 1)
     plan = Plan.scan("l").shuffle(["k"], out_capacity=32)
-    _, st = execute(plan, env, {"l": t}, optimize=False, collect_stats=True)
+    with pytest.warns(RuntimeWarning, match="capacity pressure"):
+        _, st = execute(plan, env, {"l": t}, optimize=False,
+                        collect_stats=True, overflow="warn")
     assert st.rows_dropped == 128 - 32    # deterministic, post-hoc
 
 
@@ -239,10 +276,28 @@ def test_rows_dropped_counts_join_overflow(rng):
     ld = {"k": np.zeros(32, np.int32), "v0": np.arange(32, dtype=np.float32)}
     rd = {"k": np.zeros(32, np.int32), "w": np.arange(32, dtype=np.float32)}
     plan = Plan.scan("l").join(Plan.scan("r"), on="k", out_capacity=64)
-    _, st = execute(plan, env, {"l": DistTable.from_numpy(ld, 1),
-                                "r": DistTable.from_numpy(rd, 1)},
-                    optimize=False, collect_stats=True)
+    with pytest.warns(RuntimeWarning, match="capacity pressure"):
+        _, st = execute(plan, env, {"l": DistTable.from_numpy(ld, 1),
+                                    "r": DistTable.from_numpy(rd, 1)},
+                        optimize=False, collect_stats=True, overflow="warn")
     assert st.rows_dropped == 32 * 32 - 64
+
+
+def test_in_core_degrade_recovers_join_overflow(rng):
+    # default policy on the same under-capacitated join: the in-core run
+    # detects the drop and replays the plan out-of-core, re-scattering the
+    # complete result back to a DistTable — no rows lost
+    env = CylonEnv()
+    ld = {"k": np.zeros(32, np.int32), "v0": np.arange(32, dtype=np.float32)}
+    rd = {"k": np.zeros(32, np.int32), "w": np.arange(32, dtype=np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k", out_capacity=64)
+    out, st = execute(plan, env, {"l": DistTable.from_numpy(ld, 1),
+                                  "r": DistTable.from_numpy(rd, 1)},
+                      optimize=False, collect_stats=True)
+    assert st.rows_dropped == 0
+    assert st.degraded > 0
+    assert isinstance(out, DistTable)
+    assert out.total_rows() == 32 * 32
 
 
 def test_debug_overflow_warns_on_drop(rng):
