@@ -25,6 +25,9 @@ if __name__ == "__main__":  # direct CLI use needs the 8-device CPU backend
     os.environ.setdefault("XLA_FLAGS",
                           "--xla_force_host_platform_device_count=8")
 
+import time
+from typing import Dict
+
 import jax
 import numpy as np
 
@@ -377,6 +380,98 @@ def run_faults(global_rows: int = 100_000, which: str = "off",
         raise ValueError(f"unknown --faults mode {which!r}")
 
 
+def run_serving(global_rows: int = 100_000, k: int = 4,
+                queries_per_gang: int = 6) -> None:
+    """Concurrent multi-query serving vs serial submission
+    (``docs/serving.md``): ``k`` gangs of ``n_dev // k`` devices carved
+    from one ``DevicePool`` by a ``QueryScheduler`` sharing one
+    ``ProgramCache``.
+
+    The same ``k * queries_per_gang`` mixed Fig-9-style queries are
+    submitted twice — with ``max_inflight=1`` (serial: one gang busy at a
+    time) and ``max_inflight=k`` (concurrent: every gang busy) — and both
+    sweeps record queries/sec plus p50/p99 end-to-end latency
+    (submit -> result, so concurrent latencies include queue wait).  The
+    shared cache is pre-warmed on every partition, so neither sweep pays
+    compile cost and every handle must report ``cache_misses == 0``.
+    """
+    import repro.df as rdf
+    from repro.core import DevicePool
+    from repro.expr import col
+    from repro.serve import ProgramCache, QueryScheduler
+
+    n_dev = len(jax.devices())
+    if k < 1 or n_dev % k:
+        raise ValueError(f"--serve {k} must divide the {n_dev} devices")
+    gang = n_dev // k
+    ld = make_table_data(global_rows, seed=0, exact_values=True)
+    rd = make_table_data(global_rows, seed=1, exact_values=True)
+    rd["w"] = rd.pop("v0")
+    lt = DistTable.from_numpy(ld, gang)
+    rt = DistTable.from_numpy(rd, gang)
+    cap = lt.capacity
+    left = rdf.from_table(lt, name="l")      # not pinned to any env:
+    right = rdf.from_table(rt, name="r")     # runs on whichever gang
+    jkw = dict(out_capacity=cap * 4, bucket_capacity=cap * 2,
+               shuffle_out_capacity=cap * 2)
+    queries = [
+        lambda: (left.merge(right, on="k", **jkw)
+                 [(col("v0") > 4) & (col("w") < 250)]
+                 .groupby("k").agg({"v0": ["sum"]}).sort_values("k")),
+        lambda: (left.groupby("k").agg({"v0": ["sum", "mean"]})
+                 .sort_values("k")),
+        lambda: left[col("v0") > 64].sort_values("k"),
+    ]
+
+    shared = ProgramCache(registry=False)
+    pool = DevicePool()
+    # pre-warm every partition so neither sweep measures compilation
+    for g in range(k):
+        env = CylonEnv(jax.devices()[g * gang:(g + 1) * gang],
+                       program_cache=shared)
+        for q in queries:
+            q().collect(env=env)
+    warm_misses = shared.misses
+
+    n_queries = k * queries_per_gang
+
+    def sweep(inflight: int) -> Dict:
+        sched = QueryScheduler(pool=pool, gang_size=gang,
+                               max_inflight=inflight, max_queue=n_queries,
+                               program_cache=shared,
+                               name=f"bench-x{inflight}")
+        t0 = time.perf_counter()
+        handles = [sched.submit(queries[i % len(queries)](),
+                                label=f"x{inflight}-{i}")
+                   for i in range(n_queries)]
+        for h in handles:
+            h.result(timeout=600)
+        wall = time.perf_counter() - t0
+        sched.close()
+        assert all(h.stats["cache_misses"] == 0 for h in handles), \
+            "serving sweep recompiled a warm program"
+        lat = sorted(h.stats["finished_monotonic"]
+                     - h.stats["submitted_monotonic"] for h in handles)
+        return {"wall": wall, "qps": n_queries / wall,
+                "p50": lat[len(lat) // 2], "p99": lat[-1]
+                if len(lat) < 100 else lat[int(len(lat) * 0.99)]}
+
+    serial = sweep(1)
+    concurrent = sweep(k)
+    assert shared.misses == warm_misses, "sweeps recompiled something"
+    for tag, s, inflight in (("serial", serial, 1),
+                             ("concurrent", concurrent, k)):
+        record("pipeline(Fig9-serve)", f"{tag}_k{k}_gang{gang}", s["wall"],
+               gangs=k, gang_size=gang, max_inflight=inflight,
+               queries=n_queries, rows=global_rows,
+               queries_per_s=round(s["qps"], 3),
+               latency_p50_s=round(s["p50"], 6),
+               latency_p99_s=round(s["p99"], 6))
+    record("pipeline(Fig9-serve)", f"speedup_concurrent_k{k}",
+           serial["wall"] / concurrent["wall"], gangs=k, gang_size=gang,
+           note="ratio not seconds")
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -396,9 +491,18 @@ if __name__ == "__main__":
                     default=None,
                     help="fault-tolerance bench: disabled-overhead / "
                          "single-fault recovery / randomized storm")
+    ap.add_argument("--serve", type=int, default=None, metavar="K",
+                    help="serving bench: K gangs of n_dev//K devices, "
+                         "serial vs concurrent submission (queries/sec, "
+                         "p50/p99 latency)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    if args.faults:
+    if args.serve:
+        json_path = args.json or "BENCH_pr8_serving.json"
+        run_serving(args.rows, args.serve)
+        dump_json(json_path, meta={"bench": "serving", "gangs": args.serve,
+                                   "rows": args.rows})
+    elif args.faults:
         json_path = args.json or "BENCH_pr7_fault_tolerance.json"
         run_faults(args.rows, args.faults)
         dump_json(json_path, meta={"bench": "fault_tolerance",

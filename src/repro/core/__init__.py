@@ -5,13 +5,14 @@ resource partitioning), ``Plan``/``execute`` (logical plan + coalescing, with
 the AMT baseline mode), ``CylonStore`` (downstream hand-off + repartition).
 """
 
-from .env import AXIS, CylonEnv, DevicePool, DistTable, EnvContext, MorselSource
+from .env import (AXIS, CylonEnv, DevicePool, DistTable, EnvContext, Lease,
+                  MorselSource, PoolExhausted)
 from .actor import CylonExecutor
 from .plan import Plan, execute
 from .store import CylonStore, SpillTable, repartition, rescatter
 
 __all__ = [
     "AXIS", "CylonEnv", "CylonExecutor", "CylonStore", "DevicePool",
-    "DistTable", "EnvContext", "MorselSource", "Plan", "SpillTable",
-    "execute", "repartition", "rescatter",
+    "DistTable", "EnvContext", "Lease", "MorselSource", "Plan",
+    "PoolExhausted", "SpillTable", "execute", "repartition", "rescatter",
 ]

@@ -24,13 +24,18 @@ class CylonExecutor:
     def __init__(self, parallelism: int, pool: Optional[DevicePool] = None,
                  communicator: str = "xla", axis: str = "df"):
         pool = pool or DevicePool()
-        self.devices = pool.reserve(parallelism)
+        self.lease = pool.reserve(parallelism)   # a core.env.Lease
+        self.devices = self.lease               # sequence view of the gang
         self.env = CylonEnv(self.devices, communicator=communicator, axis=axis)
         self._executable = None
 
     @property
     def parallelism(self) -> int:
         return self.env.parallelism
+
+    def release(self) -> None:
+        """Return the gang's devices to the pool (idempotent)."""
+        self.lease.release()
 
     # -- the paper's three endpoints ------------------------------------ #
     def start_executable(self, executable_cls: Callable, *args, **kwargs):

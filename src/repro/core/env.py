@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -204,28 +205,63 @@ class CylonEnv:
 
     Parameters
     ----------
-    devices:      explicit device list (a partition of the cluster), or None
-                  for all local devices.
-    communicator: registry name ("xla" | "ring" | "bruck").
+    devices:       explicit device list (a partition of the cluster, e.g. a
+                   ``DevicePool`` lease), or None for all local devices.
+    communicator:  registry name ("xla" | "ring" | "bruck").
+    program_cache: a ``repro.serve.cache.ProgramCache`` to share compiled
+                   programs with other envs (the serving scheduler passes
+                   one per process so a freshly carved gang reuses every
+                   program any earlier gang over the same devices built).
+                   Default: a private cache, preserving single-env
+                   semantics.
+
+    Thread safety: ``run`` may be called from many threads.  Program
+    lookups/builds go through the (locked, single-flight) program cache, so
+    two threads racing the same key compile once; the per-env hit/miss
+    counters are updated under a lock.
     """
 
     def __init__(self, devices: Optional[Sequence[jax.Device]] = None,
-                 communicator: str = "xla", axis: str = AXIS):
+                 communicator: str = "xla", axis: str = AXIS,
+                 program_cache: Optional[Any] = None):
+        # deferred import: repro.serve.cache is standalone, but its package
+        # __init__ must not be entered while core.env is still importing
+        from ..serve.cache import ProgramCache
         self.devices = list(devices if devices is not None else jax.devices())
         self.axis = axis
         self.mesh = jax.sharding.Mesh(np.asarray(self.devices), (axis,))
         self.comm: Communicator = get_communicator(communicator, axis)
         self.communicator_name = communicator
+        self.programs = (program_cache if program_cache is not None
+                         else ProgramCache())
+        #: compiled shard_map programs are mesh-bound, so the shared-cache
+        #: key pins the gang's placement: platform + device ids + axis +
+        #: communicator.  The DevicePool free-list hands out lowest ids
+        #: first, so a released-and-recarved gang hits these entries.
+        self._gang_key = (self.devices[0].platform if self.devices else "cpu",
+                          tuple(d.id for d in self.devices), axis,
+                          communicator)
+        #: env-local memo in front of the shared cache (also the
+        #: introspection surface tests use: ``set(env._cache)``)
         self._cache: Dict[Any, Callable] = {}
+        self._lock = threading.Lock()
         #: compile-cache observability: a miss builds (traces + compiles) a
-        #: program; a hit reuses one.  The morsel executor's per-morsel
-        #: zero-recompile invariant is asserted against these counters.
+        #: program; a hit reuses one — whether it was compiled by this env
+        #: or found in a shared program cache.  The morsel executor's
+        #: per-morsel zero-recompile invariant is asserted against these
+        #: counters.
         self.cache_hits = 0
         self.cache_misses = 0
 
     @property
     def parallelism(self) -> int:
         return len(self.devices)
+
+    def close(self) -> None:
+        """Drop this env's local program memo (shared ``programs`` entries
+        persist for the next gang carved over these devices)."""
+        with self._lock:
+            self._cache.clear()
 
     # ------------------------------------------------------------------ #
     # Table conversion at the shard_map boundary
@@ -258,14 +294,27 @@ class CylonEnv:
         cache_key = key if key is not None else (
             fn, tuple(sorted(static_kwargs)),
             tuple(self._arg_sig(a) for a in args))
-        compiled = self._cache.get(cache_key)
         boundary_args = tuple(self._to_boundary(a) for a in args)
+        with self._lock:
+            compiled = self._cache.get(cache_key)
         if compiled is None:
-            self.cache_misses += 1
-            compiled = self._build(fn, args, static_kwargs)
-            self._cache[cache_key] = compiled
+            # shared-cache path: single-flight build keyed by (program,
+            # gang placement).  A hit here — the program was compiled by an
+            # earlier env over the same devices, or by a racing thread —
+            # counts as a hit, so a freshly carved gang that reuses every
+            # program reports cache_misses == 0.
+            compiled, built = self.programs.get_or_build(
+                (cache_key, self._gang_key),
+                lambda: self._build(fn, args, static_kwargs))
+            with self._lock:
+                self._cache[cache_key] = compiled
+                if built:
+                    self.cache_misses += 1
+                else:
+                    self.cache_hits += 1
         else:
-            self.cache_hits += 1
+            with self._lock:
+                self.cache_hits += 1
         out_tree, caps = compiled(*boundary_args)
         return self._from_boundary(out_tree, caps)
 
@@ -321,8 +370,17 @@ class CylonEnv:
             shard_body, mesh=self.mesh, in_specs=in_specs,
             out_specs=P(self.axis), check_vma=False))
 
+        # serialize the first invocation: tracing fills treedef_box, and
+        # concurrent submitters sharing a just-built program must not race
+        # the trace (jit retraces for new shapes stay lock-free)
+        first_call = threading.Lock()
+
         def runner(*bargs):
-            out = mapped(*bargs)  # first call traces & fills treedef_box
+            if "treedef" not in treedef_box:
+                with first_call:
+                    out = mapped(*bargs)  # traces & fills treedef_box
+            else:
+                out = mapped(*bargs)
             return (treedef_box["treedef"], out), None
         return runner
 
@@ -357,20 +415,157 @@ class EnvContext:
 # ---------------------------------------------------------------------- #
 # Device pool: resource partitioning for independent applications (§IV-A)
 # ---------------------------------------------------------------------- #
+class PoolExhausted(RuntimeError):
+    """``DevicePool.reserve`` could not satisfy the request."""
+
+
+class Lease(Sequence):
+    """A disjoint device partition handed out by ``DevicePool.reserve``.
+
+    Behaves as a sequence of devices (so ``CylonEnv(lease)`` and existing
+    ``pool.reserve(n)[0]``-style code keep working) and carries its own
+    ``release()``; it is also a context manager::
+
+        with pool.reserve(2) as gang:
+            env = CylonEnv(gang)
+            ...
+        # devices returned to the free list here
+    """
+
+    __slots__ = ("_pool", "_indices", "devices", "_released")
+
+    def __init__(self, pool: "DevicePool", indices: Tuple[int, ...],
+                 devices: Tuple[jax.Device, ...]):
+        self._pool = pool
+        self._indices = indices
+        self.devices = devices
+        self._released = False
+
+    @property
+    def indices(self) -> Tuple[int, ...]:
+        return self._indices
+
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        """Return the partition to the pool (idempotent)."""
+        self._pool.release(self)
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def __getitem__(self, i):
+        return self.devices[i]
+
+    def __iter__(self):
+        return iter(self.devices)
+
+    def __enter__(self) -> "Lease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        state = "released" if self._released else "held"
+        return f"<Lease devices={[d.id for d in self.devices]} {state}>"
+
+
 class DevicePool:
-    """Carves the device list into disjoint partitions (gang scheduling)."""
+    """Carves the device list into disjoint partitions (gang scheduling).
+
+    A locked free-list replaces the old non-thread-safe bump pointer:
+    ``reserve(n)`` hands out the ``n`` lowest-indexed free devices as a
+    ``Lease`` that can be returned individually (``lease.release()`` /
+    ``pool.release(lease)``) — two threads can never be handed overlapping
+    partitions, and released partitions are re-carved lowest-ids-first so
+    a re-carved gang matches its predecessor's placement (which is what
+    lets the shared ``ProgramCache`` skip recompilation).  ``release_all``
+    is kept for tests and whole-epoch resets.
+
+    ``reserve(n, block=True)`` waits (optionally fenced by a
+    ``CancellationToken``) until ``n`` devices free up — the serving
+    scheduler's admission path.
+    """
 
     def __init__(self, devices: Optional[Sequence[jax.Device]] = None):
         self._devices = list(devices if devices is not None else jax.devices())
-        self._next = 0
+        self._cond = threading.Condition(threading.Lock())
+        self._free = list(range(len(self._devices)))  # kept sorted
+        self._leases: Dict[int, Lease] = {}           # id(lease) -> lease
 
-    def reserve(self, n: int) -> List[jax.Device]:
-        if self._next + n > len(self._devices):
-            raise RuntimeError(
-                f"pool exhausted: want {n}, have {len(self._devices) - self._next}")
-        out = self._devices[self._next:self._next + n]
-        self._next += n
-        return out
+    @property
+    def size(self) -> int:
+        return len(self._devices)
 
-    def release_all(self):
-        self._next = 0
+    @property
+    def available(self) -> int:
+        with self._cond:
+            return len(self._free)
+
+    @property
+    def devices(self) -> List[jax.Device]:
+        return list(self._devices)
+
+    def _try_reserve_locked(self, n: int) -> Optional[Lease]:
+        if n > len(self._free):
+            return None
+        take = tuple(self._free[:n])
+        del self._free[:n]
+        lease = Lease(self, take, tuple(self._devices[i] for i in take))
+        self._leases[id(lease)] = lease
+        return lease
+
+    def reserve(self, n: int, *, block: bool = False, token: Any = None,
+                poll_s: float = 0.05) -> Lease:
+        """Reserve the ``n`` lowest-indexed free devices.
+
+        Non-blocking by default: raises ``PoolExhausted`` when fewer than
+        ``n`` devices are free.  ``block=True`` waits for releases,
+        polling ``token.check()`` (a ``repro.faults.CancellationToken``)
+        so a queued reservation honors deadlines and cancellation.
+        """
+        if n < 1:
+            raise ValueError(f"reserve needs n >= 1, got {n}")
+        if n > len(self._devices):
+            raise PoolExhausted(
+                f"pool exhausted: want {n}, pool only has "
+                f"{len(self._devices)} devices")
+        with self._cond:
+            while True:
+                lease = self._try_reserve_locked(n)
+                if lease is not None:
+                    return lease
+                if not block:
+                    raise PoolExhausted(
+                        f"pool exhausted: want {n}, have {len(self._free)} "
+                        f"free of {len(self._devices)}")
+                self._cond.wait(timeout=poll_s)
+                if token is not None:
+                    token.check("DevicePool.reserve")
+
+    def try_reserve(self, n: int) -> Optional[Lease]:
+        """``reserve`` that returns None instead of raising on exhaustion."""
+        with self._cond:
+            return self._try_reserve_locked(n) if n >= 1 else None
+
+    def release(self, lease: Lease) -> None:
+        """Return one lease's devices to the free list (idempotent)."""
+        with self._cond:
+            if lease._released or id(lease) not in self._leases:
+                return
+            lease._released = True
+            del self._leases[id(lease)]
+            self._free = sorted(self._free + list(lease._indices))
+            self._cond.notify_all()
+
+    def release_all(self) -> None:
+        """Reclaim every outstanding lease (tests / epoch reset)."""
+        with self._cond:
+            for lease in list(self._leases.values()):
+                lease._released = True
+            self._leases.clear()
+            self._free = list(range(len(self._devices)))
+            self._cond.notify_all()

@@ -27,7 +27,7 @@ from ..core.plan import Plan, execute
 from ..core.store import SpillTable
 from ..expr import Col, Expr, ensure_expr
 from ..planner.logical import groupby_schema, join_schema
-from .session import get_env, get_session_defaults
+from .session import get_active_scheduler, get_env, get_session_defaults
 
 __all__ = ["DataFrame", "GroupBy", "read_numpy", "from_pandas", "from_table"]
 
@@ -227,9 +227,15 @@ class DataFrame:
         capacity-pressure drops, ``faults`` injects a deterministic fault
         plan.  ``None`` falls back to the active session's defaults
         (``session(timeout=..., ...)``), then the library defaults.
+
+        Scheduler routing (``docs/serving.md``): inside a
+        ``session(scheduler=...)`` scope, a collect with no explicit
+        ``env=`` and no ingest-pinned env is submitted to the scheduler —
+        it queues under admission control, runs on a gang carved from the
+        scheduler's device pool, and this call blocks on the
+        ``QueryHandle`` (use ``scheduler.submit(df, ...)`` directly for
+        the non-blocking handle).
         """
-        if env is None:
-            env = self._env if self._env is not None else get_env()
         defaults = get_session_defaults()
         if timeout is None:
             timeout = defaults.get("timeout")
@@ -239,6 +245,16 @@ class DataFrame:
             overflow = defaults.get("overflow")
         if faults is None:
             faults = defaults.get("faults")
+        scheduler = defaults.get("scheduler")
+        if scheduler is not None and env is None and self._env is None:
+            handle = scheduler.submit(
+                self, mode=mode, optimize=optimize,
+                collect_stats=collect_stats, morsel_rows=morsel_rows,
+                analyze=analyze, trace=trace, timeout=timeout,
+                retries=retries, overflow=overflow, faults=faults, **kw)
+            return handle.result()
+        if env is None:
+            env = self._env if self._env is not None else get_env()
         if morsel_rows is None:
             # catch gang mismatches here with a clear message instead of a
             # shard_map divisibility error deep inside compilation (the
@@ -362,8 +378,16 @@ def read_numpy(data: Mapping[str, np.ndarray], *,
     calls to it.  ``spill=True`` keeps the data host-resident as a
     ``SpillTable`` (in ``chunk_rows`` pinned chunks) for out-of-core
     ``collect(morsel_rows=...)`` runs.
+
+    Inside a ``session(scheduler=...)`` scope (and with no explicit
+    ``env``), data is partitioned for the scheduler's gang size, so the
+    frame can run on *any* gang the scheduler carves.
     """
-    p = (env if env is not None else get_env()).parallelism
+    if env is not None:
+        p = env.parallelism
+    else:
+        sched = get_active_scheduler()
+        p = sched.gang_size if sched is not None else get_env().parallelism
     if spill:
         if capacity is not None:
             raise TypeError("capacity only applies to device tables "

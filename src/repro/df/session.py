@@ -23,14 +23,14 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Iterator, List, Optional, Sequence
+from typing import Any, Iterator, List, Optional, Sequence
 
 import jax
 
 from ..core.env import CylonEnv
 
 __all__ = ["session", "get_env", "set_default_env", "reset_default_env",
-           "get_session_defaults"]
+           "get_session_defaults", "get_active_scheduler"]
 
 _lock = threading.Lock()
 _default: Optional[CylonEnv] = None
@@ -71,13 +71,22 @@ def get_session_defaults() -> dict:
     return merged
 
 
+def get_active_scheduler():
+    """The ``repro.serve.QueryScheduler`` the innermost session scopes on
+    this thread, or None.  An inner env-bearing ``session(...)`` masks an
+    outer scheduler session (its layer pins ``scheduler=None``), so plain
+    in-thread execution wins wherever it is the innermost choice."""
+    return get_session_defaults().get("scheduler")
+
+
 def get_env() -> CylonEnv:
-    """The active env: innermost ``session`` on this thread, else the
+    """The active env: innermost env-bearing ``session`` on this thread
+    (scheduler sessions scope no env and are skipped), else the
     lazily-created process default (all local devices, XLA communicator)."""
     global _default
-    stack = _stack()
-    if stack:
-        return stack[-1]
+    for e in reversed(_stack()):
+        if e is not None:
+            return e
     with _lock:
         if _default is None:
             _default = CylonEnv()
@@ -102,15 +111,27 @@ def reset_default_env() -> None:
 @contextlib.contextmanager
 def session(env: Optional[CylonEnv] = None, *,
             devices: Optional[Sequence[jax.Device]] = None,
-            communicator: str = "xla",
+            communicator: Optional[str] = None,
+            scheduler=None,
             timeout=None, retries=None, overflow=None,
-            faults=None) -> Iterator[CylonEnv]:
+            faults=None) -> Iterator[Any]:
     """Scope an active env: ``with session(...) as env: df.collect()``.
 
     Pass an existing ``env``, or let the session build one from
-    ``devices`` (default: all local) and ``communicator``.  The compiled
+    ``devices`` (default: all local) and ``communicator`` (default
+    ``"xla"``).  Passing ``devices=`` or ``communicator=`` alongside an
+    explicit ``env=`` raises ``TypeError`` — the env already pins both, so
+    silently ignoring either would misconfigure the gang.  The compiled
     program cache lives on the env, so reusing one session across many
     ``collect`` calls is what makes repeat execution cheap.
+
+    ``scheduler=`` scopes a ``repro.serve.QueryScheduler`` instead of an
+    env: every ``collect()`` in scope (without an explicit ``env=`` or an
+    ingest-pinned env) is submitted to the scheduler and blocks on its
+    ``QueryHandle`` — many threads each inside such a session share the
+    scheduler's gangs (``docs/serving.md``).  The session yields the
+    scheduler.  Mutually exclusive with ``env=`` / ``devices=`` /
+    ``communicator=``; a nested env-bearing session masks it.
 
     ``timeout`` / ``retries`` / ``overflow`` / ``faults`` set the
     session-wide fault-tolerance defaults applied to every ``collect()``
@@ -118,18 +139,32 @@ def session(env: Optional[CylonEnv] = None, *,
     and nested sessions override outer ones per key.  A session-level
     ``timeout`` is a *per-query* deadline, re-armed at each collect.
     """
-    if env is None:
-        env = CylonEnv(devices=devices, communicator=communicator)
+    if scheduler is not None:
+        if env is not None or devices is not None or communicator is not None:
+            raise TypeError("pass either scheduler= or an env (env= / "
+                            "devices= / communicator=), not both")
+    elif env is None:
+        env = CylonEnv(devices=devices,
+                       communicator=communicator
+                       if communicator is not None else "xla")
     elif devices is not None:
         raise TypeError("pass either env= or devices=, not both")
+    elif communicator is not None:
+        raise TypeError(
+            "pass either env= or communicator=, not both: the env already "
+            "carries its communicator "
+            f"({env.communicator_name!r})")
     layer = {k: v for k, v in (("timeout", timeout), ("retries", retries),
                                ("overflow", overflow), ("faults", faults))
              if v is not None}
+    # scheduler scoping is innermost-wins in both directions: a scheduler
+    # session sets it, an env session explicitly masks any outer scheduler
+    layer["scheduler"] = scheduler
     stack = _stack()
-    stack.append(env)
+    stack.append(env)          # None marks a scheduler layer
     _defaults_stack().append(layer)
     try:
-        yield env
+        yield scheduler if scheduler is not None else env
     finally:
         stack.pop()
         _defaults_stack().pop()

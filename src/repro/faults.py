@@ -379,40 +379,65 @@ class CancellationToken:
     Executors call ``check()`` between morsels / stages and around
     ``block_until_ready`` fences; injected hangs poll it, so a hung
     dispatch surfaces as ``QueryTimeout`` rather than blocking forever.
+
+    ``parent`` links tokens into a tree: a child observes its parent's
+    cancellation and deadline as well as its own.  The serving scheduler
+    uses this for per-query tokens parented on one scheduler-wide token,
+    so ``QueryScheduler.close(cancel_pending=True)`` cancels every queued
+    and running query with a single call.  Cancellation is a plain flag
+    write (atomic under CPython), safe to call from any thread.
     """
 
-    def __init__(self, timeout: Optional[float] = None):
+    def __init__(self, timeout: Optional[float] = None,
+                 parent: Optional["CancellationToken"] = None):
         self.deadline = (time.monotonic() + timeout
                          if timeout is not None else None)
         self.timeout = timeout
+        self.parent = parent
         self._cancelled = False
         self.reason = ""
 
     @property
     def cancelled(self) -> bool:
-        return self._cancelled
+        return self._cancelled or (self.parent is not None
+                                   and self.parent.cancelled)
+
+    @property
+    def cancel_reason(self) -> str:
+        if self._cancelled or self.parent is None:
+            return self.reason
+        return self.parent.cancel_reason
 
     def cancel(self, reason: str = "") -> None:
-        self._cancelled = True
         self.reason = reason
+        self._cancelled = True
 
     def remaining(self) -> Optional[float]:
-        if self.deadline is None:
-            return None
-        return self.deadline - time.monotonic()
+        own = (None if self.deadline is None
+               else self.deadline - time.monotonic())
+        if self.parent is None:
+            return own
+        up = self.parent.remaining()
+        if own is None:
+            return up
+        return own if up is None else min(own, up)
 
     def expired(self) -> bool:
         rem = self.remaining()
         return rem is not None and rem <= 0
 
     def check(self, where: str = "") -> None:
-        if self._cancelled:
+        if self.cancelled:
+            reason = self.cancel_reason
             raise QueryCancelled(
-                f"query cancelled{': ' + self.reason if self.reason else ''}"
+                f"query cancelled{': ' + reason if reason else ''}"
                 + (f" (at {where})" if where else ""))
         if self.expired():
+            timeout = self.timeout
+            if timeout is None and self.parent is not None:
+                timeout = self.parent.timeout
             raise QueryTimeout(
-                f"query deadline ({self.timeout}s) passed"
+                f"query deadline ({timeout}s) passed"
                 + (f" at {where}" if where else ""))
 
 

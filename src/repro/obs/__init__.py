@@ -21,15 +21,16 @@ itself imports this package's trace layer — eager import would cycle.
 
 from .trace import (NULL_TRACER, QueryTrace, Span, Tracer, last_trace,
                     resolve_tracer)
-from .metrics import METRICS, MetricsRegistry, record_exec
+from .metrics import (METRICS, MetricsRegistry, record_exec,
+                      record_serve_query)
 
 _ANALYZE_NAMES = ("QueryReport", "run_analyzed", "render_analyze",
                   "stage_table")
 
 __all__ = [
     "METRICS", "MetricsRegistry", "NULL_TRACER", "QueryReport", "QueryTrace",
-    "Span", "Tracer", "last_trace", "record_exec", "render_analyze",
-    "resolve_tracer", "run_analyzed", "stage_table",
+    "Span", "Tracer", "last_trace", "record_exec", "record_serve_query",
+    "render_analyze", "resolve_tracer", "run_analyzed", "stage_table",
 ]
 
 

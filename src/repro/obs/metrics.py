@@ -213,6 +213,33 @@ class MetricsRegistry:
 METRICS = MetricsRegistry()
 
 
+def record_serve_query(stats: Dict[str, Any], scheduler: str = "serve",
+                       registry: Optional[MetricsRegistry] = None
+                       ) -> Dict[str, Any]:
+    """Fold one finished scheduler query (a ``QueryHandle.stats`` dict)
+    into the registry: per-outcome completion counters plus queue-wait and
+    execution-wall histograms, all labeled by scheduler name.  The
+    per-stage engine metrics still arrive via ``record_exec`` from the
+    worker's own execution."""
+    reg = registry if registry is not None else METRICS
+    state = stats.get("state", "unknown")
+    reg.counter("serve_completed_total",
+                "scheduler queries finished, by outcome").inc(
+        scheduler=scheduler, state=state)
+    if "queue_wait_s" in stats:
+        reg.histogram("serve_queue_wait_s",
+                      "time from submit to dequeue").observe(
+            stats["queue_wait_s"], scheduler=scheduler)
+    if "wall_s" in stats:
+        reg.histogram("serve_query_wall_s",
+                      "gang execution wall time").observe(
+            stats["wall_s"], scheduler=scheduler, state=state)
+    record = {"kind": "serve", "scheduler": scheduler}
+    record.update({k: v for k, v in stats.items()
+                   if not k.endswith("_monotonic")})
+    return reg.record_query(record)
+
+
 def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
                 query: str = "", registry: Optional[MetricsRegistry] = None
                 ) -> Dict[str, Any]:

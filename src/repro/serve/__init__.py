@@ -1,5 +1,36 @@
-"""Serving layer: batched prefill/decode engine over the model zoo."""
+"""Serving layer: concurrent multi-query scheduling over shared gangs,
+the process-level compiled-program cache, and the batched LLM demo engine.
 
-from .engine import GenerationResult, ServeEngine
+Submodules import lazily (module ``__getattr__``) so ``repro.core`` can
+reference ``repro.serve.cache`` without a cycle and importing the
+scheduler never drags in the model-zoo demo engine.
+"""
 
-__all__ = ["GenerationResult", "ServeEngine"]
+from typing import Any
+
+__all__ = [
+    "AdmissionRejected", "GLOBAL_PROGRAM_CACHE", "GenerationResult",
+    "ProgramCache", "QueryHandle", "QueryScheduler", "ServeEngine",
+]
+
+_HOMES = {
+    "AdmissionRejected": "scheduler",
+    "QueryHandle": "scheduler",
+    "QueryScheduler": "scheduler",
+    "ProgramCache": "cache",
+    "GLOBAL_PROGRAM_CACHE": "cache",
+    "GenerationResult": "engine",
+    "ServeEngine": "engine",
+}
+
+
+def __getattr__(name: str) -> Any:
+    home = _HOMES.get(name)
+    if home is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{home}", __name__), name)
+
+
+def __dir__():
+    return sorted(__all__)

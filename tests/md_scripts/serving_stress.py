@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""Concurrent multi-query serving stress on 8 devices (PR 8 acceptance).
+
+1. Warm determinism: three Fig-9-style queries compiled on each of the
+   four canonical 2-device partitions through one shared ``ProgramCache``
+   cost EXACTLY the same number of compiles per partition.
+2. Concurrent storm: 16 mixed submissions from 8 threads on a
+   ``QueryScheduler`` (gang_size=2, max_inflight=4) are BIT-IDENTICAL to
+   the sequential 2-device reference, add ZERO new compiles (every handle
+   reports ``cache_misses == 0``), always land on canonical partitions,
+   and overlapping executions never share a device.
+3. Session routing: ``collect()`` inside ``session(scheduler=...)`` from
+   8 threads matches the reference.
+4. Clean cancellation: queued queries cancel mid-queue with
+   ``QueryCancelled`` while the inflight query completes bit-identical.
+5. Faulted serving: threaded submission under a fixed-seed fault plan
+   (stage-launch + all-to-all chunk raises, retry budget) recovers
+   bit-identical.
+
+When ``OBS_ARTIFACT_DIR`` is set, a machine-readable summary lands there.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+
+import repro.df as rdf
+from repro.core import CylonEnv, DevicePool
+from repro.expr import col
+from repro.faults import QueryCancelled, RetryPolicy
+from repro.serve import ProgramCache, QueryScheduler
+
+rng = np.random.default_rng(7)
+N = 4000
+NK = int(N * 0.9)
+ld = {"k": rng.integers(0, NK, N).astype(np.int32),
+      "v0": rng.integers(0, 256, N).astype(np.float32),
+      "junk": rng.integers(0, 256, N).astype(np.float32)}
+rd = {"k": rng.integers(0, NK, N).astype(np.int32),
+      "w": rng.integers(0, 256, N).astype(np.float32)}
+
+shared = ProgramCache(registry=False)
+pool = DevicePool()
+assert pool.size == 8
+GANG = 2
+PARTS = [(0, 1), (2, 3), (4, 5), (6, 7)]
+
+sched = QueryScheduler(pool=pool, gang_size=GANG, max_inflight=4,
+                       max_queue=64, program_cache=shared, name="stress")
+
+# ingest inside the scheduler session: partitioned for gang_size=2, NOT
+# pinned to any env, so the frames run on whichever gang is carved
+with rdf.session(scheduler=sched):
+    left = rdf.read_numpy(ld, name="l")
+    right = rdf.read_numpy(rd, name="r")
+CAP = next(iter(left.sources.values())).capacity
+JKW = dict(out_capacity=CAP * 4, bucket_capacity=CAP * 2,
+           shuffle_out_capacity=CAP * 2)
+
+QUERIES = {
+    "join": lambda: (left.merge(right, on="k", **JKW)
+                     [(col("v0") > 4) & (col("w") < 250)]
+                     .groupby("k").agg({"v0": ["sum"]})
+                     .sort_values("k")),
+    "groupby": lambda: (left.groupby("k")
+                        .agg({"v0": ["sum", "mean"], "junk": ["max"]})
+                        .sort_values("k")),
+    "filter": lambda: (left[(col("v0") > 64) & (col("junk") < 200)]
+                       .sort_values("k")),
+}
+
+# --- sequential reference + warm determinism ----------------------------- #
+refs = {}
+env0 = CylonEnv([pool.devices[i] for i in PARTS[0]], program_cache=shared)
+for qname, q in QUERIES.items():
+    refs[qname] = q().collect(env=env0).to_numpy()
+per_part = shared.misses
+assert per_part > 0
+for part in PARTS[1:]:
+    before = shared.misses
+    env = CylonEnv([pool.devices[i] for i in part], program_cache=shared)
+    for qname, q in QUERIES.items():
+        got = q().collect(env=env).to_numpy()
+        for c in refs[qname]:
+            np.testing.assert_array_equal(refs[qname][c], got[c],
+                                          err_msg=f"{qname} on {part}")
+    assert shared.misses - before == per_part, (
+        f"partition {part} compiled {shared.misses - before}, "
+        f"expected exactly {per_part}")
+base_misses = shared.misses
+assert base_misses == 4 * per_part
+print(f"warm: {per_part} programs/partition x 4 partitions, "
+      f"per-partition compile counts exactly equal, bit-identical")
+
+# --- concurrent storm: 16 mixed submissions from 8 threads --------------- #
+names = sorted(QUERIES)
+handles = [None] * 16
+errors = []
+barrier = threading.Barrier(8)
+
+
+def submitter(t):
+    try:
+        barrier.wait()
+        for j in (2 * t, 2 * t + 1):
+            handles[j] = (names[j % 3],
+                          sched.submit(QUERIES[names[j % 3]](),
+                                       label=f"storm-{j}", timeout=300.0))
+    except Exception as e:  # pragma: no cover - failure path
+        errors.append(e)
+
+
+threads = [threading.Thread(target=submitter, args=(t,)) for t in range(8)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join(timeout=60)
+assert not errors, errors
+
+spans = []
+for qname, handle in handles:
+    got = handle.result(timeout=600).to_numpy()
+    for c in refs[qname]:
+        np.testing.assert_array_equal(refs[qname][c], got[c],
+                                      err_msg=handle.label)
+    s = handle.stats
+    assert s["cache_misses"] == 0, (handle.label, s)
+    assert tuple(s["devices"]) in set(PARTS), s["devices"]
+    spans.append((handle.label, s["started_monotonic"],
+                  s["finished_monotonic"], frozenset(s["devices"])))
+assert shared.misses == base_misses, "storm recompiled something"
+
+# overlapping executions must hold disjoint device partitions
+overlaps = 0
+for i in range(len(spans)):
+    for j in range(i + 1, len(spans)):
+        la, a0, a1, da = spans[i]
+        lb, b0, b1, db = spans[j]
+        if a0 < b1 and b0 < a1:
+            overlaps += 1
+            assert not (da & db), f"{la} and {lb} overlapped on {da & db}"
+assert overlaps > 0, "storm never ran two queries concurrently"
+print(f"storm: 16 queries, {overlaps} concurrent pairs, 0 recompiles, "
+      f"disjoint gangs, bit-identical")
+
+# --- session routing from threads ---------------------------------------- #
+route_errors = []
+
+
+def routed(t):
+    try:
+        qname = names[t % 3]
+        with rdf.session(scheduler=sched):
+            got = QUERIES[qname]().collect().to_numpy()
+        for c in refs[qname]:
+            np.testing.assert_array_equal(refs[qname][c], got[c])
+    except Exception as e:  # pragma: no cover - failure path
+        route_errors.append(e)
+
+
+threads = [threading.Thread(target=routed, args=(t,)) for t in range(8)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join(timeout=600)
+assert not route_errors, route_errors
+assert shared.misses == base_misses
+print("session routing: 8 threads through session(scheduler=...), "
+      "bit-identical")
+
+# --- clean cancellation mid-queue ---------------------------------------- #
+class SlowFrame:
+    def __init__(self, inner, delay):
+        self.inner, self.delay = inner, delay
+
+    def collect(self, **kw):
+        time.sleep(self.delay)
+        return self.inner.collect(**kw)
+
+
+narrow = QueryScheduler(pool=pool, gang_size=GANG, max_inflight=1,
+                        max_queue=8, program_cache=shared, name="narrow")
+running = narrow.submit(SlowFrame(QUERIES["groupby"](), 0.4))
+time.sleep(0.1)                       # the single worker picks it up
+queued = [narrow.submit(QUERIES[names[i % 3]]()) for i in range(3)]
+victim = queued[1]
+assert victim.cancel("mid-queue cancellation")
+try:
+    victim.result(timeout=5)
+    raise AssertionError("cancelled query returned a result")
+except QueryCancelled:
+    pass
+assert victim.stats["state"] == "cancelled"
+got = running.result(timeout=600).to_numpy()
+for c in refs["groupby"]:
+    np.testing.assert_array_equal(refs["groupby"][c], got[c])
+for i, handle in enumerate(queued):
+    if handle is victim:
+        continue
+    got = handle.result(timeout=600).to_numpy()
+    for c in refs[names[i % 3]]:
+        np.testing.assert_array_equal(refs[names[i % 3]][c], got[c])
+narrow.close()
+print("cancellation: mid-queue cancel clean, survivors bit-identical")
+
+# --- threaded submission under a fixed-seed fault plan ------------------- #
+FAULTS = "stage:launch@0x1=raise;a2a:chunk@1x1=raise"
+FKW = dict(mode="bsp_staged", a2a_chunks=2, collect_stats=True,
+           faults=FAULTS, retries=RetryPolicy(retries=6, backoff_s=0.001))
+fault_ref, fr_stats = QUERIES["join"]().collect(
+    env=env0, mode="bsp_staged", a2a_chunks=2, collect_stats=True,
+    faults=False)
+fault_ref = fault_ref.to_numpy()
+fh = [sched.submit(QUERIES["join"](), label=f"faulted-{i}", **FKW)
+      for i in range(4)]
+fired = 0
+for handle in fh:
+    out, st = handle.result(timeout=600)
+    got = out.to_numpy()
+    for c in fault_ref:
+        np.testing.assert_array_equal(fault_ref[c], got[c],
+                                      err_msg=handle.label)
+    assert st.rows_dropped == 0
+    fired += st.faults_injected
+assert fired > 0, "fault plan never fired under serving"
+print(f"faulted serving: {fired} faults fired across 4 queries, "
+      f"recovered bit-identical")
+
+final = sched.stats()
+sched.close()
+assert pool.available == 8, "leaked device leases"
+
+art = os.environ.get("OBS_ARTIFACT_DIR")
+if art:
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "serving_stress.json"), "w") as f:
+        json.dump({"rows": N, "gang_size": GANG,
+                   "programs_per_partition": per_part,
+                   "storm_queries": 16, "concurrent_pairs": overlaps,
+                   "faults_fired": fired, "scheduler": final},
+                  f, indent=1, sort_keys=True, default=str)
+    print(f"serving artifacts -> {art}/serving_stress.json")
+
+print("OK")

@@ -103,3 +103,8 @@ def test_explain_analyze_fig9():
 @pytest.mark.multidevice
 def test_fault_chaos():
     _run("fault_chaos.py")
+
+
+@pytest.mark.multidevice
+def test_serving_stress():
+    _run("serving_stress.py", timeout=1800)

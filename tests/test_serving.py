@@ -1,0 +1,485 @@
+"""Concurrency + serving layer (PR 8): thread-safe ``DevicePool``
+free-list, single-flight ``ProgramCache``, thread-safe ``CylonEnv.run``,
+and the driver-side ``QueryScheduler``.
+
+Unit-scale (1 CPU device); the 8-device concurrent-serving stress scenario
+is ``tests/md_scripts/serving_stress.py`` (``-m multidevice``).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.df as rdf
+from repro.core import CylonEnv, DevicePool, Lease, PoolExhausted
+from repro.faults import CancellationToken, QueryCancelled, QueryTimeout
+from repro.serve import (AdmissionRejected, ProgramCache, QueryHandle,
+                         QueryScheduler)
+
+
+class FakeDevice:
+    """Stand-in device for pool-only tests (pool never touches XLA)."""
+
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"dev{self.id}"
+
+
+def fake_pool(n=8):
+    return DevicePool([FakeDevice(i) for i in range(n)])
+
+
+# --------------------------------------------------------------------- #
+# DevicePool: locked free-list (the reserve() check-then-act bugfix)
+# --------------------------------------------------------------------- #
+class TestDevicePool:
+    def test_reserve_lowest_first(self):
+        pool = fake_pool(8)
+        a = pool.reserve(2)
+        b = pool.reserve(3)
+        assert [d.id for d in a] == [0, 1]
+        assert [d.id for d in b] == [2, 3, 4]
+        assert pool.available == 3
+
+    def test_release_recarves_same_placement(self):
+        pool = fake_pool(8)
+        a = pool.reserve(2)
+        pool.reserve(2)
+        first_ids = [d.id for d in a]
+        a.release()
+        again = pool.reserve(2)
+        assert [d.id for d in again] == first_ids
+
+    def test_exhaustion_raises(self):
+        pool = fake_pool(4)
+        pool.reserve(3)
+        with pytest.raises(PoolExhausted):
+            pool.reserve(2)
+        with pytest.raises(PoolExhausted):
+            pool.reserve(5)          # larger than the pool itself
+        assert pool.try_reserve(2) is None
+
+    def test_release_is_idempotent(self):
+        pool = fake_pool(4)
+        lease = pool.reserve(2)
+        lease.release()
+        lease.release()              # no double-free
+        pool.release(lease)
+        assert pool.available == 4
+        assert lease.released
+
+    def test_release_all(self):
+        pool = fake_pool(4)
+        pool.reserve(1)
+        lease = pool.reserve(2)
+        pool.release_all()
+        assert pool.available == 4
+        assert lease.released
+
+    def test_lease_is_sequence_and_context_manager(self):
+        pool = fake_pool(4)
+        with pool.reserve(2) as lease:
+            assert isinstance(lease, Lease)
+            assert len(lease) == 2
+            assert lease[0].id == 0
+            assert [d.id for d in lease] == [0, 1]
+            assert not lease.released
+        assert lease.released
+        assert pool.available == 4
+
+    def test_blocking_reserve_token_deadline(self):
+        pool = fake_pool(2)
+        pool.reserve(2)
+        with pytest.raises(QueryTimeout):
+            pool.reserve(1, block=True, poll_s=0.01,
+                         token=CancellationToken(0.05))
+
+    def test_blocking_reserve_token_cancel(self):
+        pool = fake_pool(2)
+        held = pool.reserve(2)
+        token = CancellationToken()
+        threading.Timer(0.05, token.cancel).start()
+        with pytest.raises(QueryCancelled):
+            pool.reserve(1, block=True, poll_s=0.01, token=token)
+        held.release()
+
+    def test_blocking_reserve_waits_for_release(self):
+        pool = fake_pool(2)
+        held = pool.reserve(2)
+        got = []
+
+        def taker():
+            lease = pool.reserve(2, block=True, poll_s=0.01)
+            got.append([d.id for d in lease])
+            lease.release()
+        t = threading.Thread(target=taker)
+        t.start()
+        time.sleep(0.05)
+        assert not got               # still blocked
+        held.release()
+        t.join(timeout=5)
+        assert got == [[0, 1]]
+
+    def test_concurrent_reserve_release_never_overlaps(self):
+        """The original bump-pointer ``_next`` check-then-act race: two
+        threads could read the same cursor and get overlapping devices.
+        The free-list must never hand out one device twice."""
+        pool = fake_pool(8)
+        held_ids = set()
+        guard = threading.Lock()
+        errors = []
+
+        def churn(_):
+            for _ in range(60):
+                lease = pool.reserve(2, block=True, poll_s=0.001)
+                ids = {d.id for d in lease}
+                with guard:
+                    if held_ids & ids:
+                        errors.append(f"overlap: {held_ids & ids}")
+                    held_ids.update(ids)
+                time.sleep(0.0005)
+                with guard:
+                    held_ids.difference_update(ids)
+                lease.release()
+        threads = [threading.Thread(target=churn, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, errors
+        assert pool.available == 8
+
+
+# --------------------------------------------------------------------- #
+# ProgramCache: process-level, single-flight
+# --------------------------------------------------------------------- #
+class TestProgramCache:
+    def test_get_or_build_roundtrip(self):
+        cache = ProgramCache(registry=False)
+        calls = []
+        value, built = cache.get_or_build("k", lambda: calls.append(1) or 42)
+        assert (value, built) == (42, True)
+        value, built = cache.get_or_build("k", lambda: calls.append(1) or 99)
+        assert (value, built) == (42, False)
+        assert len(calls) == 1
+        assert "k" in cache and len(cache) == 1
+        assert cache.peek("k") == 42
+        assert cache.stats() == {"entries": 1, "hits": 1, "misses": 1,
+                                 "singleflight_waits": 0}
+        cache.clear()
+        assert len(cache) == 0
+
+    def test_single_flight_builds_once(self):
+        cache = ProgramCache(registry=False)
+        builds = []
+        barrier = threading.Barrier(8)
+        results = []
+
+        def builder():
+            builds.append(threading.get_ident())
+            time.sleep(0.05)         # widen the race window
+            return "compiled"
+
+        def racer():
+            barrier.wait()
+            results.append(cache.get_or_build("prog", builder))
+        threads = [threading.Thread(target=racer) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert len(builds) == 1, "builder must run exactly once"
+        assert all(v == "compiled" for v, _ in results)
+        assert sum(1 for _, built in results if built) == 1
+        assert cache.stats()["singleflight_waits"] >= 1
+
+    def test_failed_build_is_retried(self):
+        cache = ProgramCache(registry=False)
+        attempts = []
+
+        def flaky():
+            attempts.append(1)
+            if len(attempts) == 1:
+                raise RuntimeError("compile boom")
+            return "ok"
+        with pytest.raises(RuntimeError, match="compile boom"):
+            cache.get_or_build("k", flaky)
+        assert "k" not in cache      # failed entry must not poison the key
+        value, built = cache.get_or_build("k", flaky)
+        assert (value, built) == ("ok", True)
+
+
+# --------------------------------------------------------------------- #
+# CylonEnv.run: thread-safe compile cache (the unsynchronized-mutation fix)
+# --------------------------------------------------------------------- #
+def _sum_col(ctx, t):
+    return {"s": t.columns["v"].sum(keepdims=True)}
+
+
+def _ingest(data_np, env):
+    df = rdf.read_numpy(data_np, env=env)
+    return next(iter(df.sources.values()))
+
+
+class TestEnvThreadSafety:
+    def test_concurrent_run_same_program_compiles_once(self, rng):
+        env = CylonEnv()
+        data = _ingest({"v": rng.normal(size=256)}, env)
+        barrier = threading.Barrier(8)
+        outs, errors = [], []
+
+        def worker():
+            try:
+                barrier.wait()
+                for _ in range(5):
+                    outs.append(env.run(_sum_col, data))
+            except Exception as e:   # pragma: no cover - failure path
+                errors.append(e)
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors
+        # zero-recompile invariant under threads: one miss, the rest hits
+        assert env.cache_misses == 1
+        assert env.cache_hits == 39
+        assert len(env._cache) == 1
+        ref = outs[0]["s"]
+        assert all(np.array_equal(o["s"], ref) for o in outs)
+
+    def test_fresh_env_shared_cache_zero_misses(self, rng):
+        """A freshly carved gang over the same devices reuses compiled
+        programs from the shared ProgramCache: zero recompiles."""
+        shared = ProgramCache(registry=False)
+        data_np = {"v": rng.normal(size=256)}
+        env1 = CylonEnv(program_cache=shared)
+        t1 = _ingest(data_np, env1)
+        env1.run(_sum_col, t1)
+        assert (env1.cache_misses, env1.cache_hits) == (1, 0)
+
+        env2 = CylonEnv(program_cache=shared)   # fresh gang, same devices
+        t2 = _ingest(data_np, env2)
+        out = env2.run(_sum_col, t2)
+        assert env2.cache_misses == 0
+        assert env2.cache_hits == 1
+        assert np.array_equal(out["s"], env1.run(_sum_col, t1)["s"])
+
+    def test_private_caches_stay_isolated(self, rng):
+        """Default envs keep private caches — a second env recompiles
+        (existing per-env counter semantics are unchanged)."""
+        data_np = {"v": rng.normal(size=64)}
+        env1, env2 = CylonEnv(), CylonEnv()
+        env1.run(_sum_col, _ingest(data_np, env1))
+        env2.run(_sum_col, _ingest(data_np, env2))
+        assert env1.cache_misses == 1
+        assert env2.cache_misses == 1
+
+
+# --------------------------------------------------------------------- #
+# session(): scheduler scoping + the silently-ignored-communicator bugfix
+# --------------------------------------------------------------------- #
+class TestSessionArgs:
+    def test_env_plus_communicator_raises(self):
+        env = CylonEnv()
+        with pytest.raises(TypeError, match="communicator"):
+            with rdf.session(env=env, communicator="ring"):
+                pass
+
+    def test_env_plus_devices_still_raises(self):
+        env = CylonEnv()
+        with pytest.raises(TypeError, match="devices"):
+            with rdf.session(env=env, devices=env.devices):
+                pass
+
+    def test_scheduler_exclusive_with_env_args(self):
+        env = CylonEnv()
+        sched = QueryScheduler(gang_size=1)
+        try:
+            for kw in ({"env": env}, {"devices": env.devices},
+                       {"communicator": "ring"}):
+                with pytest.raises(TypeError, match="scheduler"):
+                    with rdf.session(scheduler=sched, **kw):
+                        pass
+        finally:
+            sched.close()
+
+
+# --------------------------------------------------------------------- #
+# QueryScheduler
+# --------------------------------------------------------------------- #
+class _SlowFrame:
+    """collect() that parks the worker before running a real query."""
+
+    def __init__(self, inner, delay=0.3):
+        self.inner, self.delay = inner, delay
+
+    def collect(self, **kw):
+        time.sleep(self.delay)
+        return self.inner.collect(**kw)
+
+
+class _BoomFrame:
+    def collect(self, **kw):
+        raise ValueError("deliberate query failure")
+
+
+@pytest.fixture
+def frame(rng):
+    return rdf.read_numpy({"k": rng.integers(0, 20, 2048),
+                           "v": rng.normal(size=2048)})
+
+
+def _query(df):
+    return df[df.k > 5].groupby("k").agg({"v": ["sum"]}).sort_values("k")
+
+
+class TestQueryScheduler:
+    def test_submit_result_matches_direct_collect(self, frame):
+        expect = _query(frame).collect().to_numpy()
+        with QueryScheduler(gang_size=1) as sched:
+            handle = sched.submit(_query(frame))
+            out = handle.result(timeout=120).to_numpy()
+        assert set(out) == set(expect)
+        for name in expect:
+            assert np.array_equal(out[name], expect[name]), name
+
+    def test_handle_stats_lifecycle(self, frame):
+        with QueryScheduler(gang_size=1) as sched:
+            handle = sched.submit(_query(frame), label="lifecycle")
+            handle.result(timeout=120)
+        s = handle.stats
+        assert s["label"] == "lifecycle"
+        assert s["state"] == "done"
+        assert s["devices"] == [0]
+        assert s["queue_wait_s"] >= 0 and s["wall_s"] > 0
+        assert s["submitted_at"] <= s["started_at"] <= s["finished_at"]
+        assert s["cache_misses"] >= 0 and s["cache_hits"] >= 0
+        assert handle.done() and handle.exception() is None
+
+    def test_session_routes_collect_through_scheduler(self, frame):
+        expect = _query(frame).collect().to_numpy()
+        with QueryScheduler(gang_size=1) as sched:
+            with rdf.session(scheduler=sched):
+                out = _query(frame).collect().to_numpy()
+            assert sched.stats()["submitted"] == 1
+        for name in expect:
+            assert np.array_equal(out[name], expect[name]), name
+
+    def test_inner_env_session_masks_scheduler(self, frame):
+        with QueryScheduler(gang_size=1) as sched:
+            with rdf.session(scheduler=sched):
+                with rdf.session() as env:      # innermost wins: plain env
+                    _query(frame).collect()
+                    assert env.cache_misses > 0
+            assert sched.stats()["submitted"] == 0
+
+    def test_repeat_query_fresh_gang_zero_misses(self, frame):
+        """Acceptance: a repeated query on a freshly carved gang reports
+        cache_misses == 0 through the shared ProgramCache."""
+        shared = ProgramCache(registry=False)
+        with QueryScheduler(gang_size=1, program_cache=shared) as sched:
+            h1 = sched.submit(_query(frame))
+            h1.result(timeout=120)
+            assert h1.stats["cache_misses"] > 0
+            h2 = sched.submit(_query(frame))    # fresh gang (new CylonEnv)
+            h2.result(timeout=120)
+        assert h2.stats["cache_misses"] == 0
+        assert h2.stats["cache_hits"] == h1.stats["cache_misses"] + \
+            h1.stats["cache_hits"]
+
+    def test_queueing_past_inflight_then_admission_reject(self, frame):
+        sched = QueryScheduler(gang_size=1, max_inflight=1, max_queue=1)
+        try:
+            h1 = sched.submit(_SlowFrame(_query(frame)))
+            time.sleep(0.05)                     # worker picks up h1
+            h2 = sched.submit(_query(frame))     # queued
+            with pytest.raises(AdmissionRejected):
+                sched.submit(_query(frame))      # over capacity: shed
+            h1.result(timeout=120)
+            h2.result(timeout=120)
+            s = sched.stats()
+            assert s["completed"] == 2 and s["rejected"] == 1
+        finally:
+            sched.close()
+
+    def test_cancel_mid_queue(self, frame):
+        sched = QueryScheduler(gang_size=1, max_inflight=1, max_queue=4)
+        try:
+            h1 = sched.submit(_SlowFrame(_query(frame)))
+            time.sleep(0.05)
+            h2 = sched.submit(_query(frame))
+            assert h2.cancel("changed my mind")
+            with pytest.raises(QueryCancelled):
+                h2.result(timeout=5)             # resolves without a worker
+            assert h2.stats["state"] == "cancelled"
+            assert not h2.cancel()               # already finished
+            h1.result(timeout=120)               # unaffected
+        finally:
+            sched.close()
+
+    def test_deadline_covers_queue_wait(self, frame):
+        sched = QueryScheduler(gang_size=1, max_inflight=1, max_queue=4)
+        try:
+            h1 = sched.submit(_SlowFrame(_query(frame), delay=0.5))
+            time.sleep(0.05)
+            h2 = sched.submit(_query(frame), timeout=0.1)  # expires in queue
+            with pytest.raises(QueryTimeout):
+                h2.result(timeout=30)
+            assert h2.stats["state"] == "timeout"
+            h1.result(timeout=120)
+        finally:
+            sched.close()
+
+    def test_failed_query_propagates(self, frame):
+        with QueryScheduler(gang_size=1) as sched:
+            handle = sched.submit(_BoomFrame())
+            with pytest.raises(ValueError, match="deliberate"):
+                handle.result(timeout=30)
+            assert handle.stats["state"] == "failed"
+            assert isinstance(handle.exception(), ValueError)
+
+    def test_close_rejects_new_and_cancels_pending(self, frame):
+        sched = QueryScheduler(gang_size=1, max_inflight=1, max_queue=8)
+        h1 = sched.submit(_SlowFrame(_query(frame)))
+        time.sleep(0.05)
+        h2 = sched.submit(_query(frame))
+        sched.close(cancel_pending=True, wait=True)
+        with pytest.raises(QueryCancelled):
+            h2.result(timeout=5)
+        with pytest.raises(RuntimeError, match="closed"):
+            sched.submit(_query(frame))
+        assert h1.done()                         # workers drained
+
+    def test_result_timeout_is_wait_bound_only(self, frame):
+        sched = QueryScheduler(gang_size=1)
+        try:
+            handle = sched.submit(_SlowFrame(_query(frame), delay=0.4))
+            with pytest.raises(TimeoutError):
+                handle.result(timeout=0.05)
+            handle.result(timeout=120)           # query itself unaffected
+            assert handle.stats["state"] == "done"
+        finally:
+            sched.close()
+
+    def test_validates_gang_size(self):
+        with pytest.raises(ValueError):
+            QueryScheduler(gang_size=0)
+        with pytest.raises(ValueError):
+            QueryScheduler(gang_size=99)
+        with QueryScheduler(gang_size=1) as sched:
+            with pytest.raises(ValueError):
+                sched.submit(object(), gang_size=99)
+
+    def test_repr_and_handle_repr(self, frame):
+        with QueryScheduler(gang_size=1, name="t") as sched:
+            assert "t" in repr(sched)
+            handle = sched.submit(_query(frame), label="shown")
+            assert "shown" in repr(handle)
+            handle.result(timeout=120)
+            assert isinstance(handle, QueryHandle)
