@@ -1,0 +1,166 @@
+"""File ingest (``repro.io``) vs in-memory ingest, in-core and out-of-core.
+
+Three ingest paths feed the same string-keyed groupby pipeline:
+
+  parquet    — ``rdf.read_parquet`` (pyarrow row-group streaming;
+               skipped when pyarrow is absent),
+  csv        — ``rdf.read_csv`` (pyarrow lane, or the pure-python
+               fallback when pyarrow is absent),
+  numpy      — ``rdf.read_numpy`` from already-materialized host arrays
+               (the no-parse baseline).
+
+For each path the bench records the raw ingest wall time (cold + warm:
+the second file read hits the process dictionary cache and is
+recode-free) and the query wall time at 1x (in-core) and ``oversub``x
+(out-of-core morsel streaming).  Integer-valued payloads keep float sums
+exact, so every path must produce the SAME result — asserted, not
+assumed.  Artifact: ``BENCH_pr9_ingest.json`` (``--json`` / CI).
+"""
+
+import os
+
+if __name__ == "__main__":  # direct CLI use needs the 8-device CPU backend
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import CylonEnv
+from repro.io import DictionaryCache, have_pyarrow
+
+from .common import record, time_fn
+
+
+def _make_files(tmp: str, global_rows: int, nfiles: int
+                ) -> Tuple[Dict[str, List], List[str], List[str]]:
+    """String-keyed nullable dataset written as Parquet + CSV twins."""
+    rng = np.random.default_rng(5)
+    nk = max(8, int(global_rows * 0.02))
+    keys = [f"key{i:06d}" for i in range(nk)]
+    cols: Dict[str, List] = {"k": [], "v0": []}
+    pq_paths, csv_paths = [], []
+    per = global_rows // nfiles
+    for f in range(nfiles):
+        k = [keys[rng.integers(0, nk)] if rng.random() > 0.05 else None
+             for _ in range(per)]
+        v0 = [float(rng.integers(0, 256)) if rng.random() > 0.05 else None
+              for _ in range(per)]
+        cols["k"] += k
+        cols["v0"] += v0
+        if have_pyarrow():
+            import pyarrow as pa
+            import pyarrow.parquet as pq
+            p = os.path.join(tmp, f"part{f}.parquet")
+            pq.write_table(pa.table({"k": k, "v0": v0}), p)
+            pq_paths.append(p)
+        c = os.path.join(tmp, f"part{f}.csv")
+        with open(c, "w") as fh:
+            fh.write("k,v0\n")
+            for kk, vv in zip(k, v0):
+                fh.write(f"{kk or ''},{'' if vv is None else repr(vv)}\n")
+        csv_paths.append(c)
+    return cols, pq_paths, csv_paths
+
+
+def _query(df, env, morsel_rows: Optional[int]):
+    res = (df.groupby("k").agg({"v0": ["sum", "count"]})
+           .sort_values("k")
+           .collect(env=env, morsel_rows=morsel_rows))
+    return res.to_numpy()
+
+
+def run(global_rows: int = 50_000, nfiles: int = 4, oversub: int = 8) -> None:
+    import repro.df as rdf
+
+    p = min(8, len(jax.devices()))
+    env = CylonEnv(jax.devices()[:p])
+    tmp = tempfile.mkdtemp(prefix="bench_ingest_")
+    try:
+        cols, pq_paths, csv_paths = _make_files(tmp, global_rows, nfiles)
+        rows = len(cols["k"])
+        morsel = max(8, (-(-rows // p // oversub) + 7) // 8 * 8)
+
+        data_np = {
+            "k": np.asarray([x if x is not None else "" for x in cols["k"]]),
+            "v0": np.asarray([v if v is not None else np.nan
+                              for v in cols["v0"]])}
+        readers = [("numpy", lambda: rdf.read_numpy(data_np, env=env))]
+        if pq_paths:
+            pq_cache = DictionaryCache()
+            readers.append(
+                ("parquet", lambda: rdf.read_parquet(
+                    pq_paths, env=env, dict_cache=pq_cache)))
+        csv_cache = DictionaryCache()
+        csv_case = "csv" if have_pyarrow() else "csv-python"
+        readers.append(
+            (csv_case, lambda: rdf.read_csv(csv_paths, env=env,
+                                            dict_cache=csv_cache)))
+
+        file_ref = None
+        for case, reader in readers:
+            t0 = time.perf_counter()
+            df = reader()
+            t_cold = time.perf_counter() - t0
+            src = df.sources[next(iter(df.sources))]
+            info = getattr(src, "provenance", None)
+            bytes_read = info.bytes_read if info is not None else 0
+            t_warm = time_fn(lambda: len(reader().sources),
+                             warmup=0, iters=3)
+            df2 = reader()   # file paths: second read hits the dict cache
+            info2 = getattr(df2.sources[next(iter(df2.sources))],
+                            "provenance", None)
+            record("ingest", f"{case}_read_cold", t_cold, rows=rows,
+                   files=nfiles if case != "numpy" else 0,
+                   bytes_read=bytes_read,
+                   mb_per_s=(round(bytes_read / t_cold / 1e6, 1)
+                             if bytes_read else None))
+            record("ingest", f"{case}_read_warm", t_warm, rows=rows,
+                   dict_cache_hit=bool(info2 and info2.dict_cache_hit))
+            if info2 is not None:
+                assert info2.dict_cache_hit and info2.recodes == 0, case
+
+            for tag, morsel_rows in (("1x", None), (f"{oversub}x", morsel)):
+                out = _query(df, env, morsel_rows)
+                t = time_fn(lambda: _query(df, env, morsel_rows),
+                            warmup=1, iters=3)
+                record("ingest", f"{case}_query_{tag}", t, rows=rows,
+                       groups=len(out["k"]), morsel_rows=morsel_rows or 0)
+                if case == "numpy":
+                    continue
+                # every FILE ingest path computes the identical answer
+                # (the numpy baseline differs legitimately: "" stands in
+                # for null keys there, forming one extra group)
+                if file_ref is None:
+                    file_ref = out
+                else:
+                    for c in file_ref:
+                        np.testing.assert_array_equal(
+                            file_ref[c], out[c], err_msg=(case, tag, c))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import dump_json
+
+    ap = argparse.ArgumentParser(
+        description="file-ingest bench: Parquet vs CSV vs read_numpy at "
+                    "1x and oversub-x device capacity")
+    ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument("--files", type=int, default=4)
+    ap.add_argument("--oversub", type=int, default=8)
+    ap.add_argument("--json", default="BENCH_pr9_ingest.json")
+    args = ap.parse_args()
+    run(args.rows, args.files, args.oversub)
+    dump_json(args.json, meta={"bench": "ingest", "rows": args.rows,
+                               "files": args.files, "oversub": args.oversub,
+                               "pyarrow": have_pyarrow()})
+    print(f"json -> {args.json}")

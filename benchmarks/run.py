@@ -37,9 +37,9 @@ def main() -> None:
                     help="JSON artifact path (default BENCH_<scale>.json)")
     args = ap.parse_args()
 
-    from . import (bench_communicators, bench_join_breakdown, bench_kernels,
-                   bench_local_ops, bench_moe_shuffle, bench_pipeline,
-                   bench_shuffle_impl, bench_strong_scaling)
+    from . import (bench_communicators, bench_ingest, bench_join_breakdown,
+                   bench_kernels, bench_local_ops, bench_moe_shuffle,
+                   bench_pipeline, bench_shuffle_impl, bench_strong_scaling)
     from .common import RESULTS, dump_csv, dump_json
 
     scale = 50 if args.smoke else 4 if args.quick else 1
@@ -58,6 +58,8 @@ def main() -> None:
         # lazy DataFrame frontend overhead vs raw Plan (asserts bit-identity)
         "df_frontend": lambda: bench_pipeline.run_frontend(
             max(4000, 100_000 // scale)),
+        # file ingest (repro.io): Parquet vs CSV vs read_numpy, 1x + 8x
+        "ingest": lambda: bench_ingest.run(max(4000, 50_000 // scale)),
         "kernels": bench_kernels.run if not args.quick else bench_kernels.run,
         "moe_shuffle": bench_moe_shuffle.run,
     }

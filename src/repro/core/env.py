@@ -53,6 +53,10 @@ class DistTable:
     capacity: int          # per-shard capacity
     dictionaries: Dict[str, Tuple[str, ...]] = \
         dataclasses.field(default_factory=dict)
+    #: ``repro.io.IngestInfo`` when this table was read from Parquet/CSV
+    #: (files, rows, source bytes); None for tables built in memory.
+    #: Driver-side only — EXPLAIN ANALYZE attributes scan work from it.
+    provenance: Optional[Any] = None
 
     @property
     def parallelism(self) -> int:
@@ -69,10 +73,15 @@ class DistTable:
 
         String columns (object / unicode numpy arrays) are dictionary-
         encoded host-side: the device gets int32 codes, the sorted
-        dictionary lands in ``dictionaries``.  An explicit ``capacity`` —
-        including ``0`` — is honored verbatim and validated against the
-        per-shard row count."""
+        dictionary lands in ``dictionaries``.  NaN / ``None`` values (or
+        explicit ``__m_*`` companions) become validity-mask columns with
+        canonical-zero data slots (``repro.nulls``).  An explicit
+        ``capacity`` — including ``0`` — is honored verbatim and validated
+        against the per-shard row count."""
         from ..dataframe.schema import encode_columns
+        from ..nulls import extract_null_columns
+        data = extract_null_columns(
+            {k: np.asarray(v) for k, v in data.items()})
         data, dicts = encode_columns(data)
         n = len(next(iter(data.values())))
         per = -(-n // parallelism)
@@ -92,12 +101,19 @@ class DistTable:
             cols[name] = jnp.asarray(buf.reshape((parallelism * capacity,) + arr.shape[1:]))
         return cls(cols, jnp.asarray(counts), capacity, dicts)
 
-    def to_numpy(self, decode: bool = True) -> Dict[str, np.ndarray]:
+    def to_numpy(self, decode: bool = True, nulls: str = "pandas"
+                 ) -> Dict[str, np.ndarray]:
         """Gather valid rows from every shard (driver side, not jitted).
 
         ``decode=True`` (default) maps dictionary-encoded columns back to
         numpy string arrays; ``decode=False`` returns the raw int32 codes.
+        ``nulls="pandas"`` (default) re-materializes validity masks as
+        NaN / ``None`` (consuming the ``__m_*`` columns);
+        ``nulls="mask"`` returns the raw physical layout — canonical-zero
+        data plus the bool mask columns — for bit-identity checks.
         """
+        if nulls not in ("pandas", "mask"):
+            raise ValueError(f"nulls must be 'pandas' or 'mask', got {nulls!r}")
         p, cap = self.parallelism, self.capacity
         counts = np.asarray(self.row_counts)
         out = {}
@@ -107,6 +123,9 @@ class DistTable:
         if decode and self.dictionaries:
             from ..dataframe.schema import decode_columns
             out = decode_columns(out, self.dictionaries)
+        if nulls == "pandas":
+            from ..nulls import apply_null_columns
+            out = apply_null_columns(out)
         return out
 
     def total_rows(self) -> int:

@@ -65,6 +65,8 @@ class SpillTable:
         self.parallelism = parallelism
         self.dictionaries: Dict[str, Tuple[str, ...]] = \
             dict(dictionaries or {})
+        #: ``repro.io.IngestInfo`` when read from Parquet/CSV, else None
+        self.provenance = None
         self._chunks: List[List[Dict[str, np.ndarray]]] = \
             [[] for _ in range(parallelism)]
         self._schema: Optional[Dict[str, Tuple[np.dtype, Tuple[int, ...]]]] = (
@@ -130,11 +132,17 @@ class SpillTable:
         return {k: np.concatenate([c[k] for c in chunks], axis=0)
                 for k in chunks[0]}
 
-    def to_numpy(self, decode: bool = True) -> Dict[str, np.ndarray]:
+    def to_numpy(self, decode: bool = True, nulls: str = "pandas"
+                 ) -> Dict[str, np.ndarray]:
         """Gather valid rows from every rank in rank order (driver side).
 
         ``decode=True`` (default) maps dictionary-encoded columns back to
-        numpy string arrays; ``decode=False`` returns the raw codes."""
+        numpy string arrays; ``decode=False`` returns the raw codes.
+        ``nulls="pandas"`` (default) re-materializes ``__m_*`` validity
+        masks as NaN / ``None``; ``nulls="mask"`` returns the raw physical
+        layout (canonical-zero data + bool masks) for bit-identity checks."""
+        if nulls not in ("pandas", "mask"):
+            raise ValueError(f"nulls must be 'pandas' or 'mask', got {nulls!r}")
         parts = [self.rank_concat(r) for r in range(self.parallelism)]
         names = self.column_names
         if not names:
@@ -144,6 +152,9 @@ class SpillTable:
         if decode and self.dictionaries:
             from ..dataframe.schema import decode_columns
             out = decode_columns(out, self.dictionaries)
+        if nulls == "pandas":
+            from ..nulls import apply_null_columns
+            out = apply_null_columns(out)
         return out
 
     def num_morsels(self, morsel_rows: int) -> int:
@@ -159,9 +170,11 @@ class SpillTable:
         optionally pre-chunked into ``chunk_rows``-row pieces.  String
         columns are dictionary-encoded (chunks hold int32 codes)."""
         from ..dataframe.schema import encode_columns
+        from ..nulls import extract_null_columns
         data = {k: np.asarray(v) for k, v in data.items()}
         if not data:
             raise ValueError("need at least one column")
+        data = extract_null_columns(data)
         data, dicts = encode_columns(data)
         n = len(next(iter(data.values())))
         per = -(-n // parallelism) if n else 0
@@ -186,6 +199,7 @@ class SpillTable:
         out = cls(p, schema={k: (v.dtype, v.shape[2:])
                              for k, v in host.items()},
                   dictionaries=table.dictionaries)
+        out.provenance = table.provenance
         for r in range(p):
             c = int(counts[r])
             if c:
@@ -301,6 +315,7 @@ def respill(spill: SpillTable, parallelism: int,
                      bytes=spill.nbytes()):
         out = SpillTable(parallelism, schema=spill.schema or None,
                          dictionaries=spill.dictionaries)
+        out.provenance = spill.provenance
         for dest, pieces in enumerate(_route_chunks(spill, parallelism)):
             for piece in pieces:
                 out.append(dest, piece)
@@ -344,7 +359,8 @@ def rescatter(spill: SpillTable, parallelism: int,
         cols[name] = jnp.asarray(
             buf.reshape((parallelism * cap,) + trail))
     return DistTable(cols, jnp.asarray(counts), cap,
-                     dict(spill.dictionaries))
+                     dict(spill.dictionaries),
+                     provenance=spill.provenance)
 
 
 def repartition(table: Union[DistTable, SpillTable], parallelism: int,

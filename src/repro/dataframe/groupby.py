@@ -16,14 +16,17 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import jax.numpy as jnp
 
 from ..comm import Communicator
-from .ops_local import groupby_local
+from ..nulls import mask_name
+from .ops_local import drop_null_keys, groupby_local
 from .shuffle import ShuffleStats, shuffle
 from .table import Table
 
 # agg -> (stage1 agg on raw col, stage2 agg on partial col, combiner name)
+# ``count`` counts non-null values (pandas count); ``size`` counts rows.
 _DECOMP = {
     "sum": ("sum", "sum"),
     "count": ("count", "sum"),
+    "size": ("size", "sum"),
     "min": ("min", "min"),
     "max": ("max", "max"),
 }
@@ -51,25 +54,50 @@ def _normalize(aggs: Mapping[str, Sequence[str]]):
     return physical, post
 
 
+def nullable_agg_cols(table: Table,
+                      physical: Mapping[str, Sequence[str]]) -> Tuple[str, ...]:
+    """Aggregated columns that carry a validity mask in the *input* table.
+
+    Finalization needs this (a group whose values are all null has
+    ``count == 0`` and a null mean/min/max), and the partial tables alone
+    cannot reveal it — sum/count partials carry no mask.
+    """
+    return tuple(sorted(c for c in physical
+                        if mask_name(c) in table.columns))
+
+
 def finalize_groupby(final: Table, keys: Sequence[str],
-                     post: Sequence[Tuple[str, str, str]]) -> Table:
-    """Post-processing (mean reconstruction) + column selection in user order."""
+                     post: Sequence[Tuple[str, str, str]],
+                     nullable_cols: Sequence[str] = ()) -> Table:
+    """Post-processing (mean reconstruction) + column selection in user
+    order.  ``nullable_cols`` names the aggregated input columns that were
+    nullable: their mean outputs get a ``count > 0`` validity mask, and
+    their min/max masks (computed by ``groupby_local``) are carried over."""
+    nullable = set(nullable_cols)
     out_cols = {k: final.columns[k] for k in keys}
     for out_name, kind, src in post:
         if kind == "copy":
             out_cols[out_name] = final.columns[src]
+            m = final.columns.get(mask_name(src))
+            if m is not None:
+                out_cols[mask_name(out_name)] = m
         else:  # mean
             s = final.columns[f"{src}_sum"]
             c = final.columns[f"{src}_count"]
             out_cols[out_name] = jnp.where(
                 c > 0, s / jnp.maximum(c, 1).astype(s.dtype),
                 jnp.zeros((), s.dtype))
+            if src in nullable:
+                out_cols[mask_name(out_name)] = c > 0
     return Table(out_cols, final.row_count)
 
 
 def _stage2_spec(physical: Mapping[str, Sequence[str]]):
     """Stage-2 agg spec over partial columns + the rename back to partial
-    names (so stage-2 output composes with further stage-2 passes)."""
+    names (so stage-2 output composes with further stage-2 passes).
+
+    The rename also maps each partial's validity mask (present only for
+    min/max of nullable columns); ``Table.rename`` ignores absent keys."""
     stage2: Dict[str, List[str]] = {}
     rename: Dict[str, str] = {}
     for col, names in physical.items():
@@ -77,6 +105,7 @@ def _stage2_spec(physical: Mapping[str, Sequence[str]]):
             s2 = _DECOMP[a][1]
             stage2[f"{col}_{a}"] = [s2]
             rename[f"{col}_{a}_{s2}"] = f"{col}_{a}"
+            rename[mask_name(f"{col}_{a}_{s2}")] = mask_name(f"{col}_{a}")
     return stage2, rename
 
 
@@ -90,6 +119,8 @@ def groupby(
 ) -> Tuple[Table, ShuffleStats]:
     """Distributed groupby over the comm axis (inside shard_map)."""
     physical, post = _normalize(aggs)
+    nullable = nullable_agg_cols(table, physical)
+    table = drop_null_keys(table, keys)  # before the shuffle: less wire
 
     if pre_aggregate:
         partial = groupby_local(table, keys, physical)
@@ -101,7 +132,7 @@ def groupby(
         shuffled, stats = shuffle(table, comm, key_cols=list(keys), **shuffle_kw)
         final = groupby_local(shuffled, keys, physical)
 
-    return finalize_groupby(final, keys, post), stats
+    return finalize_groupby(final, keys, post, nullable), stats
 
 
 # ---------------------------------------------------------------------- #
@@ -126,6 +157,7 @@ def groupby_partial(
     further communication.
     """
     stage2, rename = _stage2_spec(physical)
+    table = drop_null_keys(table, keys)
     if elide_shuffle:
         # input already co-partitioned on the keys: local partial only
         return groupby_local(table, keys, physical), None
@@ -143,14 +175,17 @@ def combine_groupby_partials(
     keys: Sequence[str],
     physical: Mapping[str, Sequence[str]],
     post: Sequence[Tuple[str, str, str]],
+    nullable_cols: Sequence[str] = (),
 ) -> Table:
     """Cross-morsel combiner: re-aggregate mergeable partials + finalize.
 
     Purely local (runs per rank): the morsel layer guarantees every key's
     partials are co-resident.  Partial aggs compose under their stage-2
     combiner (sum of sums, min of mins, sum of counts), so this is exact
-    for any morsel split of the input.
+    for any morsel split of the input.  ``nullable_cols`` (the *input*
+    columns that carried masks — the caller knows, the partials don't)
+    restores null mean/min/max for all-null groups at finalize.
     """
     stage2, rename = _stage2_spec(physical)
     final = groupby_local(partials, keys, stage2).rename(rename)
-    return finalize_groupby(final, keys, post)
+    return finalize_groupby(final, keys, post, nullable_cols)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..nulls import mask_name
 from .table import Table, _sentinel_for
 
 # ---------------------------------------------------------------------- #
@@ -88,14 +89,22 @@ def hash_columns_np(columns, key_cols: Sequence[str]) -> np.ndarray:
 
 
 def _order_keys(table: Table, by: Sequence[str]) -> Tuple[jax.Array, ...]:
-    """Key arrays for lexsort, with padding rows forced to sort last."""
+    """Key arrays for lexsort, with padding rows forced to sort last.
+
+    Nullable sort columns contribute a null flag *more major* than their
+    value key, so nulls sort last within each column (pandas
+    ``na_position="last"``); ties among nulls resolve stably because null
+    slots hold the canonical zero."""
     valid = table.valid_mask()
     keys = []
-    for name in by:
+    # jnp.lexsort sorts by the LAST key first; build minor -> major.
+    for name in reversed(by):
         v = table.columns[name]
         keys.append(jnp.where(valid, v, _sentinel_for(v.dtype)))
-    # jnp.lexsort sorts by the LAST key first; keep caller order = major first.
-    return tuple(reversed(keys)) + (jnp.where(valid, 0, 1).astype(jnp.int32),)
+        m = table.columns.get(mask_name(name))
+        if m is not None:
+            keys.append(jnp.where(valid & ~m, 1, 0).astype(jnp.int32))
+    return tuple(keys) + (jnp.where(valid, 0, 1).astype(jnp.int32),)
 
 
 def sort_local(table: Table, by: Sequence[str]) -> Table:
@@ -104,6 +113,26 @@ def sort_local(table: Table, by: Sequence[str]) -> Table:
     # validity flag is the most-major key so padding sorts last.
     order = jnp.lexsort(keys[:-1] + (keys[-1],))
     return table.take(order, table.row_count)
+
+
+def drop_null_keys(table: Table, keys: Sequence[str]) -> Table:
+    """Drop rows whose value in any of ``keys`` is null, and retire the
+    now-all-True key masks.  Pandas ``merge`` / ``groupby`` semantics: a
+    null key never matches and never forms a group.  No-op (compiles to
+    nothing) when no key carries a mask."""
+    masks = [table.columns[m]
+             for m in (mask_name(k) for k in keys) if m in table.columns]
+    if not masks:
+        return table
+    keep = masks[0]
+    for m in masks[1:]:
+        keep = keep & m
+    keep = keep & table.valid_mask()
+    order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)
+    t = table.take(order, jnp.sum(keep).astype(jnp.int32))
+    dead = {mask_name(k) for k in keys}
+    return Table({n: v for n, v in t.columns.items() if n not in dead},
+                 t.row_count).mask_padding()
 
 
 # ---------------------------------------------------------------------- #
@@ -120,12 +149,21 @@ def filter_rows(table: Table, pred: Callable[[Table], jax.Array]) -> Table:
 
 
 def filter_expr(table: Table, expr) -> Table:
-    """Keep rows where the boolean ``repro.expr`` expression holds."""
-    keep = jnp.asarray(expr.evaluate(table))
+    """Keep rows where the boolean ``repro.expr`` expression holds.
+
+    Three-valued semantics: a predicate that evaluates to null keeps
+    nothing (SQL ``WHERE``) — the Kleene canonical-zero invariant already
+    makes null predicate slots read False, and the validity conjunction
+    below makes the intent explicit."""
+    keep, pvalid = expr.evaluate_masked(table)
+    keep = jnp.asarray(keep)
     if keep.dtype != jnp.bool_:
         raise TypeError(
             f"filter expression must be boolean, got {keep.dtype}: {expr!r}")
-    keep = jnp.broadcast_to(keep, (table.capacity,)) & table.valid_mask()
+    keep = jnp.broadcast_to(keep, (table.capacity,))
+    if pvalid is not None:
+        keep = keep & jnp.broadcast_to(pvalid, (table.capacity,))
+    keep = keep & table.valid_mask()
     order = jnp.argsort(jnp.where(keep, 0, 1), stable=True)
     return table.take(order, jnp.sum(keep).astype(jnp.int32))
 
@@ -133,13 +171,23 @@ def filter_expr(table: Table, expr) -> Table:
 def with_columns(table: Table, exprs: Mapping[str, "object"]) -> Table:
     """Add/replace columns from ``{name: Expr}``; every expression reads
     the *input* table (simultaneous assignment).  Scalar results (pure
-    literals) broadcast to full columns."""
+    literals) broadcast to full columns.
+
+    A nullable result materializes its validity mask as the companion
+    ``__m_<name>`` column; a provably non-null result retires any stale
+    mask the assignment overwrites (e.g. ``fillna``)."""
     out = dict(table.columns)
     for name, e in exprs.items():
-        v = jnp.asarray(e.evaluate(table))
+        v, valid = e.evaluate_masked(table)
+        v = jnp.asarray(v)
         if v.ndim == 0:
             v = jnp.broadcast_to(v, (table.capacity,))
         out[name] = v
+        if valid is not None:
+            out[mask_name(name)] = jnp.broadcast_to(
+                valid, (table.capacity,))
+        else:
+            out.pop(mask_name(name), None)
     return Table(out, table.row_count)
 
 
@@ -182,6 +230,7 @@ def map_columns(table: Table, fn: Callable[[jax.Array], jax.Array],
 _AGG_INIT = {
     "sum": lambda d: jnp.zeros((), d),
     "count": lambda d: jnp.zeros((), jnp.int32),
+    "size": lambda d: jnp.zeros((), jnp.int32),
     "min": lambda d: _sentinel_for(d),
     "max": lambda d: (-_sentinel_for(d) if jnp.issubdtype(d, jnp.floating)
                       else jnp.asarray(jnp.iinfo(d).min, d)),
@@ -194,7 +243,17 @@ def groupby_local(table: Table, keys: Sequence[str],
 
     Output columns: keys plus ``f"{col}_{agg}"``.  Mean is decomposed into
     sum+count by the distributed layer so partial aggregates compose.
+
+    Null semantics (pandas): rows with a null key are dropped; sum/count/
+    min/max skip null values (``count`` counts non-null, ``size`` counts
+    rows); min/max over an all-null group are null, so those outputs carry
+    a ``__m_`` mask when their input does.  Because null value slots hold
+    the column's sentinel-free canonical zero, the masked reductions below
+    stay mergeable across morsels: an all-null partial emits its agg
+    identity plus a False mask, and re-aggregating partials (whose masks
+    make them nullable inputs) composes correctly.
     """
+    table = drop_null_keys(table, keys)
     sorted_t = sort_local(table, keys)
     valid = sorted_t.valid_mask()
     # segment ids: new segment where any key changes (within valid prefix)
@@ -216,22 +275,41 @@ def groupby_local(table: Table, keys: Sequence[str],
             jnp.where(valid, v, jnp.zeros((), v.dtype)), mode="drop")
     for col, agg_names in aggs.items():
         v = sorted_t.columns[col]
+        cmask = sorted_t.columns.get(mask_name(col))
+        # effective = rows that contribute to null-skipping aggregates
+        eff = valid if cmask is None else (valid & cmask)
         for agg in agg_names:
+            out_mask = None
             if agg == "sum":
-                vv = jnp.where(valid, v, jnp.zeros((), v.dtype))
+                vv = jnp.where(eff, v, jnp.zeros((), v.dtype))
                 r = jax.ops.segment_sum(vv, seg_ids, num_segments=cap)
             elif agg == "count":
+                r = jax.ops.segment_sum(eff.astype(jnp.int32), seg_ids,
+                                        num_segments=cap)
+            elif agg == "size":
                 r = jax.ops.segment_sum(valid.astype(jnp.int32), seg_ids,
                                         num_segments=cap)
             elif agg == "min":
-                vv = jnp.where(valid, v, _sentinel_for(v.dtype))
+                vv = jnp.where(eff, v, _sentinel_for(v.dtype))
                 r = jax.ops.segment_min(vv, seg_ids, num_segments=cap)
+                if cmask is not None:
+                    out_mask = jax.ops.segment_max(
+                        eff.astype(jnp.int32), seg_ids,
+                        num_segments=cap) > 0
             elif agg == "max":
                 lo = _AGG_INIT["max"](v.dtype)
-                vv = jnp.where(valid, v, lo)
+                vv = jnp.where(eff, v, lo)
                 r = jax.ops.segment_max(vv, seg_ids, num_segments=cap)
+                if cmask is not None:
+                    out_mask = jax.ops.segment_max(
+                        eff.astype(jnp.int32), seg_ids,
+                        num_segments=cap) > 0
             else:
                 raise ValueError(f"unsupported agg {agg!r}")
+            if out_mask is not None:
+                # canonical zero where the whole group was null
+                r = jnp.where(out_mask, r, jnp.zeros((), r.dtype))
+                out_cols[mask_name(f"{col}_{agg}")] = out_mask
             out_cols[f"{col}_{agg}"] = r
     out = Table(out_cols, num_groups)
     return out.mask_padding()
@@ -254,8 +332,15 @@ def join_local(left: Table, right: Table, on: str,
     ``with_overflow=True`` additionally returns the number of result rows
     dropped by the static capacity (free here — the total match count is a
     byproduct of the merge — whereas ``join_overflow`` re-sorts both sides).
+
+    Null keys never match (pandas ``merge``): rows with a null ``on`` value
+    are dropped from both sides first.  Nullable payload columns keep their
+    masks; a right-side mask follows its base column through the collision
+    suffix (``v`` -> ``v_r`` implies ``__m_v`` -> ``__m_v_r``).
     """
     out_cap = out_capacity or left.capacity
+    left = drop_null_keys(left, [on])
+    right = drop_null_keys(right, [on])
     ls = sort_local(left, [on])
     rs = sort_local(right, [on])
     lvalid = ls.valid_mask()
@@ -285,10 +370,13 @@ def join_local(left: Table, right: Table, on: str,
     for name in ls.column_names:
         cols[name] = jnp.take(ls.columns[name], l_row_c, axis=0)
     for name in rs.column_names:
-        if name == on:
+        if name == on or name.startswith(mask_name("")):
             continue
         tgt = name if name not in cols else name + suffix
         cols[tgt] = jnp.take(rs.columns[name], r_row, axis=0)
+        rmask = rs.columns.get(mask_name(name))
+        if rmask is not None:
+            cols[mask_name(tgt)] = jnp.take(rmask, r_row, axis=0)
     out = Table(cols, jnp.minimum(total, out_cap).astype(jnp.int32))
     out = out.mask_padding()
     if with_overflow:
@@ -298,8 +386,8 @@ def join_local(left: Table, right: Table, on: str,
 
 def join_overflow(left: Table, right: Table, on: str, out_capacity: int) -> jax.Array:
     """Number of join result rows dropped by the static output capacity."""
-    ls = sort_local(left, [on])
-    rs = sort_local(right, [on])
+    ls = sort_local(drop_null_keys(left, [on]), [on])
+    rs = sort_local(drop_null_keys(right, [on]), [on])
     lvalid = ls.valid_mask()
     lkey = jnp.where(lvalid, ls.columns[on], _sentinel_for(ls.columns[on].dtype))
     rkey = jnp.where(rs.valid_mask(), rs.columns[on],

@@ -43,8 +43,8 @@ from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
-from ..expr import BinOp, Col, Expr, Lit, OpaqueExpr, UnaryOp, _ARITH, \
-    _BOOL, _COMPARE
+from ..expr import BinOp, Col, Expr, FillNull, IsNull, Lit, OpaqueExpr, \
+    UnaryOp, _ARITH, _BOOL, _COMPARE
 
 __all__ = [
     "Dictionary", "is_string_array", "encode_strings", "decode_codes",
@@ -247,6 +247,44 @@ def _lower(e: Expr, dicts: Mapping[str, Dictionary]):
                 f"unary {e.op!r} on a dictionary-encoded string value "
                 f"({e!r}): {_UNSUPPORTED}")
         return UnaryOp(e.op, op), None
+    if isinstance(e, IsNull):
+        # null-ness lives in the validity mask, not the codes: defined for
+        # every column type, always a plain boolean result
+        op, meta = _lower(e.operand, dicts)
+        if isinstance(meta, _StrLit):
+            op = _code_lit(0)          # a literal is never null
+        return IsNull(op), None
+    if isinstance(e, FillNull):
+        op, om = _lower(e.operand, dicts)
+        fl, fm = _lower(e.fill, dicts)
+        if isinstance(om, _StrLit):    # literal operand: never null
+            return op, om
+        if isinstance(om, tuple):
+            if isinstance(fm, _StrLit):
+                s = fm.value
+                arr = np.asarray(om) if om else np.zeros((0,), "U1")
+                lo = int(np.searchsorted(arr, s, side="left"))
+                if not (lo < len(om) and om[lo] == s):
+                    raise DictTypeError(
+                        f"fill_null value {s!r} is not in the column's "
+                        f"dictionary ({e!r}); fill with an existing value "
+                        f"or extend the dictionary at ingest")
+                return FillNull(op, _code_lit(lo)), om
+            if isinstance(fm, tuple):
+                if fm != om:
+                    raise DictTypeError(
+                        f"fill_null fill column uses a different dictionary "
+                        f"than its operand ({e!r}); join/merge them first "
+                        f"so the planner recodes to a shared dictionary")
+                return FillNull(op, fl), om
+            raise DictTypeError(
+                f"cannot fill_null a dictionary-encoded string column "
+                f"with a numeric value ({e!r})")
+        if isinstance(fm, (tuple, _StrLit)):
+            raise DictTypeError(
+                f"cannot fill_null a numeric column with a string value "
+                f"({e!r})")
+        return FillNull(op, fl), None
     if isinstance(e, OpaqueExpr):
         cols = e.columns()
         touched = sorted(dicts if cols is None
@@ -313,4 +351,6 @@ def expr_dictionary(e: Expr, dicts: Mapping[str, Dictionary]
         return dicts.get(e.name)
     if isinstance(e, Lit) and isinstance(e.value, (str, np.str_)):
         return (str(e.value),)
+    if isinstance(e, FillNull):
+        return expr_dictionary(e.operand, dicts)
     return None

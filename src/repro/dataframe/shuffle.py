@@ -83,12 +83,18 @@ def default_bucket_capacity(capacity: int, p: int, factor: float = 2.0) -> int:
 
 
 def _pack_u32(cols: Dict[str, jax.Array], names) -> jax.Array:
-    """Bitcast 4-byte columns to uint32 and stack: (cap,) xN -> (cap, N)."""
+    """Bitcast 4-byte columns to uint32 and stack: (cap,) xN -> (cap, N).
+
+    Bool columns (validity masks) widen to uint32 lanes: wasteful per bit,
+    but it keeps the whole row — masks included — in the one large packed
+    collective instead of issuing a separate small all_to_all per mask."""
     parts = []
     for n in names:
         v = cols[n]
         if v.dtype == jnp.float32:
             v = jax.lax.bitcast_convert_type(v, jnp.uint32)
+        elif v.dtype == jnp.bool_:
+            v = v.astype(jnp.uint32)
         elif v.dtype in (jnp.int32, jnp.uint32):
             v = v.view(jnp.uint32) if hasattr(v, "view") else jax.lax.bitcast_convert_type(v, jnp.uint32)
         else:
@@ -214,7 +220,8 @@ def shuffle(
     names = table.column_names
     dtypes = {n: table.columns[n].dtype for n in names}
     four_byte = [n for n in names
-                 if dtypes[n] in (jnp.float32, jnp.int32, jnp.uint32)
+                 if dtypes[n] in (jnp.float32, jnp.int32, jnp.uint32,
+                                  jnp.bool_)
                  and table.columns[n].ndim == 1]
     packables = four_byte if pack else []
     singles = [n for n in names if n not in packables]

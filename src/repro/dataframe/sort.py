@@ -14,22 +14,47 @@ import jax
 import jax.numpy as jnp
 
 from ..comm import Communicator
+from ..nulls import mask_name
 from .ops_local import sort_local
 from .shuffle import ShuffleStats, shuffle
 from .table import Table, _sentinel_for
 
 
-def _sample_splitters(key: jax.Array, row_count: jax.Array,
-                      comm: Communicator, samples: int) -> jax.Array:
-    """Gather per-rank key samples and return p-1 global splitters."""
+def _range_dest(table: Table, key_col: str, comm: Communicator,
+                samples: int) -> jax.Array:
+    """Destination ranks for a range partition on ``key_col``.
+
+    Nulls-last semantics: null keys are excluded from the splitter sample
+    (their canonical-zero values would skew the quantiles toward rank 0)
+    and routed to the last rank, where the local sort puts them at the
+    tail — the global order ends ... , max, null, null."""
     p = comm.size()
-    cap = key.shape[0]
-    skey = jnp.sort(jnp.where(jnp.arange(cap) < row_count, key,
-                              _sentinel_for(key.dtype)))
-    # evenly spaced positions within the valid prefix
-    n_local = jnp.minimum(row_count, samples)
-    idx = (jnp.arange(samples) * jnp.maximum(row_count, 1)) // jnp.maximum(samples, 1)
-    idx = jnp.minimum(idx, jnp.maximum(row_count - 1, 0)).astype(jnp.int32)
+    key = table.columns[key_col]
+    m = table.columns.get(mask_name(key_col))
+    valid = table.valid_mask()
+    if m is None:
+        splitters = _sample_splitters(key, valid, comm, samples)
+        return jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    splitters = _sample_splitters(key, valid & m, comm, samples)
+    dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    return jnp.where(m, dest, p - 1)
+
+
+def _sample_splitters(key: jax.Array, valid: jax.Array,
+                      comm: Communicator, samples: int) -> jax.Array:
+    """Gather per-rank key samples and return p-1 global splitters.
+
+    ``valid`` is a boolean participation mask (row-count prefix for plain
+    sorts; additionally excluding null keys for nullable sort columns —
+    their canonical-zero values would drag the quantiles toward rank 0).
+    """
+    p = comm.size()
+    n_valid = jnp.sum(valid).astype(jnp.int32)
+    skey = jnp.sort(jnp.where(valid, key, _sentinel_for(key.dtype)))
+    # evenly spaced positions within the sorted valid prefix
+    n_local = jnp.minimum(n_valid, samples)
+    idx = (jnp.arange(samples) * jnp.maximum(n_valid, 1)) // jnp.maximum(samples, 1)
+    idx = jnp.minimum(idx, jnp.maximum(n_valid - 1, 0)).astype(jnp.int32)
     local = jnp.where(jnp.arange(samples) < n_local, jnp.take(skey, idx),
                       _sentinel_for(key.dtype))
     allsamp = comm.all_gather(local).reshape(-1)          # (p*samples,)
@@ -53,9 +78,7 @@ def sort(
     lex-sorted by all of ``by``.  (Distributed tie order across ranks follows
     the primary key only — the paper's benchmark sorts single int columns.)
     """
-    key = table.columns[by[0]]
-    splitters = _sample_splitters(key, table.row_count, comm, samples)
-    dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    dest = _range_dest(table, by[0], comm, samples)
     shuffled, stats = shuffle(table, comm, dest=dest, **shuffle_kw)
     return sort_local(shuffled, by), stats
 
@@ -72,7 +95,5 @@ def repartition_balanced(
     Range-partitions on sampled quantiles of ``key_col`` without the final
     local sort — used for skew/straggler mitigation in long pipelines.
     """
-    key = table.columns[key_col]
-    splitters = _sample_splitters(key, table.row_count, comm, samples)
-    dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+    dest = _range_dest(table, key_col, comm, samples)
     return shuffle(table, comm, dest=dest, **shuffle_kw)

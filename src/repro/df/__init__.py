@@ -20,11 +20,12 @@ See ``docs/api.md`` for the full frontend + expression reference.
 """
 
 from ..expr import Expr, col, lit
-from .frame import DataFrame, GroupBy, from_pandas, from_table, read_numpy
+from .frame import (DataFrame, GroupBy, from_pandas, from_table, read_csv,
+                    read_numpy, read_parquet)
 from .session import get_env, reset_default_env, session, set_default_env
 
 __all__ = [
     "DataFrame", "GroupBy", "Expr", "col", "lit",
-    "read_numpy", "from_pandas", "from_table",
+    "read_numpy", "from_pandas", "from_table", "read_parquet", "read_csv",
     "session", "get_env", "set_default_env", "reset_default_env",
 ]

@@ -29,16 +29,20 @@ from ..expr import Col, Expr, ensure_expr
 from ..planner.logical import groupby_schema, join_schema
 from .session import get_active_scheduler, get_env, get_session_defaults
 
-__all__ = ["DataFrame", "GroupBy", "read_numpy", "from_pandas", "from_table"]
+__all__ = ["DataFrame", "GroupBy", "read_numpy", "from_pandas", "from_table",
+           "read_parquet", "read_csv"]
 
 _src_ids = itertools.count()
 
 
 def _source_schema(table: Any) -> Tuple[str, ...]:
+    # validity masks (__m_*) are physical companions, not logical schema:
+    # they ride along implicitly and never appear in df.columns
+    from ..nulls import data_columns
     if hasattr(table, "column_names"):
-        return tuple(sorted(table.column_names))
+        return tuple(sorted(data_columns(table.column_names)))
     if isinstance(table, Mapping):
-        return tuple(sorted(table))
+        return tuple(sorted(data_columns(table)))
     raise TypeError(f"cannot infer a schema from {type(table).__name__}")
 
 
@@ -189,6 +193,45 @@ class DataFrame:
         self._check_cols(by, "sort_values")
         return self._derive(self.plan.sort(by, **kw), self._schema)
 
+    # -- missing data ---------------------------------------------------- #
+    def dropna(self, subset: Optional[Sequence[str]] = None) -> "DataFrame":
+        """Drop rows that are null in any of ``subset`` (default: any
+        column).  Lowers to a null-aware filter, so the optimizer elides
+        the check entirely for provably non-null columns."""
+        cols = list(self._schema) if subset is None else list(subset)
+        if subset is not None:
+            self._check_cols(cols, "dropna subset")
+        if not cols:
+            return self
+        pred: Expr = ~Col(cols[0]).is_null()
+        for c in cols[1:]:
+            pred = pred & ~Col(c).is_null()
+        return self.filter(pred)
+
+    def fillna(self, value: Union[Mapping[str, Any], Any],
+               subset: Optional[Sequence[str]] = None) -> "DataFrame":
+        """Replace nulls: a ``{column: fill}`` mapping, or one fill value
+        for ``subset`` (default: every column).  String columns need a
+        fill value present in their dictionary."""
+        if isinstance(value, Mapping):
+            if subset is not None:
+                raise TypeError("pass either a mapping or subset=, not both")
+            fills = dict(value)
+        else:
+            cols = list(self._schema) if subset is None else list(subset)
+            fills = {c: value for c in cols}
+        self._check_cols(fills, "fillna")
+        return self.with_columns(
+            {c: Col(c).fill_null(ensure_expr(v)) for c, v in fills.items()})
+
+    def isna(self, subset: Optional[Sequence[str]] = None) -> "DataFrame":
+        """Replace ``subset`` columns (default: all) by booleans that are
+        True where the value is null (pandas ``df.isna()``)."""
+        cols = list(self._schema) if subset is None else list(subset)
+        if subset is not None:
+            self._check_cols(cols, "isna subset")
+        return self.with_columns({c: Col(c).is_null() for c in cols})
+
     def repartition(self, on: Union[str, Sequence[str]], **kw) -> "DataFrame":
         """Hash-partition rows by key column(s) (an explicit shuffle; the
         optimizer elides it if placement already holds)."""
@@ -283,9 +326,14 @@ class DataFrame:
                        timeout=timeout, retries=retries, overflow=overflow,
                        faults=faults, **kw)
 
-    def to_numpy(self, **kw) -> Dict[str, np.ndarray]:
-        """``collect`` + gather valid rows to host numpy columns."""
-        return self.collect(**kw).to_numpy()
+    def to_numpy(self, nulls: str = "pandas", **kw) -> Dict[str, np.ndarray]:
+        """``collect`` + gather valid rows to host numpy columns.
+
+        ``nulls="pandas"`` (default) re-materializes validity masks as
+        NaN / ``None``; ``nulls="mask"`` returns the raw physical layout
+        (canonical-zero data + ``__m_*`` bool masks) for bit-identity
+        checks."""
+        return self.collect(**kw).to_numpy(nulls=nulls)
 
     def to_pandas(self, **kw):
         """``collect`` + convert to a ``pandas.DataFrame``."""
@@ -355,9 +403,10 @@ def from_table(table: Union[DistTable, SpillTable, Mapping[str, np.ndarray]],
                name: Optional[str] = None,
                env: Optional[CylonEnv] = None) -> DataFrame:
     """Wrap an existing ``DistTable`` / ``SpillTable`` / host column dict
-    as a scan.  Host-resident sources (SpillTable, dicts) require
-    ``collect(morsel_rows=...)`` streaming execution.  ``env`` pins the
-    gang the frame executes on (see ``DataFrame.collect``)."""
+    as a scan.  ``SpillTable`` sources run out-of-core under
+    ``collect(morsel_rows=...)`` or are scattered onto the gang for
+    in-core modes; raw column dicts require the morsel path.  ``env`` pins
+    the gang the frame executes on (see ``DataFrame.collect``)."""
     name = name or f"t{next(_src_ids)}"
     return DataFrame(Plan.scan(name), {name: table}, _source_schema(table),
                      env)
@@ -399,6 +448,49 @@ def read_numpy(data: Mapping[str, np.ndarray], *,
             raise TypeError("chunk_rows only applies with spill=True")
         table = DistTable.from_numpy(dict(data), p, capacity)
     return from_table(table, name, env)
+
+
+def _resolve_parallelism(env: Optional[CylonEnv]) -> int:
+    if env is not None:
+        return env.parallelism
+    sched = get_active_scheduler()
+    return sched.gang_size if sched is not None else get_env().parallelism
+
+
+def read_parquet(source, *, env: Optional[CylonEnv] = None,
+                 columns: Optional[Sequence[str]] = None,
+                 batch_rows: Optional[int] = None,
+                 name: Optional[str] = None, **kw) -> DataFrame:
+    """Ingest Parquet file(s) as a host-resident out-of-core scan.
+
+    ``source`` is a path, a glob, or a list of either; row groups stream
+    in ``batch_rows``-row batches straight into the spill format, round-
+    robin over the gang — whole files are never materialized, so datasets
+    larger than device memory run under ``collect(morsel_rows=...)``.
+    Missing values become validity masks (NaN / ``None`` on the way back
+    out); string columns are dictionary-encoded incrementally, with a
+    process-level dictionary cache keyed by the source files.  Requires
+    pyarrow (``read_csv`` does not).  See ``docs/io.md``.
+    """
+    from ..io import read_parquet as _read
+    if batch_rows is not None:
+        kw["batch_rows"] = batch_rows
+    spill = _read(source, _resolve_parallelism(env), columns=columns, **kw)
+    return from_table(spill, name, env)
+
+
+def read_csv(source, *, env: Optional[CylonEnv] = None,
+             batch_rows: Optional[int] = None,
+             name: Optional[str] = None, **kw) -> DataFrame:
+    """Ingest CSV file(s) (header row required) as a host-resident
+    out-of-core scan — ``read_parquet`` semantics, CSV framing.  Empty
+    fields are null in every column type.  Streams via pyarrow when
+    available, else a pure-python fallback lane.  See ``docs/io.md``."""
+    from ..io import read_csv as _read
+    if batch_rows is not None:
+        kw["batch_rows"] = batch_rows
+    spill = _read(source, _resolve_parallelism(env), **kw)
+    return from_table(spill, name, env)
 
 
 def from_pandas(pdf, **kw) -> DataFrame:

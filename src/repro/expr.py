@@ -40,8 +40,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Expr", "Col", "Lit", "BinOp", "UnaryOp", "OpaqueExpr",
-           "col", "lit", "ensure_expr", "token"]
+from .nulls import mask_name
+
+__all__ = ["Expr", "Col", "Lit", "BinOp", "UnaryOp", "OpaqueExpr", "IsNull",
+           "FillNull", "col", "lit", "ensure_expr", "token"]
 
 
 # ---------------------------------------------------------------------- #
@@ -112,6 +114,26 @@ _PREC = {"==": 1, "!=": 1, "<": 1, "<=": 1, ">": 1, ">=": 1,
          "+": 5, "-": 5, "*": 6, "/": 6, "//": 6, "%": 6, "**": 8}
 
 
+# ---------------------------------------------------------------------- #
+# Three-valued (Kleene) helpers
+# ---------------------------------------------------------------------- #
+def _canon(value, valid):
+    """Re-establish the canonical-zero invariant on a masked value."""
+    if valid is None:
+        return value
+    value = jnp.asarray(value)
+    return jnp.where(valid, value, jnp.zeros_like(value))
+
+
+def _and_valid(ma, mb):
+    """Null-propagating validity combine (None = provably all-valid)."""
+    if ma is None:
+        return mb
+    if mb is None:
+        return ma
+    return ma & mb
+
+
 class Expr:
     """Base class: operator overloads build the tree; subclasses store it."""
 
@@ -130,6 +152,23 @@ class Expr:
     def evaluate(self, table) -> jax.Array:
         """Lower to a jnp value over ``table``'s columns (jit-traceable)."""
         raise NotImplementedError
+
+    def evaluate_masked(self, table):
+        """Kleene three-valued lowering: ``(value, valid)`` where ``valid``
+        is a boolean validity array or ``None`` (provably all-valid — the
+        common case, compiling to exactly the unmasked program).
+
+        Invariant: wherever ``valid`` is False the returned ``value`` holds
+        the canonical zero of its dtype (see ``repro.nulls``), so masked
+        results hash / pack / compare bit-identically.
+        """
+        return self.evaluate(table), None
+
+    def nullable(self, nulls) -> bool:
+        """May this expression yield null, given ``nulls`` = the set of
+        nullable input columns?  Conservative (True when unknown): the
+        planner uses False to elide mask work, never to require it."""
+        return True
 
     def is_boolean(self) -> bool:
         """True if this expression provably yields a boolean mask — the
@@ -233,6 +272,14 @@ class Expr:
     def abs(self) -> "UnaryOp":
         return UnaryOp("abs", self)
 
+    def is_null(self) -> "IsNull":
+        """True where this expression is null (never null itself)."""
+        return IsNull(self)
+
+    def fill_null(self, value) -> "FillNull":
+        """Replace null slots with ``value`` (scalar or expression)."""
+        return FillNull(self, ensure_expr(value))
+
     def __invert__(self):
         return UnaryOp("~", self)
 
@@ -274,6 +321,13 @@ class Col(Expr):
             raise KeyError(
                 f"column {self.name!r} not in table "
                 f"(have {list(table.column_names)})") from None
+
+    def evaluate_masked(self, table):
+        # null slots already hold canonical zero (ingest invariant)
+        return self.evaluate(table), table.columns.get(mask_name(self.name))
+
+    def nullable(self, nulls) -> bool:
+        return self.name in nulls
 
     def _render(self, parent_prec: int) -> str:
         return self.name
@@ -324,6 +378,9 @@ class Lit(Expr):
                 f"see docs/data_model.md)")
         return self.value  # jnp ops promote python scalars weakly
 
+    def nullable(self, nulls) -> bool:
+        return False
+
     def _render(self, parent_prec: int) -> str:
         return repr(self.value)
 
@@ -362,6 +419,31 @@ class BinOp(Expr):
         return _BINOPS[self.op](self.left.evaluate(table),
                                 self.right.evaluate(table))
 
+    def evaluate_masked(self, table):
+        va, ma = self.left.evaluate_masked(table)
+        vb, mb = self.right.evaluate_masked(table)
+        if ma is None and mb is None:
+            return _BINOPS[self.op](va, vb), None
+        value = _BINOPS[self.op](va, vb)
+        if (self.op in ("&", "|")
+                and jnp.result_type(va) == jnp.bool_
+                and jnp.result_type(vb) == jnp.bool_):
+            # Kleene: a known false (&) / true (|) side decides the result
+            # even when the other side is null.  Canonical zero means null
+            # value slots already read as False.
+            a_ok = True if ma is None else ma
+            b_ok = True if mb is None else mb
+            if self.op == "&":
+                valid = (a_ok & b_ok) | (a_ok & ~va) | (b_ok & ~vb)
+            else:
+                valid = (a_ok & b_ok) | (a_ok & va) | (b_ok & vb)
+        else:
+            valid = _and_valid(ma, mb)
+        return _canon(value, valid), valid
+
+    def nullable(self, nulls) -> bool:
+        return self.left.nullable(nulls) or self.right.nullable(nulls)
+
     def _render(self, parent_prec: int) -> str:
         prec = _PREC[self.op]
         if self.op == "**":    # right-associative: (a**b)**c needs parens
@@ -397,6 +479,13 @@ class UnaryOp(Expr):
     def evaluate(self, table) -> jax.Array:
         return _UNARY[self.op](self.operand.evaluate(table))
 
+    def evaluate_masked(self, table):
+        v, m = self.operand.evaluate_masked(table)
+        return _canon(_UNARY[self.op](v), m), m
+
+    def nullable(self, nulls) -> bool:
+        return self.operand.nullable(nulls)
+
     def _render(self, parent_prec: int) -> str:
         if self.op == "abs":
             return f"abs({self.operand._render(0)})"
@@ -404,6 +493,92 @@ class UnaryOp(Expr):
         # Python parses "-a ** 2" as -(a**2)), tighter than * and /
         s = f"{self.op}{self.operand._render(7)}"
         return f"({s})" if parent_prec > 7 else s
+
+
+class IsNull(Expr):
+    """``expr.is_null()`` — True where the operand is null; never null
+    itself (the SQL ``IS NULL`` escape from three-valued logic)."""
+
+    __slots__ = ("operand",)
+
+    def __init__(self, operand: Expr):
+        object.__setattr__(self, "operand", ensure_expr(operand))
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> Optional[FrozenSet[str]]:
+        return self.operand.columns()
+
+    def fingerprint(self) -> str:
+        return f"isnull({self.operand.fingerprint()})"
+
+    def is_boolean(self) -> bool:
+        return True
+
+    def nullable(self, nulls) -> bool:
+        return False
+
+    def evaluate(self, table) -> jax.Array:
+        # unmasked path: the operand is provably non-null
+        v = self.operand.evaluate(table)
+        return jnp.zeros(jnp.shape(v), dtype=bool)
+
+    def evaluate_masked(self, table):
+        v, m = self.operand.evaluate_masked(table)
+        if m is None:
+            return jnp.zeros(jnp.shape(v), dtype=bool), None
+        return ~m, None
+
+    def _render(self, parent_prec: int) -> str:
+        return f"is_null({self.operand._render(0)})"
+
+
+class FillNull(Expr):
+    """``expr.fill_null(v)`` — the operand with null slots replaced by
+    ``v`` (a scalar or expression); null only where both are null."""
+
+    __slots__ = ("operand", "fill")
+
+    def __init__(self, operand: Expr, fill: Expr):
+        object.__setattr__(self, "operand", ensure_expr(operand))
+        object.__setattr__(self, "fill", ensure_expr(fill))
+
+    def __setattr__(self, *_):
+        raise AttributeError("Expr nodes are immutable")
+
+    def columns(self) -> Optional[FrozenSet[str]]:
+        a, b = self.operand.columns(), self.fill.columns()
+        if a is None or b is None:
+            return None
+        return a | b
+
+    def fingerprint(self) -> str:
+        return (f"fillnull({self.operand.fingerprint()};"
+                f"{self.fill.fingerprint()})")
+
+    def is_boolean(self) -> bool:
+        return self.operand.is_boolean() and self.fill.is_boolean()
+
+    def nullable(self, nulls) -> bool:
+        return self.fill.nullable(nulls)
+
+    def evaluate(self, table) -> jax.Array:
+        # unmasked path: nothing to fill
+        return self.operand.evaluate(table)
+
+    def evaluate_masked(self, table):
+        vo, mo = self.operand.evaluate_masked(table)
+        if mo is None:
+            return vo, None
+        vf, mf = self.fill.evaluate_masked(table)
+        value = jnp.where(mo, vo, vf)
+        valid = None if mf is None else (mo | mf)
+        return _canon(value, valid), valid
+
+    def _render(self, parent_prec: int) -> str:
+        return (f"fill_null({self.operand._render(0)}, "
+                f"{self.fill._render(0)})")
 
 
 class OpaqueExpr(Expr):

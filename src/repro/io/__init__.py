@@ -1,0 +1,23 @@
+"""``repro.io`` — Arrow-native file ingest into the engine's spill format.
+
+``read_parquet`` / ``read_csv`` stream file batches (Parquet row groups,
+CSV blocks) straight into a round-robin-partitioned ``SpillTable`` — the
+out-of-core representation of a distributed table — so datasets larger
+than device memory ingest without ever materializing a whole file, and
+feed ``collect(morsel_rows=...)`` morsel pipelines directly.  String
+columns go through the dictionary encoder with incremental dictionary
+growth; a process-level ``DictionaryCache`` (keyed by source paths +
+sizes + mtimes) makes a repeat read of an unchanged source recode-free.
+Missing values become ``__m_*`` validity masks (``repro.nulls``).
+
+Frontend sugar lives in ``repro.df`` (``rdf.read_parquet(...)`` returns a
+lazy DataFrame); this package is the table-level API.  See ``docs/io.md``.
+"""
+
+from .csv import read_csv
+from .ingest import (DICT_CACHE, DictionaryCache, IngestInfo, TableBuilder,
+                     have_pyarrow)
+from .parquet import read_parquet
+
+__all__ = ["read_parquet", "read_csv", "IngestInfo", "DictionaryCache",
+           "DICT_CACHE", "TableBuilder", "have_pyarrow"]

@@ -95,6 +95,13 @@ def render_analyze(pplan, stats, scan_rows: Optional[Dict[str, int]] = None,
         + (f", {stats.morsels} morsels" if getattr(stats, "morsels", 0)
            else ""),
     ]
+    if getattr(stats, "rows_read", 0) or getattr(stats, "bytes_read", 0):
+        # ingest attribution: a distinct "scan" stage ahead of stage 0,
+        # fed by the scan tables' IngestInfo provenance (repro.io)
+        lines.append(
+            f"stage scan: ingested {getattr(stats, 'rows_read', 0)} rows / "
+            f"{_fmt_bytes(getattr(stats, 'bytes_read', 0))} from source "
+            f"files")
     by_stage: Dict[int, list] = {}
     for n in pplan.order:
         by_stage.setdefault(pplan.stage_of[n.nid], []).append(n)
@@ -228,6 +235,8 @@ class QueryReport:
             "degraded": getattr(st, "degraded", 0),
             "faults_injected": getattr(st, "faults_injected", 0),
             "scan_rows": self.scan_rows,
+            "rows_read": getattr(st, "rows_read", 0),
+            "bytes_read": getattr(st, "bytes_read", 0),
             "result_rows": self.result_rows,
             "shuffle_records": [
                 {"label": r.label, "rows": r.rows, "bytes": r.bytes,

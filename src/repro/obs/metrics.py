@@ -273,6 +273,14 @@ def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
         reg.counter("faults_injected_total",
                     "faults fired by the active FaultPlan").inc(
             stats.faults_injected, mode=mode)
+    if getattr(stats, "rows_read", 0):
+        reg.counter("rows_read_total",
+                    "rows ingested from scan sources").inc(
+            stats.rows_read, mode=mode)
+    if getattr(stats, "bytes_read", 0):
+        reg.counter("bytes_read_total",
+                    "source bytes ingested from scan sources").inc(
+            stats.bytes_read, mode=mode)
     if wall_time_s > 0:
         reg.histogram("query_wall_s", "end-to-end query wall time").observe(
             wall_time_s, mode=mode)
@@ -297,5 +305,7 @@ def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
         "retries": getattr(stats, "retries", 0),
         "degraded": getattr(stats, "degraded", 0),
         "faults_injected": getattr(stats, "faults_injected", 0),
+        "rows_read": getattr(stats, "rows_read", 0),
+        "bytes_read": getattr(stats, "bytes_read", 0),
     }
     return reg.record_query(record)

@@ -18,7 +18,10 @@ from .physical import PhysicalPlan
 def _label(n: LogicalNode) -> str:
     p = n.params
     if n.op == "scan":
-        return f"scan[{p['name']}]"
+        # ingested sources (repro.io) carry a provenance summary:
+        # ``scan[parquet: 3 files, ~1000 rows]``
+        return f"scan[{p['source']}]" if p.get("source") else \
+            f"scan[{p['name']}]"
     if n.op == "noop":
         return f"noop[{p.get('note', '')}]"
     if n.op == "project":

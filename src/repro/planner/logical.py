@@ -101,6 +101,11 @@ class LogicalNode:
     #: per-column dictionaries of dictionary-encoded string columns in the
     #: output schema (``dataframe.schema``); device columns hold codes
     dicts: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
+    #: output columns that MAY contain nulls (carry a ``__m_*`` validity
+    #: mask at runtime).  Conservative in the nullable direction: the
+    #: optimizer uses ``c not in nulls`` to elide mask work, never the
+    #: reverse, so over-approximating nullability is always sound.
+    nulls: frozenset = frozenset()
     nid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     # -- physical classification (consulted by lowering & staging) ------- #
@@ -203,6 +208,11 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
             n.schema = tuple(sorted(cols))
             n.est_rows = float(rows)
             n.dicts = dict(entry[2]) if len(entry) > 2 else {}
+            n.nulls = frozenset(entry[3]) if len(entry) > 3 else frozenset()
+            if len(entry) > 4 and entry[4]:
+                # ingest provenance summary (repro.io) — EXPLAIN renders
+                # ``scan[parquet: N files, ~M rows]``
+                n.params.setdefault("source", entry[4])
         n.partitioning = Partitioning.none()  # block-distributed source
         return
 
@@ -210,16 +220,19 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
     if n.op == "noop":                        # identity left by shuffle elision
         n.schema, n.partitioning, n.est_rows = i0.schema, i0.partitioning, i0.est_rows
         n.dicts = dict(i0.dicts)
+        n.nulls = i0.nulls
     elif n.op == "project":
         n.schema = tuple(sorted(p["cols"]))
         n.partitioning = i0.partitioning.restrict(n.schema)
         n.est_rows = i0.est_rows
         n.dicts = _restrict_dicts(i0.dicts, n.schema)
+        n.nulls = i0.nulls & set(n.schema)
     elif n.op == "filter":
         n.schema = i0.schema
         n.partitioning = i0.partitioning
         n.est_rows = i0.est_rows * DEFAULT_FILTER_SELECTIVITY
         n.dicts = dict(i0.dicts)
+        n.nulls = i0.nulls
     elif n.op == "with_columns":
         # assignments may introduce new columns; rewriting a partitioning
         # column's values breaks the placement property
@@ -240,6 +253,12 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
             if d is not None:
                 dicts[name] = d
         n.dicts = dicts
+        nulls = set(i0.nulls) - assigned
+        for name, e in p["exprs"].items():
+            nullable = getattr(e, "nullable", None)
+            if nullable is None or nullable(i0.nulls):
+                nulls.add(name)
+        n.nulls = frozenset(nulls)
     elif n.op == "add_scalar":
         n.schema = i0.schema
         touched = p.get("cols")
@@ -249,6 +268,7 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                           else i0.partitioning)
         n.est_rows = i0.est_rows
         n.dicts = dict(i0.dicts)
+        n.nulls = i0.nulls
     elif n.op == "recode":
         # static per-column code remap onto the target dictionaries; the
         # recoded columns' hash placement no longer holds (codes changed)
@@ -258,6 +278,7 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                           else i0.partitioning)
         n.est_rows = i0.est_rows
         n.dicts = {**i0.dicts, **p["targets"]}
+        n.nulls = i0.nulls
     elif n.op == "shuffle":
         n.schema = i0.schema
         # an explicit dest array routes rows arbitrarily — no hash property
@@ -265,6 +286,7 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                           else Partitioning.hash_(p["key_cols"]))
         n.est_rows = i0.est_rows
         n.dicts = dict(i0.dicts)
+        n.nulls = i0.nulls
     elif n.op == "join":
         l, r = ins
         n.schema = join_schema(l.schema, r.schema, p["on"])
@@ -281,6 +303,14 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                 continue
             dicts[c if c not in lcols else c + "_r"] = d
         n.dicts = _restrict_dicts(dicts, n.schema)
+        # null join keys never match (they are dropped): the output key is
+        # non-null; value columns keep nullability through the _r rename
+        nulls = set(l.nulls) - {p["on"]}
+        for c in r.nulls:
+            if c == p["on"]:
+                continue
+            nulls.add(c if c not in lcols else c + "_r")
+        n.nulls = frozenset(nulls & set(n.schema))
     elif n.op == "groupby":
         n.schema = groupby_schema(p["keys"], p["aggs"])
         if p.get("elide_shuffle"):
@@ -298,11 +328,21 @@ def _annotate_node(n: LogicalNode, catalog) -> None:
                     if a in ("min", "max"):
                         dicts[f"{col}_{a}"] = i0.dicts[col]
         n.dicts = _restrict_dicts(dicts, n.schema)
+        # null keys form no groups; sum/count/size never yield null; an
+        # all-null group has null min/max/mean of a nullable input column
+        nulls = set()
+        for col, agg_names in p["aggs"].items():
+            if col in i0.nulls:
+                for a in agg_names:
+                    if a in ("min", "max", "mean"):
+                        nulls.add(f"{col}_{a}")
+        n.nulls = frozenset(nulls & set(n.schema))
     elif n.op == "sort":
         n.schema = i0.schema
         n.partitioning = Partitioning.range_(p["by"][0])
         n.est_rows = i0.est_rows
         n.dicts = dict(i0.dicts)
+        n.nulls = i0.nulls
     else:
         raise ValueError(f"unknown op {n.op!r}")
 
@@ -338,7 +378,8 @@ def copy_dag(root: LogicalNode) -> LogicalNode:
             return memo[n.nid]
         out = LogicalNode(n.op, [conv(i) for i in n.inputs], dict(n.params),
                           schema=n.schema, partitioning=n.partitioning,
-                          est_rows=n.est_rows, dicts=dict(n.dicts))
+                          est_rows=n.est_rows, dicts=dict(n.dicts),
+                          nulls=n.nulls)
         memo[n.nid] = out
         return out
 
@@ -347,41 +388,67 @@ def copy_dag(root: LogicalNode) -> LogicalNode:
 
 def build_catalog(tables: Optional[Mapping[str, Any]]
                   ) -> Dict[str, Tuple[Tuple[str, ...], float,
-                                       Dict[str, Tuple[str, ...]]]]:
-    """Normalize scan metadata to ``(columns, est_rows, dictionaries)``.
+                                       Dict[str, Tuple[str, ...]],
+                                       frozenset]]:
+    """Normalize scan metadata to ``(columns, est_rows, dictionaries,
+    nullable_columns[, source])`` — ``source`` is the ingest-provenance
+    summary string for tables read by ``repro.io`` (EXPLAIN label).
 
     Values may be DistTable-likes (``column_names`` + ``total_rows`` +
     optional ``dictionaries``), numpy column dicts, ``(cols, rows)`` pairs,
-    or plain column sequences; dictionaries default to none (all-numeric).
+    or plain column sequences; dictionaries default to none (all-numeric)
+    and nullability to none.  ``__m_*`` validity-mask columns are physical
+    companions, not logical schema: they are stripped from the column list
+    and recorded as their base column's nullability instead.
     """
     from ..dataframe.schema import dictionary_of, is_string_array
+    from ..nulls import _valid_of, data_columns, nullable_columns
     cat: Dict[str, Tuple[Tuple[str, ...], float,
-                         Dict[str, Tuple[str, ...]]]] = {}
+                         Dict[str, Tuple[str, ...]], frozenset]] = {}
     for name, t in (tables or {}).items():
         if hasattr(t, "column_names"):
             rows = float(t.total_rows()) if hasattr(t, "total_rows") else 1024.0
             dicts = dict(getattr(t, "dictionaries", {}) or {})
-            cat[name] = (tuple(t.column_names), rows, dicts)
+            names = tuple(t.column_names)
+            prov = getattr(t, "provenance", None)
+            cat[name] = (tuple(data_columns(names)), rows, dicts,
+                         frozenset(nullable_columns(names)),
+                         str(prov) if prov is not None else None)
         elif isinstance(t, Mapping):
             # raw numpy column dict (morsel-streamed source): string
             # columns will be dictionary-encoded at ingest — mirror the
             # dictionary here (codes not needed) so the plan agrees.
+            # NaN/None slots (or an explicit __m_* companion) make the
+            # column nullable, exactly as ``extract_null_columns`` will
+            # normalize it at ingest — smallest-valid-value fill keeps the
+            # dictionary itself null-free.
             # NOTE: this np.unique runs per compile; for large string
             # sources ingest once into a SpillTable/DistTable (which
             # carries .dictionaries) instead of passing raw dicts
             import numpy as _np
             cols, dicts, rows = [], {}, 1024.0
+            nulls = set(nullable_columns(t.keys()))
             for cname, arr in t.items():
+                if cname.startswith("__m_"):
+                    continue
                 arr = _np.asarray(arr)
                 cols.append(cname)
                 rows = float(len(arr))
+                valid = _valid_of(arr)
+                if not valid.all():
+                    nulls.add(cname)
                 if is_string_array(arr):
-                    dicts[cname] = dictionary_of(arr)
-            cat[name] = (tuple(cols), rows, dicts)
-        elif (isinstance(t, tuple) and len(t) in (2, 3)
+                    vals = arr[valid] if not valid.all() else arr
+                    # all-null columns ingest as the "" fill value
+                    dicts[cname] = (dictionary_of(vals) if len(vals)
+                                    else ("",))
+            cat[name] = (tuple(cols), rows, dicts, frozenset(nulls))
+        elif (isinstance(t, tuple) and len(t) in (2, 3, 4)
               and not isinstance(t[0], str)):
-            dicts = dict(t[2]) if len(t) == 3 else {}
-            cat[name] = (tuple(t[0]), float(t[1]), dicts)
+            dicts = dict(t[2]) if len(t) > 2 else {}
+            nulls = frozenset(t[3]) if len(t) > 3 else frozenset()
+            cat[name] = (tuple(data_columns(t[0])), float(t[1]), dicts,
+                         nulls | frozenset(nullable_columns(t[0])))
         else:
-            cat[name] = (tuple(t), 1024.0, {})
+            cat[name] = (tuple(t), 1024.0, {}, frozenset())
     return cat

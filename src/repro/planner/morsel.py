@@ -71,6 +71,7 @@ from ..dataframe.ops_local import hash_columns_np
 from ..dataframe.shuffle import reset_overflow_warnings
 from ..dataframe.shuffle import shuffle as df_shuffle
 from ..dataframe.table import Table
+from ..nulls import mask_name
 from ..obs.metrics import record_exec
 from ..obs.trace import NULL_TRACER
 from .logical import LogicalNode, topo
@@ -216,7 +217,13 @@ def _host_splitters(spill: SpillTable, col: str, p: int,
     twin of ``dataframe.sort._sample_splitters``)."""
     pool = []
     for r in range(spill.parallelism):
-        keys = spill.rank_concat(r)[col]
+        cols_r = spill.rank_concat(r)
+        keys = cols_r[col]
+        m = cols_r.get(mask_name(col))
+        if m is not None:
+            # null keys are routed straight to the last rank (nulls-last);
+            # their canonical-zero values must not skew the quantiles
+            keys = keys[np.asarray(m).astype(bool)]
         n = len(keys)
         if n:
             k = np.sort(keys)
@@ -243,7 +250,15 @@ def _host_sort_ranks(spill: SpillTable, by: Sequence[str]) -> SpillTable:
         cols = spill.rank_concat(r)
         n = len(next(iter(cols.values()))) if cols else 0
         if n:
-            order = np.lexsort(tuple(cols[b] for b in reversed(tuple(by))))
+            # minor -> major; per column the null flag outranks the value
+            # (nulls-last, matching ops_local._order_keys)
+            lex: List[np.ndarray] = []
+            for b in reversed(tuple(by)):
+                lex.append(cols[b])
+                m = cols.get(mask_name(b))
+                if m is not None:
+                    lex.append((~np.asarray(m).astype(bool)).astype(np.int8))
+            order = np.lexsort(tuple(lex))
             out.append(r, {k: v[order] for k, v in cols.items()})
     return out
 
@@ -285,7 +300,11 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
     if node.op == "noop":
         return cur
     if node.op == "project":
-        return cur.select(p_["cols"])
+        # masks ride along with their base columns (never named explicitly)
+        cols = list(p_["cols"])
+        cols += [mask_name(c) for c in p_["cols"]
+                 if mask_name(c) in cur.columns]
+        return cur.select(cols)
     if node.op == "filter":
         return ops_local.filter_expr(cur, p_["expr"])
     if node.op == "with_columns":
@@ -388,6 +407,9 @@ def _make_sort_prog(node, W, shuffle_impl, a2a_chunks, debug_overflow):
         key = morsel.columns[by[0]]
         dest = jnp.searchsorted(splitters, key,
                                 side="right").astype(jnp.int32)
+        m = morsel.columns.get(mask_name(by[0]))
+        if m is not None:  # nulls-last: null keys land on the final rank
+            dest = jnp.where(m, dest, ctx.comm.size() - 1)
         shuffled, st = df_shuffle(morsel, ctx.comm, dest=dest,
                                   out_capacity=W,
                                   label=f"sort({','.join(by)})", **kw)
@@ -465,6 +487,10 @@ def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
                      faults=None, token=None) -> SpillTable:
     keys = list(gnode.params["keys"])
     physical, post = _normalize(gnode.params["aggs"])
+    # the partials carry no mask for sum/count, so mean nullability is not
+    # recoverable from them — the planner's annotation of the groupby
+    # *input* supplies it (conservative in the nullable direction)
+    nullable = tuple(sorted(set(gnode.inputs[0].nulls) & set(physical)))
     p = part_spill.parallelism
     widest = max(part_spill.rank_rows(r) for r in range(p))
     B = max(1, -(-widest // M))
@@ -493,7 +519,8 @@ def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
     cap_b = _round8(max_bucket)
 
     def prog(ctx, partials):
-        return combine_groupby_partials(partials, keys, physical, post)
+        return combine_groupby_partials(partials, keys, physical, post,
+                                        nullable_cols=nullable)
 
     out_spill: Optional[SpillTable] = None
     schema = part_spill.schema
@@ -514,7 +541,7 @@ def _combine_groupby(env, part_spill: SpillTable, gnode: LogicalNode,
             faults.check("spill:combine", token=token, segment=si, bucket=b)
         dist = DistTable(cols, jnp.asarray(counts), cap_b)
         out = env.run(prog, dist,
-                      key=("morsel-combine", fp, si, cap_b,
+                      key=("morsel-combine", fp, si, cap_b, nullable,
                            env.communicator_name,
                            env._arg_sig(dist)))
         acc.dispatches += 1
@@ -809,9 +836,12 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
             RuntimeWarning, stacklevel=2)
     if not collect_stats:
         return spill
+    from .physical import scan_read_stats
+    rows_read, bytes_read = scan_read_stats(pplan.scan_names, tables)
     stats = ExecStats(
         "morsel", pplan.num_stages, pplan.num_shuffles, acc.dispatches,
         rows, byts, pplan.shuffle_labels(), pplan.fired,
+        rows_read=rows_read, bytes_read=bytes_read,
         shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
         rows_dropped=dropped,
         cache_hits=env.cache_hits - hits0,

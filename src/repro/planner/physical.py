@@ -41,13 +41,15 @@ from ..obs.metrics import record_exec
 from ..obs.trace import NULL_TRACER
 from ..dataframe import ops_local
 from ..expr import token as expr_token
-from ..dataframe.groupby import _normalize, finalize_groupby
+from ..dataframe.groupby import (_normalize, finalize_groupby,
+                                 nullable_agg_cols)
 from ..dataframe.groupby import groupby as df_groupby
 from ..dataframe.ops_local import hash_columns
 from ..dataframe.shuffle import ShuffleStats
 from ..dataframe.shuffle import shuffle as df_shuffle
-from ..dataframe.sort import _sample_splitters
+from ..dataframe.sort import _range_dest
 from ..dataframe.sort import sort as df_sort
+from ..nulls import mask_name
 from ..dataframe.table import Table
 from .logical import LogicalNode, topo
 
@@ -326,7 +328,11 @@ def eval_node(node: LogicalNode, comm: Communicator,
     if node.op == "noop":
         return ins[0]
     if node.op == "project":
-        return ins[0].select(p["cols"])
+        # masks ride along with their base columns (never named explicitly)
+        cols = list(p["cols"])
+        cols += [mask_name(c) for c in p["cols"]
+                 if mask_name(c) in ins[0].columns]
+        return ins[0].select(cols)
     if node.op == "filter":
         return ops_local.filter_expr(ins[0], p["expr"])
     if node.op == "with_columns":
@@ -374,10 +380,11 @@ def eval_node(node: LogicalNode, comm: Communicator,
     if node.op == "groupby":
         keys, aggs = p["keys"], p["aggs"]
         physical, post = _normalize(aggs)
+        nullable = nullable_agg_cols(ins[0], physical)
         if p.get("elide_shuffle"):
             # input already co-partitioned on the keys: local-only groupby
             final = ops_local.groupby_local(ins[0], keys, physical)
-            return finalize_groupby(final, keys, post)
+            return finalize_groupby(final, keys, post, nullable)
         if shuffle_mode == "direct":
             pre = bool(p.get("pre_aggregate", False))
             out, st = df_groupby(ins[0], comm, keys, aggs,
@@ -402,7 +409,7 @@ def eval_node(node: LogicalNode, comm: Communicator,
                                **{k: v for k, v in kw.items()
                                   if k != "pre_aggregate"})
         final = ops_local.groupby_local(shuffled, keys, physical)
-        return finalize_groupby(final, keys, post)
+        return finalize_groupby(final, keys, post, nullable)
 
     if node.op == "sort":
         by = p["by"]
@@ -415,10 +422,7 @@ def eval_node(node: LogicalNode, comm: Communicator,
                 stats_out.append((f"sort({','.join(by)})",
                                   _stat_vec(st, _row_bytes(ins[0]))))
             return out
-        key = ins[0].columns[by[0]]
-        splitters = _sample_splitters(key, ins[0].row_count, comm,
-                                      kw.pop("samples", 64))
-        dest = jnp.searchsorted(splitters, key, side="right").astype(jnp.int32)
+        dest = _range_dest(ins[0], by[0], comm, kw.pop("samples", 64))
         shuffled = run_shuffle(f"sort({','.join(by)})", ins[0], dest=dest,
                                **kw)
         return ops_local.sort_local(shuffled, by)
@@ -450,6 +454,9 @@ class ExecStats:
     #: compile-cache traffic during this execution (CylonEnv counters delta)
     cache_hits: int = 0
     cache_misses: int = 0
+    # -- ingest attribution (repro.io scans; docs/io.md) ------------------ #
+    rows_read: int = 0        # rows entering the plan through its scans
+    bytes_read: int = 0       # source bytes behind those scans (io ingest)
     # -- out-of-core morsel execution only (see docs/out_of_core.md) ----- #
     morsel_rows: Optional[int] = None  # per-rank morsel capacity, None=in-core
     morsels: int = 0                   # morsel program dispatches
@@ -519,6 +526,30 @@ def attach_dictionaries(out, root: LogicalNode):
     return out
 
 
+def scan_read_stats(names: Sequence[str], tables: Dict[str, Any]
+                    ) -> Tuple[int, int]:
+    """(rows_read, bytes_read) across a plan's scan tables.
+
+    Rows come from the holder's ``total_rows``; bytes from the ``repro.io``
+    ingest provenance (``IngestInfo.bytes_read``) when the table was read
+    from Parquet/CSV, 0 for tables built in memory."""
+    rows = byts = 0
+    for n in names:
+        t = tables.get(n)
+        if t is None:
+            continue
+        total = getattr(t, "total_rows", None)
+        if callable(total):
+            try:
+                rows += int(total())
+            except Exception:
+                pass
+        prov = getattr(t, "provenance", None)
+        if prov is not None:
+            byts += int(getattr(prov, "bytes_read", 0))
+    return rows, byts
+
+
 def _sum_stats(collected) -> Tuple[int, int, int]:
     """``collected``: (p, 3) arrays -> (rows sent, bytes sent, rows dropped)."""
     tot = np.zeros((3,), np.int64)
@@ -532,7 +563,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                  shuffle_impl: str = "radix", a2a_chunks: int = 1,
                  morsel_rows: Optional[int] = None, tracer=None,
                  retries=None, timeout=None, overflow=None, faults=None,
-                 **morsel_kw):
+                 scan_capacity: Optional[int] = None, **morsel_kw):
     """Execute a lowered plan against DistTables on a ``CylonEnv``.
 
     Returns a DistTable, or ``(DistTable, ExecStats)`` with
@@ -597,6 +628,24 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     if missing:
         raise KeyError(f"plan scans missing from tables: {missing}")
     check_scan_dictionaries(pplan.order, tables)
+    # host-resident ingest sources (repro.io SpillTables) scatter onto the
+    # gang for in-core execution.  The default per-rank capacity leaves 2x
+    # headroom over a balanced split (downstream shuffles inherit scan
+    # capacity, and hash placement skews); ``scan_capacity`` overrides.
+    # Provenance rides along for the scan read stats.
+    from ..core.store import SpillTable, _round8
+    from ..core.store import rescatter as _rescatter
+    spills = {n: tables[n] for n in names
+              if isinstance(tables[n], SpillTable)}
+    if spills:
+        def _cap(s):
+            if scan_capacity is not None:
+                return scan_capacity
+            per = -(-max(s.total_rows(), 1) // env.parallelism)
+            return _round8(2 * per)
+        tables = {**tables, **{n: _rescatter(s, env.parallelism,
+                                             capacity=_cap(s))
+                               for n, s in spills.items()}}
     root = pplan.root
     order = pplan.order
     fp = pplan.fingerprint
@@ -609,6 +658,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
 
     def mk_stats(dispatches: int, pairs) -> ExecStats:
         rows, byts, dropped = _sum_stats([a for _, a in pairs])
+        rows_read, bytes_read = scan_read_stats(names, tables)
         stats = ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
                           dispatches, rows, byts, pplan.shuffle_labels(),
                           pplan.fired,
@@ -617,6 +667,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                           a2a_chunks=a2a_chunks, rows_dropped=dropped,
                           cache_hits=env.cache_hits - hits0,
                           cache_misses=env.cache_misses - misses0,
+                          rows_read=rows_read, bytes_read=bytes_read,
                           wall_time_s=time.perf_counter() - t_query0,
                           stage_times=stage_times,
                           shuffle_records=build_shuffle_records(pairs),

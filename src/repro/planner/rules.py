@@ -40,7 +40,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Set, Tuple
 
-from ..expr import BinOp
+from ..expr import BinOp, Expr, FillNull, IsNull, Lit, UnaryOp
 from .logical import COMM_OPS, LogicalNode, annotate, consumers, topo
 
 #: params that carry optimizer decisions rather than user intent
@@ -111,6 +111,66 @@ def select_join_sides(root: LogicalNode) -> List[str]:
             f"join-side-selection: join({n.params['on']}) shuffles {kept} "
             f"side only (~{int(kept_rows)} rows; other side ~"
             f"{int(other_rows)} rows already placed)")
+    return fired
+
+
+# ---------------------------------------------------------------------- #
+# Null-check elision (provably non-null inputs need no mask work)
+# ---------------------------------------------------------------------- #
+def _elide_nulls(e: Expr, nulls) -> Tuple[Expr, List[str]]:
+    """Rewrite ``is_null(x)`` -> ``False`` and ``fill_null(x, f)`` -> ``x``
+    when ``x`` is provably non-null given the input's nullable set.
+    Soundness rests on the annotation being conservative: ``nullable()``
+    over-approximates, so an elision here can never drop a real null."""
+    if isinstance(e, BinOp):
+        l, fl = _elide_nulls(e.left, nulls)
+        r, fr = _elide_nulls(e.right, nulls)
+        if fl or fr:
+            return BinOp(e.op, l, r), fl + fr
+        return e, []
+    if isinstance(e, UnaryOp):
+        op, f = _elide_nulls(e.operand, nulls)
+        return (UnaryOp(e.op, op), f) if f else (e, [])
+    if isinstance(e, IsNull):
+        op, f = _elide_nulls(e.operand, nulls)
+        if not op.nullable(nulls):
+            return Lit(False), f + [f"is_null({op!r}) is always false"]
+        return (IsNull(op), f) if f else (e, [])
+    if isinstance(e, FillNull):
+        op, fo = _elide_nulls(e.operand, nulls)
+        fill, ff = _elide_nulls(e.fill, nulls)
+        if not op.nullable(nulls):
+            return op, fo + ff + [f"fill_null({op!r}, ...) is an identity"]
+        return (FillNull(op, fill), fo + ff) if fo or ff else (e, [])
+    return e, []
+
+
+def elide_null_checks(root: LogicalNode) -> List[str]:
+    """Drop ``is_null`` / ``fill_null`` over provably non-null expressions
+    (scan nullability threaded through ``LogicalNode.nulls``), so queries
+    written defensively against nullable schemas compile to zero mask work
+    on clean data."""
+    fired: List[str] = []
+    for n in topo(root):
+        nulls = n.inputs[0].nulls if n.inputs else frozenset()
+        if n.op == "filter":
+            e, hits = _elide_nulls(n.params["expr"], nulls)
+            if hits:
+                n.params["expr"] = e
+                fired.extend(f"null-elision: {h} (filter)" for h in hits)
+        elif n.op == "with_columns":
+            exprs, changed = {}, []
+            for name, ex in n.params["exprs"].items():
+                ne, hits = _elide_nulls(ex, nulls)
+                exprs[name] = ne
+                changed.extend(hits)
+            if changed:
+                # copy before mutating: the inner dict may be shared with
+                # the user's builder tree (from_plan shallow-copies params)
+                n.params = dict(n.params)
+                n.params["exprs"] = exprs
+                fired.extend(f"null-elision: {h} (with_columns)"
+                             for h in changed)
     return fired
 
 
@@ -372,9 +432,9 @@ def prune_identity_projects(root: LogicalNode) -> None:
 # ---------------------------------------------------------------------- #
 # Driver
 # ---------------------------------------------------------------------- #
-RULES = (elide_shuffles, select_join_sides, split_conjunctions,
-         push_predicates, prune_dead_assignments, push_projections,
-         push_preaggregation)
+RULES = (elide_null_checks, elide_shuffles, select_join_sides,
+         split_conjunctions, push_predicates, prune_dead_assignments,
+         push_projections, push_preaggregation)
 
 
 def optimize(root: LogicalNode, catalog=None,

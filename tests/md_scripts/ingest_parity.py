@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+"""File ingest on 8 devices: the ISSUE-9 acceptance scenario.
+
+1. A string-keyed Fig-9 pipeline (merge + conjunctive filter + groupby +
+   sort) over a MULTI-FILE dataset with nulls in the key AND value
+   columns is bit-identical to the pandas oracle in all three in-core
+   modes (bsp / bsp_staged / amt), with ``rows_dropped == 0``.
+2. The same pipeline at 8x out-of-core oversubscription
+   (``collect(morsel_rows=...)``) is bit-identical to the in-core run
+   (integer-valued floats keep partial sums exact); a repeat run
+   compiles nothing (zero per-morsel recompiles).
+3. Later files introduce lexicographically-earlier keys, so the first
+   read exercises incremental dictionary growth (``recodes > 0``); a
+   second read of the unchanged source hits the dictionary cache and is
+   recode-free + bit-identical in the physical (mask) layout.
+4. ``ExecStats.rows_read`` / ``bytes_read`` attribute ingest volume to
+   the scan stage; EXPLAIN labels the scan with its source.
+
+Runs from Parquet when pyarrow is importable, else from CSV through the
+pure-python fallback lane — same pipeline, same oracle.
+"""
+
+import tempfile
+
+import numpy as np
+import pandas as pd
+
+import repro.df as rdf
+from repro.core import CylonEnv
+from repro.expr import col
+from repro.io import DictionaryCache, have_pyarrow
+from repro.nulls import mask_name
+
+USE_PARQUET = have_pyarrow()
+FMT = "parquet" if USE_PARQUET else "csv"
+rng = np.random.default_rng(23)
+
+N, NFILES, NK = 3200, 4, 240
+ALL = [f"key{i:04d}" for i in range(NK)]
+
+
+def _cell(pool):
+    return str(rng.choice(pool)) if rng.random() > 0.1 else None
+
+
+def _val():
+    return float(rng.integers(0, 256)) if rng.random() > 0.1 else None
+
+
+fact_cols = []
+for f in range(NFILES):
+    n = N // NFILES
+    # file f draws from the TAIL of the key space; each later file adds
+    # earlier keys -> the ingest dictionary grows and recode fires
+    pool = ALL[NK - (f + 1) * (NK // NFILES):]
+    fact_cols.append({"k": [_cell(pool) for _ in range(n)],
+                      "v0": [_val() for _ in range(n)]})
+dim_cols = {"k": ALL + [None],
+            "w": [float(i) if i % 7 else None for i in range(NK)] + [3.0]}
+
+tmp = tempfile.mkdtemp(prefix="ingest_parity_")
+
+
+def _write(path, cols, header):
+    if USE_PARQUET:
+        import pyarrow as pa
+        import pyarrow.parquet as pq
+        pq.write_table(pa.table({h: cols[h] for h in header}), path)
+    else:
+        lines = [",".join(header)]
+        for row in zip(*[cols[h] for h in header]):
+            lines.append(",".join(
+                "" if x is None else (x if isinstance(x, str) else repr(x))
+                for x in row))
+        with open(path, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
+
+
+fact_paths = []
+for f, cols in enumerate(fact_cols):
+    p = os.path.join(tmp, f"facts{f}.{FMT}")
+    _write(p, cols, ["k", "v0"])
+    fact_paths.append(p)
+dim_path = os.path.join(tmp, f"dim.{FMT}")
+_write(dim_path, dim_cols, ["k", "w"])
+
+env = CylonEnv()
+assert env.parallelism == 8
+rdf.set_default_env(env)
+
+cache = DictionaryCache()
+_read = rdf.read_parquet if USE_PARQUET else rdf.read_csv
+facts = _read(fact_paths, dict_cache=cache)
+dim = _read(dim_path, dict_cache=cache)
+
+info = facts.sources[next(iter(facts.sources))].provenance
+assert info.format == FMT and info.rows == N, info
+assert info.recodes > 0, "later files must grow the dictionary"
+assert not info.dict_cache_hit
+text = facts.explain()
+assert f"scan[{FMT}: {NFILES} files, ~{N} rows]" in text, text
+
+PIVOT = ALL[NK // 2]
+JKW = dict(out_capacity=4096, bucket_capacity=2048,
+           shuffle_out_capacity=2048)
+pipe = (facts.merge(dim, on="k", **JKW)
+        [(col("v0") > 4) & (col("k") < PIVOT)]
+        .groupby("k").agg({"v0": ["sum", "count"], "w": "max"})
+        .sort_values("k"))
+
+# --- pandas oracle (null keys never match / never form a group) ---------- #
+pf = pd.concat([pd.DataFrame(c) for c in fact_cols], ignore_index=True)
+pdim = pd.DataFrame(dim_cols)
+m = pf.dropna(subset=["k"]).merge(pdim.dropna(subset=["k"]), on="k")
+m = m[(m.v0 > 4) & (m.k < PIVOT)]
+want = (m.groupby("k")
+        .agg(v0_sum=("v0", "sum"), v0_count=("v0", "count"),
+             w_max=("w", "max"))
+        .reset_index().sort_values("k").reset_index(drop=True))
+
+ref = None
+for mode in ("bsp", "bsp_staged", "amt"):
+    out, stats = pipe.collect(mode=mode, collect_stats=True)
+    assert stats.rows_dropped == 0, (mode, stats)
+    assert stats.rows_read == N + NK + 1, (mode, stats.rows_read)
+    assert stats.bytes_read == sum(
+        os.path.getsize(p) for p in fact_paths + [dim_path]), mode
+    raw = out.to_numpy()
+    assert list(raw["k"]) == list(want["k"]), mode
+    np.testing.assert_array_equal(raw["v0_sum"],
+                                  want["v0_sum"].astype(np.float32))
+    np.testing.assert_array_equal(raw["v0_count"],
+                                  want["v0_count"].to_numpy())
+    # all-null w groups surface as null (pandas NaN)
+    wm = out.to_numpy()
+    np.testing.assert_array_equal(np.isnan(wm["w_max"]),
+                                  want["w_max"].isna())
+    np.testing.assert_array_equal(np.nan_to_num(wm["w_max"]),
+                                  want["w_max"].fillna(0.0).astype(np.float32))
+    if ref is None:
+        ref = raw
+    else:
+        for c in ref:
+            np.testing.assert_array_equal(ref[c], raw[c], err_msg=(mode, c))
+    print(f"ingest pipeline[{FMT}/{mode}]: bit-identical to pandas oracle "
+          f"({len(raw['k'])} groups, {stats.rows_read} rows ingested)")
+
+# --- 8x out-of-core oversubscription ------------------------------------- #
+MORSEL = (N // 8) // 8                       # 8 morsels per rank
+spill, st = pipe.collect(morsel_rows=MORSEL, collect_stats=True,
+                         capacity_factor=16.0)
+assert st.rows_dropped == 0, st
+assert st.morsels >= 8, st.morsels
+raw = spill.to_numpy()
+for c in ref:
+    np.testing.assert_array_equal(ref[c], raw[c], err_msg=c)
+print(f"ingest pipeline[{FMT}/out-of-core]: bit-identical over "
+      f"{st.morsels} morsels")
+
+# repeat run: every per-morsel program comes from the compile cache
+_, st2 = pipe.collect(morsel_rows=MORSEL, collect_stats=True,
+                      capacity_factor=16.0)
+assert st2.cache_misses == 0, st2.cache_misses
+assert st2.cache_hits > 0
+print(f"repeat out-of-core run: 0 compiles, {st2.cache_hits} cache hits")
+
+# --- second read: dictionary-cache hit, recode-free, bit-identical ------- #
+facts2 = _read(fact_paths, dict_cache=cache)
+info2 = facts2.sources[next(iter(facts2.sources))].provenance
+assert info2.dict_cache_hit and info2.recodes == 0, info2
+s1 = facts.sources[next(iter(facts.sources))]
+s2 = facts2.sources[next(iter(facts2.sources))]
+assert s1.dictionaries == s2.dictionaries
+a = s1.to_numpy(decode=False, nulls="mask")
+b = s2.to_numpy(decode=False, nulls="mask")
+assert set(a) == set(b) and mask_name("k") in a
+for c in a:
+    np.testing.assert_array_equal(a[c], b[c], err_msg=c)
+print("second read: cache hit, 0 recodes, identical physical layout")
+
+print("OK")

@@ -108,3 +108,8 @@ def test_fault_chaos():
 @pytest.mark.multidevice
 def test_serving_stress():
     _run("serving_stress.py", timeout=1800)
+
+
+@pytest.mark.multidevice
+def test_ingest_parity():
+    _run("ingest_parity.py")

@@ -1,0 +1,322 @@
+"""The nullable data model (``repro.nulls``) against the pandas oracle.
+
+* unit tests of the host-side mask layer: ``extract_null_columns`` /
+  ``apply_null_columns`` round-trips, reserved-name policy, canonical
+  zeros in null slots,
+* Kleene three-valued logic through the expression layer (null
+  comparisons are null; a filter keeps only TRUE rows),
+* engine null semantics end-to-end vs pandas: null join keys never
+  match, groupby drops null-key rows and skips null values
+  (count/size distinct, all-null min/max is null), sorts place nulls
+  last,
+* hypothesis property suite (skipped without hypothesis; CI installs
+  it): randomized nullable tables through filter / join / groupby /
+  sort pipelines vs pandas, in-core and out-of-core.
+"""
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+import repro.df as rdf  # noqa: E402
+from repro.core import CylonEnv  # noqa: E402
+from repro.expr import col  # noqa: E402
+from repro.nulls import (apply_null_columns, base_name,  # noqa: E402
+                         check_reserved_names, data_columns,
+                         extract_null_columns, is_mask, mask_name,
+                         nullable_columns)
+
+
+@pytest.fixture
+def env():
+    e = CylonEnv()
+    rdf.set_default_env(e)
+    yield e
+    rdf.reset_default_env()
+
+
+# --------------------------------------------------------------------- #
+# Host-side mask layer
+# --------------------------------------------------------------------- #
+def test_mask_naming():
+    assert mask_name("v") == "__m_v"
+    assert is_mask("__m_v") and not is_mask("v")
+    assert base_name("__m_v") == "v"
+    assert data_columns(["v", "__m_v", "k"]) == ["v", "k"]
+    assert nullable_columns(["v", "__m_v", "k"]) == {"v"}
+    with pytest.raises(ValueError, match="reserved"):
+        check_reserved_names(["__m_v"])
+
+
+def test_extract_apply_round_trip():
+    data = {"f": np.array([1.0, np.nan, 3.0]),
+            "s": np.array(["a", None, "c"], object),
+            "i": np.array([1, 2, 3], np.int64)}
+    phys = extract_null_columns(dict(data))
+    # masks only where nulls exist; null slots hold the canonical fill
+    assert set(phys) == {"f", "s", "i", mask_name("f"), mask_name("s")}
+    assert not np.isnan(phys["f"]).any()
+    assert all(x is not None for x in phys["s"])
+    back = apply_null_columns(phys)
+    assert np.isnan(back["f"][1]) and back["s"][1] is None
+    assert back["f"][0] == 1.0 and back["s"][2] == "c"
+    np.testing.assert_array_equal(back["i"], data["i"])
+
+
+def test_apply_widens_int_to_float():
+    out = apply_null_columns({"n": np.array([5, 0, 7], np.int64),
+                              mask_name("n"): np.array([True, False, True])})
+    assert out["n"].dtype == np.float64
+    assert out["n"][0] == 5.0 and np.isnan(out["n"][1])
+
+
+# --------------------------------------------------------------------- #
+# Kleene logic through the expression layer
+# --------------------------------------------------------------------- #
+def test_filter_null_comparison_drops_row(env):
+    # null > 2 is null, not True: the row is filtered out (pandas agrees,
+    # since NaN comparisons are False there)
+    pdf = pd.DataFrame({"k": [1, 2, 3, 4],
+                        "v": [1.0, np.nan, 3.0, np.nan]})
+    got = rdf.from_pandas(pdf)[col("v") > 0].to_pandas()
+    assert sorted(got["k"]) == [1, 3]
+
+
+def test_kleene_or_with_null_operand(env):
+    # null | True is True (Kleene), so rows where the other disjunct is
+    # True survive even when v is null
+    pdf = pd.DataFrame({"k": [1, 2, 3, 4],
+                        "v": [1.0, np.nan, 3.0, np.nan]})
+    df = rdf.from_pandas(pdf)
+    got = df[(col("v") > 2) | (col("k") == 2)].to_pandas()
+    assert sorted(got["k"]) == [2, 3]
+
+
+def test_is_null_fill_null_exprs(env):
+    pdf = pd.DataFrame({"k": [1, 2, 3], "v": [1.0, np.nan, 3.0]})
+    df = rdf.from_pandas(pdf)
+    got = df.assign(miss=col("v").is_null(),
+                    filled=col("v").fill_null(-1.0)).to_pandas()
+    got = got.sort_values("k").reset_index(drop=True)
+    assert list(got["miss"].astype(bool)) == [False, True, False]
+    assert list(got["filled"]) == [1.0, -1.0, 3.0]
+
+
+# --------------------------------------------------------------------- #
+# Engine null semantics vs pandas (fixed adversarial cases)
+# --------------------------------------------------------------------- #
+def test_join_null_keys_never_match(env):
+    l = pd.DataFrame({"k": [1.0, np.nan, 2.0, np.nan],
+                      "v": [10.0, 20.0, 30.0, 40.0]})
+    r = pd.DataFrame({"k": [1.0, np.nan, 2.0], "w": [1.0, 2.0, 3.0]})
+    got = (rdf.from_pandas(l).merge(rdf.from_pandas(r), on="k",
+                                    out_capacity=64)
+           .to_pandas().sort_values("k").reset_index(drop=True))
+    want = (l.dropna(subset=["k"]).merge(r.dropna(subset=["k"]), on="k")
+            .sort_values("k").reset_index(drop=True))
+    assert len(got) == len(want) == 2
+    np.testing.assert_array_equal(got["k"], want["k"])
+    np.testing.assert_array_equal(got["v"], want["v"])
+    np.testing.assert_array_equal(got["w"], want["w"])
+
+
+def test_groupby_null_semantics(env):
+    pdf = pd.DataFrame({
+        "k": [1.0, 1.0, np.nan, 2.0, 2.0, np.nan],
+        "v": [1.0, np.nan, 5.0, np.nan, np.nan, 6.0]})
+    got = (rdf.from_pandas(pdf).groupby("k")
+           .agg({"v": ["sum", "mean", "min", "count", "size"]})
+           .sort_values("k").to_pandas())
+    want = (pdf.groupby("k")
+            .agg(v_sum=("v", "sum"), v_mean=("v", "mean"),
+                 v_min=("v", "min"), v_count=("v", "count"),
+                 v_size=("v", "size"))
+            .reset_index())
+    # the NaN-key rows form no group
+    np.testing.assert_array_equal(got["k"], want["k"])
+    np.testing.assert_array_equal(got["v_sum"], want["v_sum"])
+    np.testing.assert_array_equal(got["v_count"], want["v_count"])
+    np.testing.assert_array_equal(got["v_size"], want["v_size"])
+    # group k=2 is all-null: sum is 0 (pandas), mean/min are null
+    np.testing.assert_array_equal(got["v_mean"].isna(), want["v_mean"].isna())
+    np.testing.assert_array_equal(got["v_min"].isna(), want["v_min"].isna())
+    np.testing.assert_array_equal(got["v_mean"].fillna(0.0),
+                                  want["v_mean"].fillna(0.0))
+
+
+def test_sort_nulls_last(env):
+    pdf = pd.DataFrame({"k": [3.0, np.nan, 1.0, np.nan, 2.0],
+                        "v": [1.0, 2.0, 3.0, 4.0, 5.0]})
+    got = rdf.from_pandas(pdf).sort_values("k").to_pandas()
+    want = pdf.sort_values("k", na_position="last").reset_index(drop=True)
+    np.testing.assert_array_equal(got["k"], want["k"])
+    np.testing.assert_array_equal(got["v"], want["v"])
+
+
+def test_masks_survive_shuffle_and_out_of_core(env):
+    rng = np.random.default_rng(3)
+    n = 64
+    pdf = pd.DataFrame({
+        "k": np.where(rng.random(n) > 0.2,
+                      rng.integers(0, 6, n).astype(float), np.nan),
+        "v": np.where(rng.random(n) > 0.2,
+                      rng.integers(0, 40, n).astype(float), np.nan)})
+    q = (rdf.from_pandas(pdf).repartition("k")
+         .groupby("k").agg({"v": ["sum", "count"]}).sort_values("k"))
+    want = (pdf.groupby("k").agg(v_sum=("v", "sum"), v_count=("v", "count"))
+            .reset_index().sort_values("k").reset_index(drop=True))
+    incore = q.to_pandas()
+    np.testing.assert_array_equal(incore["k"], want["k"])
+    np.testing.assert_array_equal(incore["v_count"], want["v_count"])
+    np.testing.assert_allclose(incore["v_sum"], want["v_sum"], rtol=1e-6)
+    spill, stats = (rdf.from_pandas(pdf)
+                    .groupby("k").agg({"v": ["sum", "count"]})
+                    .sort_values("k")
+                    .collect(morsel_rows=16, collect_stats=True))
+    assert stats.rows_dropped == 0, stats
+    ooc = pd.DataFrame(spill.to_numpy())
+    np.testing.assert_array_equal(ooc["k"], want["k"])
+    np.testing.assert_array_equal(ooc["v_count"], want["v_count"])
+    np.testing.assert_allclose(ooc["v_sum"], want["v_sum"], rtol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# Hypothesis property suite (pandas oracle).  Plain import guard so the
+# fixed cases above run in minimal envs; CI installs hypothesis.
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+
+def _nullable_frame(draw, names=("v",), max_rows=40):
+    """A pandas frame: float key ``k`` in a small range (duplicates) and
+    float value columns, every cell independently nullable.  Integer-valued
+    floats keep aggregation sums exact in float32."""
+    n = draw(st.integers(0, max_rows))
+    cols = {}
+    kvals = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    knull = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    cols["k"] = np.where(knull, np.nan, np.asarray(kvals, float))
+    for nm in names:
+        vals = draw(st.lists(st.integers(-30, 30), min_size=n, max_size=n))
+        nulls = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        cols[nm] = np.where(nulls, np.nan, np.asarray(vals, float))
+    return pd.DataFrame(cols)
+
+
+def _random_frame(rng, names=("v",), max_rows=40):
+    """Random-module twin of ``_nullable_frame`` for the no-hypothesis
+    smoke variants below."""
+    n = int(rng.integers(0, max_rows + 1))
+    cols = {"k": np.where(rng.random(n) < 0.3, np.nan,
+                          rng.integers(0, 6, n).astype(float))}
+    for nm in names:
+        cols[nm] = np.where(rng.random(n) < 0.3, np.nan,
+                            rng.integers(-30, 31, n).astype(float))
+    return pd.DataFrame(cols)
+
+
+# -- oracle checkers (shared by hypothesis + fixed smoke variants) ------ #
+def _check_dropna(pdf):
+    env = CylonEnv()
+    df = rdf.from_pandas(pdf, env=env)
+    got = df.dropna(subset=["v"]).collect(env=env).to_numpy()
+    want = pdf.dropna(subset=["v"])
+    assert len(got["k"]) == len(want)
+    np.testing.assert_array_equal(np.sort(got["v"]),
+                                  np.sort(want["v"].to_numpy()))
+
+
+def _check_groupby(pdf):
+    env = CylonEnv()
+    got = pd.DataFrame(
+        (rdf.from_pandas(pdf, env=env).groupby("k")
+         .agg({"v": ["sum", "count", "min"]})
+         .sort_values("k").collect(env=env).to_numpy()))
+    want = (pdf.groupby("k")
+            .agg(v_sum=("v", "sum"), v_count=("v", "count"),
+                 v_min=("v", "min"))
+            .reset_index().sort_values("k").reset_index(drop=True))
+    assert len(got) == len(want)
+    if len(want):
+        np.testing.assert_array_equal(got["k"], want["k"])
+        np.testing.assert_array_equal(got["v_sum"], want["v_sum"])
+        np.testing.assert_array_equal(got["v_count"], want["v_count"])
+        np.testing.assert_array_equal(np.isnan(got["v_min"]),
+                                      want["v_min"].isna())
+        np.testing.assert_array_equal(got["v_min"].fillna(0.0),
+                                      want["v_min"].fillna(0.0))
+
+
+def _check_join(l, r):
+    env = CylonEnv()
+    got = (rdf.from_pandas(l, env=env)
+           .merge(rdf.from_pandas(r, env=env), on="k", out_capacity=1024)
+           .collect(env=env).to_numpy())
+    want = l.dropna(subset=["k"]).merge(r.dropna(subset=["k"]), on="k")
+    assert len(got["k"]) == len(want)
+    for c in ("k", "v", "w"):
+        g = np.sort(np.nan_to_num(got[c], nan=1e9))
+        w = np.sort(np.nan_to_num(want[c].to_numpy(), nan=1e9))
+        np.testing.assert_array_equal(g, w, err_msg=c)
+    g_nulls = {c: int(np.isnan(got[c]).sum()) for c in ("v", "w")}
+    w_nulls = {c: int(want[c].isna().sum()) for c in ("v", "w")}
+    assert g_nulls == w_nulls
+
+
+def _check_sort(pdf, morsel_rows):
+    env = CylonEnv()
+    res = (rdf.from_pandas(pdf, env=env).sort_values("k")
+           .collect(env=env, morsel_rows=morsel_rows))
+    got = res.to_numpy()
+    want = pdf.sort_values("k", na_position="last")
+    np.testing.assert_array_equal(got["k"], want["k"].to_numpy())
+    # same multiset of records (tie order differs legitimately)
+    gk = np.nan_to_num(np.stack([got["k"], got["v"]]), nan=1e9)
+    wk = np.nan_to_num(np.stack([want["k"].to_numpy(),
+                                 want["v"].to_numpy()]), nan=1e9)
+    np.testing.assert_array_equal(gk[:, np.lexsort(gk)],
+                                  wk[:, np.lexsort(wk)])
+
+
+# -- fixed smoke variants: always run, seeded random frames ------------- #
+def test_random_frames_smoke():
+    rng = np.random.default_rng(17)
+    for trial in range(3):
+        _check_dropna(_random_frame(rng))
+        _check_groupby(_random_frame(rng))
+        _check_join(_random_frame(rng, names=("v",), max_rows=24),
+                    _random_frame(rng, names=("w",), max_rows=24))
+        _check_sort(_random_frame(rng), None if trial else 8)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_prop_dropna_filter_matches_pandas(data):
+        _check_dropna(_nullable_frame(data.draw))
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_prop_groupby_matches_pandas(data):
+        _check_groupby(_nullable_frame(data.draw))
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_prop_join_matches_pandas(data):
+        _check_join(_nullable_frame(data.draw, names=("v",), max_rows=24),
+                    _nullable_frame(data.draw, names=("w",), max_rows=24))
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data(), morsel_rows=st.sampled_from([None, 8, 16]))
+    def test_prop_sort_nulls_last(data, morsel_rows):
+        _check_sort(_nullable_frame(data.draw), morsel_rows)
