@@ -14,6 +14,7 @@ Modules (paper artifact -> bench):
   kernels (interpret vs oracle)         -> bench_kernels
   beyond-paper MoE-dispatch-as-shuffle  -> bench_moe_shuffle
   sort-free vs sorted shuffle (PR 2)    -> bench_shuffle_impl
+  adaptive skew mitigation (PR 10)      -> bench_skew
 
 The 8-device XLA_FLAGS above is set before jax initializes (scaling
 benches need parallelism); the dry-run (512 devices) is a separate entry
@@ -39,7 +40,8 @@ def main() -> None:
 
     from . import (bench_communicators, bench_ingest, bench_join_breakdown,
                    bench_kernels, bench_local_ops, bench_moe_shuffle,
-                   bench_pipeline, bench_shuffle_impl, bench_strong_scaling)
+                   bench_pipeline, bench_shuffle_impl, bench_skew,
+                   bench_strong_scaling)
     from .common import RESULTS, dump_csv, dump_json
 
     scale = 50 if args.smoke else 4 if args.quick else 1
@@ -60,6 +62,8 @@ def main() -> None:
             max(4000, 100_000 // scale)),
         # file ingest (repro.io): Parquet vs CSV vs read_numpy, 1x + 8x
         "ingest": lambda: bench_ingest.run(max(4000, 50_000 // scale)),
+        # adaptive skew mitigation vs blind baseline (asserts bit-identity)
+        "skew": lambda: bench_skew.run(max(8000, 160_000 // scale)),
         "kernels": bench_kernels.run if not args.quick else bench_kernels.run,
         "moe_shuffle": bench_moe_shuffle.run,
     }

@@ -174,7 +174,7 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
             morsel_rows: Optional[int] = None, trace: Any = None,
             retries: Any = None, timeout: Any = None,
             overflow: Any = None, faults: Any = None,
-            **morsel_kw):
+            adaptive: Any = None, **morsel_kw):
     """Execute a plan against DistTables.  Returns a DistTable, or
     ``(DistTable, planner.ExecStats)`` with ``collect_stats=True``.
 
@@ -210,6 +210,11 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
     default ``degrade``) governs capacity-pressure row drops; ``faults``
     arms a deterministic fault-injection plan (``None`` consults the
     ``REPRO_FAULTS`` env var).
+
+    ``adaptive`` (None | bool | dict | ``repro.adapt.AdaptiveConfig``)
+    gates runtime skew mitigation — hot-key salting, splitter refresh,
+    morsel autotuning (``docs/adaptive.md``).  Default on; data with no
+    detected skew executes exactly the ``adaptive=False`` programs.
     """
     from ..obs.trace import resolve_tracer
     from ..planner import compile_plan, run_physical
@@ -224,7 +229,7 @@ def execute(plan: Plan, env, tables: Dict[str, Any], mode: str = "bsp",
                            morsel_rows=morsel_rows, tracer=tracer,
                            retries=retries, timeout=timeout,
                            overflow=overflow, faults=faults,
-                           **morsel_kw)
+                           adaptive=adaptive, **morsel_kw)
     if tracer.enabled:
         tracer.finish()
     return out

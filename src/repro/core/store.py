@@ -322,6 +322,35 @@ def respill(spill: SpillTable, parallelism: int,
     return out
 
 
+def respill_routed(spill: SpillTable, dest_of,
+                   tracer=NULL_TRACER) -> SpillTable:
+    """Re-route a SpillTable's rows by an arbitrary per-row rule.
+
+    ``dest_of(cols: Dict[str, np.ndarray]) -> np.ndarray[int]`` maps one
+    chunk's columns to destination ranks; the routing itself stays a
+    host-only chunk-by-chunk pass like ``respill`` (peak extra memory is
+    one chunk).  This is the adaptive layer's merge primitive: salted
+    groupby partials re-home by ``hash % p``, and splitter-refreshed sort
+    output re-homes by the final splitters, without materializing the
+    spill on device (``docs/adaptive.md``).
+    """
+    with tracer.span("respill-routed", "spill", p=spill.parallelism,
+                     rows=spill.total_rows(), bytes=spill.nbytes()):
+        out = SpillTable(spill.parallelism, schema=spill.schema or None,
+                         dictionaries=spill.dictionaries)
+        out.provenance = spill.provenance
+        for r in range(spill.parallelism):
+            for chunk in spill.rank_chunks(r):
+                dest = np.asarray(dest_of(chunk))
+                if dest.ndim != 1 or len(dest) != len(next(iter(chunk.values()))):
+                    raise ValueError("dest_of must return one rank per row")
+                for d in np.unique(dest):
+                    sel = dest == d
+                    out.append(int(d),
+                               {k: v[sel] for k, v in chunk.items()})
+    return out
+
+
 # ---------------------------------------------------------------------- #
 # Bucketed rescatter (replaces the host-gather repartition)
 # ---------------------------------------------------------------------- #

@@ -282,3 +282,80 @@ def shuffle(
                          recv_dropped, shuffle_impl=impl,
                          a2a_chunks=a2a_chunks)
     return out, stats
+
+
+def replicate_hot_rows(
+    table: Table,
+    comm: Communicator,
+    is_hot: jax.Array,
+    hot_cap: int,
+    base: Table,
+    pack: bool = True,
+) -> Tuple[Table, ShuffleStats]:
+    """Broadcast each rank's ``is_hot`` rows to every rank, appended to
+    ``base`` (the skew-mitigated build side of a broadcast join).
+
+    The salted join path excludes hot build rows from the hash shuffle
+    (they route to the overflow bin ``p``, uncounted) and replicates them
+    here instead: a stable compaction into ``(hot_cap,)`` slots, one
+    packed ``all_gather``, then a prefix-sum append onto ``base`` past its
+    ``row_count``.  Output capacity is the static
+    ``base.capacity + p * hot_cap``; rows beyond ``hot_cap`` on one rank
+    ARE counted as ``send_dropped`` (the decision layer sizes ``hot_cap``
+    from an exact host count precisely so this stays zero).
+
+    Must run inside a shard_map region over ``comm.axis``.
+    """
+    p = comm.size()
+    cap = table.capacity
+    k = min(int(hot_cap), cap)  # per-rank slots; static + rank-uniform
+    hot = is_hot & table.valid_mask()
+    n_hot = jnp.sum(hot.astype(jnp.int32))
+    sent = jnp.minimum(n_hot, k)
+    dropped = (n_hot - sent).astype(jnp.int32)
+
+    order = jnp.argsort(jnp.where(hot, 0, 1), stable=True)[:k]
+    counts = comm.all_gather(sent).reshape(p)           # (p,) everywhere
+    offsets = jnp.cumsum(counts) - counts               # exclusive
+    total = jnp.sum(counts)
+
+    base_cap = base.capacity
+    new_cap = base_cap + p * k
+    start = base.row_count
+    # start <= base_cap and total <= p*k, so the append never overflows
+    idx = jnp.arange(p * k, dtype=jnp.int32)
+    blk, q = idx // k, idx % k
+    g_valid = q < jnp.take(counts, blk)
+    pos = jnp.where(g_valid, start + jnp.take(offsets, blk) + q, new_cap)
+
+    names = base.column_names
+    dtypes = {n: table.columns[n].dtype for n in names}
+    packables = [n for n in names
+                 if dtypes[n] in (jnp.float32, jnp.int32, jnp.uint32,
+                                  jnp.bool_)
+                 and table.columns[n].ndim == 1] if pack else []
+    singles = [n for n in names if n not in packables]
+
+    def _append(n: str, flat: jax.Array) -> jax.Array:
+        out = jnp.zeros((new_cap,) + flat.shape[1:], flat.dtype)
+        out = out.at[:base_cap].set(base.columns[n])
+        return out.at[pos].set(flat, mode="drop")
+
+    out_cols: Dict[str, jax.Array] = {}
+    if packables:
+        packed = jnp.take(_pack_u32(table.columns, packables), order, axis=0)
+        got = comm.all_gather(packed).reshape(p * k, len(packables))
+        for n, v in _unpack_u32(got, packables, dtypes).items():
+            out_cols[n] = _append(n, v)
+    for n in singles:
+        col = jnp.take(table.columns[n], order, axis=0)
+        got = comm.all_gather(col).reshape((p * k,) + col.shape[1:])
+        out_cols[n] = _append(n, got)
+
+    new_count = (start + total).astype(jnp.int32)
+    out = Table(out_cols, new_count).mask_padding()
+    # this rank sends its ``sent`` hot rows to every rank and receives
+    # each rank's contribution once — the honest wire accounting
+    stats = ShuffleStats(jnp.full((p,), sent, jnp.int32), counts, dropped,
+                         jnp.zeros((), jnp.int32))
+    return out, stats

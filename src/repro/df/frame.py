@@ -246,7 +246,8 @@ class DataFrame:
                 optimize: bool = True, collect_stats: bool = False,
                 morsel_rows: Optional[int] = None, analyze: bool = False,
                 trace: Any = None, timeout: Any = None, retries: Any = None,
-                overflow: Any = None, faults: Any = None, **kw):
+                overflow: Any = None, faults: Any = None,
+                adaptive: Any = None, **kw):
         """Run the accumulated plan; returns a ``DistTable`` (or a
         host-resident ``SpillTable`` with ``morsel_rows=``, and a
         ``(result, ExecStats)`` pair with ``collect_stats=True``).
@@ -270,6 +271,8 @@ class DataFrame:
         capacity-pressure drops, ``faults`` injects a deterministic fault
         plan.  ``None`` falls back to the active session's defaults
         (``session(timeout=..., ...)``), then the library defaults.
+        ``adaptive`` gates runtime skew mitigation the same way
+        (``docs/adaptive.md``).
 
         Scheduler routing (``docs/serving.md``): inside a
         ``session(scheduler=...)`` scope, a collect with no explicit
@@ -288,13 +291,16 @@ class DataFrame:
             overflow = defaults.get("overflow")
         if faults is None:
             faults = defaults.get("faults")
+        if adaptive is None:
+            adaptive = defaults.get("adaptive")
         scheduler = defaults.get("scheduler")
         if scheduler is not None and env is None and self._env is None:
             handle = scheduler.submit(
                 self, mode=mode, optimize=optimize,
                 collect_stats=collect_stats, morsel_rows=morsel_rows,
                 analyze=analyze, trace=trace, timeout=timeout,
-                retries=retries, overflow=overflow, faults=faults, **kw)
+                retries=retries, overflow=overflow, faults=faults,
+                adaptive=adaptive, **kw)
             return handle.result()
         if env is None:
             env = self._env if self._env is not None else get_env()
@@ -319,12 +325,13 @@ class DataFrame:
                                 optimize=optimize, morsel_rows=morsel_rows,
                                 trace=True if trace is None else trace,
                                 timeout=timeout, retries=retries,
-                                overflow=overflow, faults=faults, **kw)
+                                overflow=overflow, faults=faults,
+                                adaptive=adaptive, **kw)
         return execute(self.plan, env, self.sources, mode=mode,
                        optimize=optimize, collect_stats=collect_stats,
                        morsel_rows=morsel_rows, trace=trace,
                        timeout=timeout, retries=retries, overflow=overflow,
-                       faults=faults, **kw)
+                       faults=faults, adaptive=adaptive, **kw)
 
     def to_numpy(self, nulls: str = "pandas", **kw) -> Dict[str, np.ndarray]:
         """``collect`` + gather valid rows to host numpy columns.

@@ -36,10 +36,10 @@ _lock = threading.Lock()
 _default: Optional[CylonEnv] = None
 _tls = threading.local()
 
-#: fault-tolerance knobs a session may default for every collect() in its
-#: scope (an explicit collect() argument always wins); see
-#: ``docs/fault_tolerance.md``
-_DEFAULT_KEYS = ("timeout", "retries", "overflow", "faults")
+#: fault-tolerance / adaptivity knobs a session may default for every
+#: collect() in its scope (an explicit collect() argument always wins);
+#: see ``docs/fault_tolerance.md`` and ``docs/adaptive.md``
+_DEFAULT_KEYS = ("timeout", "retries", "overflow", "faults", "adaptive")
 
 
 def _stack() -> List[CylonEnv]:
@@ -114,7 +114,7 @@ def session(env: Optional[CylonEnv] = None, *,
             communicator: Optional[str] = None,
             scheduler=None,
             timeout=None, retries=None, overflow=None,
-            faults=None) -> Iterator[Any]:
+            faults=None, adaptive=None) -> Iterator[Any]:
     """Scope an active env: ``with session(...) as env: df.collect()``.
 
     Pass an existing ``env``, or let the session build one from
@@ -138,6 +138,11 @@ def session(env: Optional[CylonEnv] = None, *,
     in scope (``docs/fault_tolerance.md``); a per-call argument overrides,
     and nested sessions override outer ones per key.  A session-level
     ``timeout`` is a *per-query* deadline, re-armed at each collect.
+
+    ``adaptive`` defaults the runtime skew-mitigation knob the same way
+    (``docs/adaptive.md``): ``session(adaptive=False)`` pins every collect
+    in scope to the non-adaptive programs; a dict or
+    ``repro.adapt.AdaptiveConfig`` tunes detection thresholds.
     """
     if scheduler is not None:
         if env is not None or devices is not None or communicator is not None:
@@ -155,7 +160,8 @@ def session(env: Optional[CylonEnv] = None, *,
             "carries its communicator "
             f"({env.communicator_name!r})")
     layer = {k: v for k, v in (("timeout", timeout), ("retries", retries),
-                               ("overflow", overflow), ("faults", faults))
+                               ("overflow", overflow), ("faults", faults),
+                               ("adaptive", adaptive))
              if v is not None}
     # scheduler scoping is innermost-wins in both directions: a scheduler
     # session sets it, an env session explicitly masks any outer scheduler

@@ -482,6 +482,23 @@ def resolve_overflow(overflow: Any) -> str:
                      f"got {overflow!r}")
 
 
+def default_degrade_step(morsel_rows: int, capacity: int) -> Tuple[int, int]:
+    """The original blind degrade step: halve ``morsel_rows`` until the
+    floor (8), then double the working ``capacity``.
+
+    This is what ``overflow="degrade"`` replays with when morsel
+    autotuning is off (``adaptive=False``) — kept as a standalone policy
+    function so the adaptive controller (``repro.adapt.MorselTuner``) and
+    the legacy path share one call site and the legacy behavior stays
+    bit-for-bit what PR 7 shipped.
+    """
+    def _round8(x: int) -> int:
+        return max(8, -(-int(x) // 8) * 8)
+    if morsel_rows > 8:
+        return max(8, _round8(morsel_rows // 2)), capacity
+    return morsel_rows, _round8(capacity * 2)
+
+
 def run_with_retries(fn, *, policy: RetryPolicy,
                      token: Optional[CancellationToken] = None,
                      tracer=None, label: str = "",

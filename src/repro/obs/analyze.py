@@ -44,15 +44,34 @@ def _fmt_bytes(b: float) -> str:
     return f"{b:.1f}GiB"
 
 
-def _node_actuals(node, records_by_label: Dict[str, Any]) -> Optional[str]:
-    """Measured annotation for one plan node, from its shuffle records."""
+def _records_by_label(stats) -> Dict[str, Dict[str, int]]:
+    """Aggregate shuffle records to per-label totals.  Out-of-core runs
+    key records by ``(label, segment)``; the analyze rendering wants the
+    whole-query per-label view, so same-label records sum."""
+    agg: Dict[str, Dict[str, int]] = {}
+    for r in stats.shuffle_records:
+        a = agg.setdefault(r.label, {"rows": 0, "bytes": 0, "dropped": 0})
+        a["rows"] += r.rows
+        a["bytes"] += r.bytes
+        a["dropped"] += r.dropped
+    return agg
+
+
+def _node_actuals(node, by_label: Dict[str, Dict[str, int]]
+                  ) -> Optional[str]:
+    """Measured annotation for one plan node, from its shuffle records.
+
+    Labels match on the ``op(args)`` stem so salted extras the static
+    plan does not predict (``groupby(k):remerge``, ``join(k):broadcast``)
+    attribute to their node."""
     from ..planner.physical import node_stat_labels
-    labels = [l for l in node_stat_labels(node) if l in records_by_label]
+    stems = {l.split(":")[0] for l in node_stat_labels(node)}
+    labels = [l for l in by_label if l.split(":")[0] in stems]
     if not labels:
         return None
-    rows = sum(records_by_label[l].rows for l in labels)
-    byts = sum(records_by_label[l].bytes for l in labels)
-    dropped = sum(records_by_label[l].dropped for l in labels)
+    rows = sum(by_label[l]["rows"] for l in labels)
+    byts = sum(by_label[l]["bytes"] for l in labels)
+    dropped = sum(by_label[l]["dropped"] for l in labels)
     s = f"moved {rows} rows / {_fmt_bytes(byts)}"
     if dropped:
         s += f", DROPPED {dropped}"
@@ -76,15 +95,25 @@ def _stage_seconds(stats) -> Dict[int, float]:
 def render_analyze(pplan, stats, scan_rows: Optional[Dict[str, int]] = None,
                    result_rows: Optional[int] = None) -> str:
     """The EXPLAIN tree with ``act:`` annotations from a finished run."""
-    from ..planner.explain import node_label
+    from ..planner.explain import adapt_note, node_label
     scan_rows = scan_rows or {}
-    records = {r.label: r for r in stats.shuffle_records}
+    records = _records_by_label(stats)
     stage_secs = _stage_seconds(stats)
     cache = f"{stats.cache_hits} hits / {stats.cache_misses} misses"
     ft = ""
     if getattr(stats, "retries", 0) or getattr(stats, "degraded", 0):
         ft = (f" retries={getattr(stats, 'retries', 0)} "
               f"degraded={getattr(stats, 'degraded', 0)}")
+    if (getattr(stats, "salted_shuffles", 0)
+            or getattr(stats, "splitter_refreshes", 0)
+            or getattr(stats, "autotune_steps", 0)):
+        ft += (f" adapt[salted={getattr(stats, 'salted_shuffles', 0)} "
+               f"refreshes={getattr(stats, 'splitter_refreshes', 0)} "
+               f"autotune={getattr(stats, 'autotune_steps', 0)}]")
+    salted_by_idx = {e["node_index"]: e
+                     for e in getattr(stats, "adapt_events", [])
+                     if e.get("kind") == "salted"}
+    idx_of = {n.nid: i for i, n in enumerate(pplan.order)}
     lines = [
         f"== EXPLAIN ANALYZE: mode={stats.mode}, "
         f"wall={stats.wall_time_s:.4f}s, dispatches={stats.dispatches} "
@@ -115,6 +144,9 @@ def render_analyze(pplan, stats, scan_rows: Optional[Dict[str, int]] = None,
             a = _node_actuals(n, records)
             if a:
                 acts.append(a)
+            ev = salted_by_idx.get(idx_of.get(n.nid))
+            if ev is not None:
+                acts.append(adapt_note(ev))
             if n.nid == pplan.root.nid and result_rows is not None:
                 acts.append(f"out_rows={result_rows}")
             est = f"rows~{int(n.est_rows):>9d}"
@@ -135,7 +167,7 @@ def stage_table(pplan, stats, parallelism: int) -> List[Dict[str, Any]]:
     ``QueryReport.roofline_table`` renders the markdown)."""
     from ..launch.roofline import stage_roofline
     from ..planner.physical import node_stat_labels
-    records = {r.label: r for r in stats.shuffle_records}
+    records = _records_by_label(stats)
     stage_secs = _stage_seconds(stats)
     by_stage: Dict[int, list] = {}
     for n in pplan.order:
@@ -145,10 +177,11 @@ def stage_table(pplan, stats, parallelism: int) -> List[Dict[str, Any]]:
         wire = 0
         srows = 0
         for n in by_stage[s]:
-            for l in node_stat_labels(n):
-                if l in records and not l.endswith(":overflow"):
-                    wire += records[l].bytes
-                    srows += records[l].rows
+            stems = {l.split(":")[0] for l in node_stat_labels(n)}
+            for l in records:
+                if l.split(":")[0] in stems and not l.endswith(":overflow"):
+                    wire += records[l]["bytes"]
+                    srows += records[l]["rows"]
         secs = stage_secs.get(s)
         terms = stage_roofline(wire, secs, parallelism)
         rows.append({
@@ -234,12 +267,18 @@ class QueryReport:
             "retries": getattr(st, "retries", 0),
             "degraded": getattr(st, "degraded", 0),
             "faults_injected": getattr(st, "faults_injected", 0),
+            "adaptive": getattr(st, "adaptive", False),
+            "salted_shuffles": getattr(st, "salted_shuffles", 0),
+            "splitter_refreshes": getattr(st, "splitter_refreshes", 0),
+            "autotune_steps": getattr(st, "autotune_steps", 0),
+            "adapt_events": list(getattr(st, "adapt_events", [])),
             "scan_rows": self.scan_rows,
             "rows_read": getattr(st, "rows_read", 0),
             "bytes_read": getattr(st, "bytes_read", 0),
             "result_rows": self.result_rows,
             "shuffle_records": [
-                {"label": r.label, "rows": r.rows, "bytes": r.bytes,
+                {"label": r.label, "segment": r.segment,
+                 "rows": r.rows, "bytes": r.bytes,
                  "dropped": r.dropped,
                  "per_rank_rows": list(r.per_rank_rows),
                  "per_rank_dropped": list(r.per_rank_dropped)}

@@ -281,6 +281,18 @@ def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
         reg.counter("bytes_read_total",
                     "source bytes ingested from scan sources").inc(
             stats.bytes_read, mode=mode)
+    if getattr(stats, "salted_shuffles", 0):
+        reg.counter("salted_shuffles_total",
+                    "shuffle boundaries re-routed by hot-key salting").inc(
+            stats.salted_shuffles, mode=mode)
+    if getattr(stats, "splitter_refreshes", 0):
+        reg.counter("splitter_refreshes_total",
+                    "range-splitter re-samples on sort imbalance").inc(
+            stats.splitter_refreshes, mode=mode)
+    if getattr(stats, "autotune_steps", 0):
+        reg.counter("autotune_steps_total",
+                    "morsel-size autotuner adjustments").inc(
+            stats.autotune_steps, mode=mode)
     if wall_time_s > 0:
         reg.histogram("query_wall_s", "end-to-end query wall time").observe(
             wall_time_s, mode=mode)
@@ -307,5 +319,8 @@ def record_exec(stats: Any, fingerprint: str, wall_time_s: float,
         "faults_injected": getattr(stats, "faults_injected", 0),
         "rows_read": getattr(stats, "rows_read", 0),
         "bytes_read": getattr(stats, "bytes_read", 0),
+        "salted_shuffles": getattr(stats, "salted_shuffles", 0),
+        "splitter_refreshes": getattr(stats, "splitter_refreshes", 0),
+        "autotune_steps": getattr(stats, "autotune_steps", 0),
     }
     return reg.record_query(record)

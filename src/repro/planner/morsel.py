@@ -59,27 +59,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..adapt import MorselTuner, SplitterEstimator, resolve_adaptive
+from ..adapt.hotkeys import plan_salt_decisions, salt_cache_token
 from ..core.env import DistTable, MorselSource
-from ..core.store import Checkpoint, SpillTable, _round8
-from ..faults import (CapacityOverflow, OverflowPolicy, resolve_faults,
-                      resolve_overflow, resolve_retry, resolve_token,
-                      run_with_retries)
+from ..core.store import Checkpoint, SpillTable, _round8, respill_routed
+from ..faults import (CapacityOverflow, OverflowPolicy, default_degrade_step,
+                      resolve_faults, resolve_overflow, resolve_retry,
+                      resolve_token, run_with_retries)
 from ..dataframe import ops_local
 from ..dataframe.groupby import (_normalize, combine_groupby_partials,
                                  groupby_partial)
-from ..dataframe.ops_local import hash_columns_np
-from ..dataframe.shuffle import reset_overflow_warnings
+from ..dataframe.ops_local import hash_columns, hash_columns_np
+from ..dataframe.shuffle import replicate_hot_rows, reset_overflow_warnings
 from ..dataframe.shuffle import shuffle as df_shuffle
 from ..dataframe.table import Table
 from ..nulls import mask_name
 from ..obs.metrics import record_exec
 from ..obs.trace import NULL_TRACER
 from .logical import LogicalNode, topo
-from .physical import (ExecStats, PhysicalPlan, _row_bytes, _shuffle_kw,
-                       _stat_vec, _sum_stats, _token, attach_dictionaries,
-                       build_shuffle_records, check_scan_dictionaries,
-                       describe_drops, emit_shuffle_events, eval_node,
-                       fingerprint, pair_stat_labels, plan_stat_labels)
+from .physical import (ExecStats, PhysicalPlan, _hot_mask, _row_bytes,
+                       _shuffle_kw, _stat_vec, _sum_stats, _token,
+                       attach_dictionaries, build_shuffle_records,
+                       check_scan_dictionaries, describe_drops,
+                       emit_shuffle_events, eval_node, fingerprint,
+                       pair_stat_labels, plan_stat_labels)
 
 
 @dataclasses.dataclass
@@ -295,8 +298,9 @@ def _groupby_wire_width(table: Table, keys, physical, pre: bool) -> int:
 def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
                       residents: Dict[int, Table], W: int,
                       shuffle_impl: str, a2a_chunks: int,
-                      stats_out, debug_overflow: bool) -> Table:
+                      stats_out, debug_overflow: bool, salt=None) -> Table:
     p_ = node.params
+    dec = salt.get(node.nid) if salt else None
     if node.op == "noop":
         return cur
     if node.op == "project":
@@ -331,8 +335,21 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
         on = p_["on"]
         l, r = cur, residents[node.nid]
         if not p_.get("elide_left"):
-            l, st = df_shuffle(l, ctx.comm, key_cols=[on], out_capacity=W,
-                               label=f"join({on}):left", **kw)
+            if dec is not None:
+                # salted probe (repro.adapt): hot rows stay on their source
+                # rank — the resident build side broadcast-appended every
+                # hot build row, so the local hash join still finds them
+                h = hash_columns(l, [on])
+                base = (h % jnp.uint32(ctx.comm.size())).astype(jnp.int32)
+                dest = jnp.where(_hot_mask(h, dec.hot_hashes),
+                                 jnp.asarray(ctx.comm.rank(), jnp.int32),
+                                 base)
+                l, st = df_shuffle(l, ctx.comm, dest=dest, out_capacity=W,
+                                   label=f"join({on}):left", **kw)
+            else:
+                l, st = df_shuffle(l, ctx.comm, key_cols=[on],
+                                   out_capacity=W,
+                                   label=f"join({on}):left", **kw)
             stats_out.append((f"join({on}):left",
                               _stat_vec(st, _row_bytes(cur))))
         out_cap = p_.get("morsel_out_capacity") or W
@@ -346,10 +363,12 @@ def _eval_stream_node(node: LogicalNode, ctx, cur: Table,
         keys = list(p_["keys"])
         physical, _post = _normalize(p_["aggs"])
         pre = bool(p_.get("pre_aggregate", False))
+        gsalt = ((dec.hot_hashes, dec.k)
+                 if dec is not None and not pre else None)
         out, st = groupby_partial(cur, ctx.comm, keys, physical,
                                   pre_aggregate=pre,
                                   elide_shuffle=bool(p_.get("elide_shuffle")),
-                                  out_capacity=W,
+                                  salt=gsalt, out_capacity=W,
                                   label=f"groupby({','.join(keys)})", **kw)
         if st is not None:
             stats_out.append(
@@ -384,7 +403,7 @@ def _seg_stat_labels(seg_nodes: Sequence[LogicalNode]) -> List[str]:
 # unconditional so capacity-pressure drops are never silent.
 # ---------------------------------------------------------------------- #
 def _make_stream_prog(seg_nodes, join_nids, W, shuffle_impl, a2a_chunks,
-                      debug_overflow):
+                      debug_overflow, salt=None):
     def prog(ctx, morsel, *extras):
         residents = dict(zip(join_nids, extras))
         stats: List[Tuple[str, Any]] = []
@@ -392,7 +411,7 @@ def _make_stream_prog(seg_nodes, join_nids, W, shuffle_impl, a2a_chunks,
         for node in seg_nodes:
             cur = _eval_stream_node(node, ctx, cur, residents, W,
                                     shuffle_impl, a2a_chunks, stats,
-                                    debug_overflow)
+                                    debug_overflow, salt=salt)
         return cur, tuple(a for _, a in stats)
     return prog
 
@@ -422,12 +441,14 @@ def _make_sort_prog(node, W, shuffle_impl, a2a_chunks, debug_overflow):
 # ---------------------------------------------------------------------- #
 def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
                     a2a_chunks, collected, acc: _Acc,
-                    capacity_factor: float, tracer=NULL_TRACER) -> DistTable:
+                    capacity_factor: float, tracer=NULL_TRACER,
+                    salt=None) -> DistTable:
     rroot = jnode.inputs[1]
     sub_order = topo(rroot)
     scan_names = [s.params["name"] for s in sub_order if s.op == "scan"]
     on = jnode.params["on"]
     elide = bool(jnode.params.get("elide_right"))
+    dec = salt.get(jnode.nid) if (salt and not elide) else None
     jkw = {k: v for k, v in _shuffle_kw(jnode).items()
            if k != "out_capacity"}
     jkw.setdefault("impl", shuffle_impl)
@@ -452,15 +473,34 @@ def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
                            _round8(int(r.capacity * capacity_factor)))
             jkw.setdefault("bucket_capacity",
                            _round8(int(r.capacity * capacity_factor)))
-            r, st = df_shuffle(r, ctx.comm, key_cols=[on],
-                               label=f"join({on}):right", **jkw)
-            stats.append((f"join({on}):right", _stat_vec(st, width)))
+            if dec is not None:
+                # salted build (repro.adapt): hot rows skip the hash
+                # shuffle (overflow bin, uncounted) and are broadcast-
+                # appended so every rank's probe morsels find them locally
+                h = hash_columns(r, [on])
+                hot = _hot_mask(h, dec.hot_hashes)
+                base = (h % jnp.uint32(ctx.comm.size())).astype(jnp.int32)
+                dest = jnp.where(hot, jnp.int32(ctx.comm.size()), base)
+                r2, st = df_shuffle(r, ctx.comm, dest=dest,
+                                    label=f"join({on}):right", **jkw)
+                stats.append((f"join({on}):right", _stat_vec(st, width)))
+                r2, bst = replicate_hot_rows(r, ctx.comm, hot,
+                                             dec.hot_cap, r2)
+                stats.append((f"join({on}):broadcast",
+                              _stat_vec(bst, width)))
+                r = r2
+            else:
+                r, st = df_shuffle(r, ctx.comm, key_cols=[on],
+                                   label=f"join({on}):right", **jkw)
+                stats.append((f"join({on}):right", _stat_vec(st, width)))
         return r, tuple(a for _, a in stats)
 
     args = [_to_dist(tables[n], env.parallelism) for n in scan_names]
     labels = plan_stat_labels(sub_order)
     if not elide:
         labels.append(f"join({on}):right")
+    if dec is not None:
+        labels.append(f"join({on}):broadcast")
     with tracer.span(f"build:join({on})", "stage", ops="resident-build"):
         resident, stats = env.run(
             prog, *args,
@@ -469,7 +509,8 @@ def _build_resident(env, jnode: LogicalNode, tables, shuffle_impl,
                  # params (shuffle kwargs, capacities)
                  _token(dict(jnode.params)),
                  env.communicator_name, shuffle_impl, a2a_chunks,
-                 capacity_factor, tuple(env._arg_sig(a) for a in args)))
+                 capacity_factor, tuple(env._arg_sig(a) for a in args))
+                 + salt_cache_token(salt or {}, [jnode.nid]))
         acc.dispatches += 1
         pairs = pair_stat_labels(labels, stats)
         collected.extend(pairs)
@@ -567,7 +608,7 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                a2a_chunks: int = 1, capacity_factor: float = 2.0,
                samples: int = 64, debug_overflow: bool = False,
                tracer=None, retries=None, timeout=None, overflow=None,
-               faults=None):
+               faults=None, adaptive=None):
     """Stream a plan over morsels of ``morsel_rows`` rows per rank.
 
     Returns a host-resident ``SpillTable`` (or ``(SpillTable, ExecStats)``
@@ -589,6 +630,15 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     overflowing segment with halved ``morsel_rows`` (then grown working
     capacity) until no row is dropped; ``faults`` arms a deterministic
     ``FaultPlan`` (None consults ``REPRO_FAULTS``).
+
+    ``adaptive`` (None | bool | dict | ``repro.adapt.AdaptiveConfig``)
+    gates runtime skew mitigation (``docs/adaptive.md``): hot-key salting
+    of streamed joins/groupbys (with the partial spill host-re-routed to
+    key home ranks ahead of the combine), sample-refreshed sort splitters
+    when the observed per-rank routing imbalance exceeds a bound, and a
+    degrade controller that picks the replay morsel size from the
+    observed overflow peak instead of blind halving.  A run where no
+    mitigation fires uses exactly the ``adaptive=False`` cache keys.
     """
     if mode == "amt":
         raise ValueError(
@@ -611,6 +661,14 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     if src_name not in tables:
         raise KeyError(f"plan scans missing from tables: [{src_name!r}]")
     check_scan_dictionaries(pplan.order, tables)
+    # runtime skew mitigation (repro.adapt): decisions are sampled from the
+    # host-resident sources before any spill conversion; an empty decision
+    # set leaves every compile-cache key exactly as adaptive=False would
+    acfg = resolve_adaptive(adaptive)
+    adapt_events: List[Dict[str, Any]] = []
+    salt = plan_salt_decisions(pplan.order, tables, p, acfg, adapt_events)
+    tuner = MorselTuner(acfg, capacity_factor=capacity_factor,
+                        events=adapt_events)
     M = _round8(morsel_rows)
     W = max(M, _round8(int(M * capacity_factor)))
     fp = pplan.fingerprint
@@ -639,7 +697,7 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 pairs: List[Tuple[str, Any]] = []
                 dist = _build_resident(env, _node, tables, shuffle_impl,
                                        a2a_chunks, pairs, acc, _cf * scale,
-                                       tracer=tr)
+                                       tracer=tr, salt=salt)
                 return dist, pairs
 
             dist, pairs = run_with_retries(
@@ -696,7 +754,7 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 # validated before every attempt, released only on commit
                 ckpt = Checkpoint(spill)
                 live_ckpts.append(ckpt)
-                M_seg, W_seg = M, W
+                M_seg, W_seg = tuner.initial_morsel(M), W
 
                 def _segment_attempt(_nodes=nodes, _terminal=terminal,
                                      _si=si, _seg_name=seg_name):
@@ -704,12 +762,21 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                     token.check(_seg_name)
                     W_a = fr.capacity("segment:launch", W_seg, token=token,
                                       segment=_si)
+                    est: Optional[SplitterEstimator] = None
                     if _terminal == "sort":
                         node = _nodes[0]
                         by = node.params["by"]
-                        spl = _host_splitters(
-                            seg_in, by[0], p,
-                            node.params.get("samples", samples))
+                        n_samp = node.params.get("samples", samples)
+                        spl = _host_splitters(seg_in, by[0], p, n_samp)
+                        # refreshable splitters: if the one-shot sample
+                        # routes too many rows to one rank, re-sample with
+                        # a boosted budget and re-route what already landed
+                        est = SplitterEstimator(
+                            spl,
+                            lambda s, _in=seg_in, _b=by[0]:
+                                _host_splitters(_in, _b, p, s),
+                            n_samp, acfg, events=adapt_events,
+                            label=f"sort({','.join(by)})")
                         extras: Tuple[Any, ...] = (jnp.asarray(spl),)
                         acc.h2d_bytes += spl.nbytes
                         prog = _make_sort_prog(node, W_a, shuffle_impl,
@@ -721,12 +788,14 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                                        for n in join_nodes)
                         prog = _make_stream_prog(
                             _nodes, [n.nid for n in join_nodes], W_a,
-                            shuffle_impl, a2a_chunks, debug_overflow)
+                            shuffle_impl, a2a_chunks, debug_overflow,
+                            salt=salt)
                         seg_labels = _seg_stat_labels(_nodes)
                     key = ("morsel-seg", fp, _si, M_seg, W_a, shuffle_impl,
                            a2a_chunks, env.communicator_name,
                            debug_overflow,
-                           tuple(env._arg_sig(e) for e in extras))
+                           tuple(env._arg_sig(e) for e in extras)) \
+                        + salt_cache_token(salt, [n.nid for n in _nodes])
                     source = MorselSource(seg_in, M_seg, env, tracer=tr,
                                           faults=fr, token=token)
                     out_spill: Optional[SpillTable] = None
@@ -761,9 +830,28 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                             if tr.enabled:
                                 emit_shuffle_events(tr, unit_pairs,
                                                     a2a_chunks)
+                            if est is not None and est.observe(
+                                    np.asarray(out.row_counts)):
+                                # same shapes/dtypes -> same program; only
+                                # the splitter VALUES change, so the swap
+                                # never recompiles
+                                extras = (jnp.asarray(est.splitters),)
+                                acc.h2d_bytes += est.splitters.nbytes
                     acc.h2d_bytes += source.h2d_bytes
                     res = out_spill
                     if _terminal == "groupby":
+                        gdec = salt.get(_nodes[-1].nid) if salt else None
+                        if gdec is not None and res is not None:
+                            # salted partials live on k salt ranks; route
+                            # every partial to its key's home rank so the
+                            # rank-local combiner sees each key exactly once
+                            gkeys = list(_nodes[-1].params["keys"])
+                            res = respill_routed(
+                                res,
+                                lambda cols, _k=gkeys:
+                                    (hash_columns_np(cols, _k)
+                                     % np.uint32(p)).astype(np.int64),
+                                tracer=tr)
                         # the combiner runs inside the attempt: a fault
                         # mid-combine replays the whole segment from its
                         # input checkpoint (partials are discarded)
@@ -772,6 +860,24 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                                                    M_seg, acc, fp, _si,
                                                    faults=fr, token=token)
                     elif _terminal == "sort":
+                        if est is not None and est.refreshes and \
+                                res is not None:
+                            # a refresh breaks range disjointness between
+                            # early and late morsels — re-route the spilled
+                            # rows by the final splitters before ordering
+                            fin = est.splitters
+
+                            def _dest(cols, _f=fin, _b=by[0]):
+                                d = np.searchsorted(
+                                    _f, cols[_b],
+                                    side="right").astype(np.int64)
+                                m = cols.get(mask_name(_b))
+                                if m is not None:  # nulls-last
+                                    d = np.where(
+                                        np.asarray(m).astype(bool),
+                                        d, p - 1)
+                                return d
+                            res = respill_routed(res, _dest, tracer=tr)
                         with tr.span(f"host_sort({','.join(by)})",
                                      "stage"):
                             res = _host_sort_ranks(res, by)
@@ -787,15 +893,22 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                     _, _, seg_drop = _sum_stats(
                         [a for _, a in attempt_pairs])
                     if seg_drop and ovf == OverflowPolicy.DEGRADE:
-                        # never drop a row: replay smaller morsels against
-                        # the same working capacity (skew / join explosion
-                        # shrinks relative to W); once morsels bottom out,
-                        # grow the working capacity itself
+                        # never drop a row: replay with a morsel size that
+                        # fits.  The tuner jumps straight to the size the
+                        # observed overflow peak implies (and never splits
+                        # a salted segment — its routing is already
+                        # balanced, so it grows W instead); with autotune
+                        # off, the original blind halving applies.
                         counters["degraded"] += 1
-                        if M_seg > 8:
-                            M_seg = max(8, _round8(M_seg // 2))
+                        if tuner.enabled:
+                            M_seg, W_seg = tuner.degrade(
+                                M_seg, W_seg,
+                                [pr[1] for pr in attempt_pairs],
+                                salted=any(n.nid in salt for n in nodes),
+                                label=seg_name)
                         else:
-                            W_seg = _round8(W_seg * 2)
+                            M_seg, W_seg = default_degrade_step(M_seg,
+                                                                W_seg)
                         continue
                     if seg_drop and ovf == OverflowPolicy.RAISE:
                         raise CapacityOverflow(
@@ -809,8 +922,16 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                         f"{_MAX_DEGRADE_SEG} degrade steps "
                         f"(morsel_rows={M_seg}, working_capacity={W_seg})")
 
-                # commit: only the successful attempt's stats are recorded
-                collected.extend(attempt_pairs)
+                # commit: only the successful attempt's stats are recorded,
+                # keyed by (label, segment) so per-label histograms never
+                # mix morsel counts from different segments
+                if tuner.enabled:
+                    tuner.observe_expansion(
+                        sum(spill.rank_rows(r) for r in range(p)),
+                        sum(out_spill.rank_rows(r) for r in range(p))
+                        if out_spill is not None else 0)
+                collected.extend(
+                    (lbl, arr, si) for lbl, arr in attempt_pairs)
                 ckpt.release()
                 seg_sp.set(morsels=seg_morsels, h2d_bytes=seg_h2d)
                 spill = out_spill
@@ -824,7 +945,7 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 c.release()
 
     spill = attach_dictionaries(spill, pplan.root)
-    rows, byts, dropped = _sum_stats([a for _, a in collected])
+    rows, byts, dropped = _sum_stats([pr[1] for pr in collected])
     records = build_shuffle_records(collected)
     if dropped and ovf == OverflowPolicy.WARN:
         where = describe_drops(records)
@@ -851,6 +972,10 @@ def run_morsel(pplan: PhysicalPlan, env, tables: Dict[str, Any],
         wall_time_s=time.perf_counter() - t_query0,
         stage_times=stage_times, shuffle_records=records,
         retries=counters["retries"], degraded=counters["degraded"],
-        faults_injected=fr.injected)
+        faults_injected=fr.injected,
+        adaptive=acfg.enabled, salted_shuffles=len(salt),
+        splitter_refreshes=sum(1 for e in adapt_events
+                               if e.get("kind") == "splitter_refresh"),
+        autotune_steps=tuner.steps, adapt_events=list(adapt_events))
     record_exec(stats, fp, stats.wall_time_s)
     return spill, stats

@@ -45,7 +45,7 @@ from ..dataframe.groupby import (_normalize, finalize_groupby,
                                  nullable_agg_cols)
 from ..dataframe.groupby import groupby as df_groupby
 from ..dataframe.ops_local import hash_columns
-from ..dataframe.shuffle import ShuffleStats
+from ..dataframe.shuffle import ShuffleStats, _round_up
 from ..dataframe.shuffle import shuffle as df_shuffle
 from ..dataframe.sort import _range_dest
 from ..dataframe.sort import sort as df_sort
@@ -190,13 +190,17 @@ def _stat_vec(st: ShuffleStats, width: int) -> jax.Array:
 # stats triples; the compiled programs return arrays only, so the label
 # sequence is reconstructed from the static plan in dispatch order)
 # ---------------------------------------------------------------------- #
-def node_stat_labels(node: LogicalNode) -> List[str]:
+def node_stat_labels(node: LogicalNode, salt=None) -> List[str]:
     """Stat labels ``eval_node`` appends for one node, in append order.
 
     Mirrors ``eval_node`` exactly: shuffle-executing ops contribute one
     label per shuffle; joins additionally contribute an ``:overflow``
-    entry (local join output capacity pressure, zero wire bytes)."""
+    entry (local join output capacity pressure, zero wire bytes).  With a
+    fired salting decision (``salt`` maps nid -> SaltDecision) a groupby
+    additionally appends its ``:remerge`` partial shuffle and a join its
+    ``:broadcast`` hot-row replication (before ``:overflow``)."""
     p = node.params
+    salted = salt is not None and node.nid in salt
     if node.op == "shuffle":
         return [f"shuffle({','.join(p['key_cols'])})"]
     if node.op == "join":
@@ -205,19 +209,22 @@ def node_stat_labels(node: LogicalNode) -> List[str]:
             labels.append(f"join({p['on']}):left")
         if not p.get("elide_right"):
             labels.append(f"join({p['on']}):right")
+        if salted:
+            labels.append(f"join({p['on']}):broadcast")
         labels.append(f"join({p['on']}):overflow")
         return labels
     if node.op == "groupby" and not p.get("elide_shuffle"):
-        return [f"groupby({','.join(p['keys'])})"]
+        label = f"groupby({','.join(p['keys'])})"
+        return [label, f"{label}:remerge"] if salted else [label]
     if node.op == "sort" and not p.get("elide_shuffle"):
         return [f"sort({','.join(p['by'])})"]
     return []
 
 
-def plan_stat_labels(nodes: Sequence[LogicalNode]) -> List[str]:
+def plan_stat_labels(nodes: Sequence[LogicalNode], salt=None) -> List[str]:
     out: List[str] = []
     for n in nodes:
-        out.extend(node_stat_labels(n))
+        out.extend(node_stat_labels(n, salt))
     return out
 
 
@@ -245,26 +252,37 @@ class ShuffleRecord:
     dropped: int
     per_rank_rows: Tuple[int, ...]
     per_rank_dropped: Tuple[int, ...]
+    #: out-of-core segment index the label executed in (None in-core).
+    #: Keying records by (label, segment) keeps a plan that runs the same
+    #: shuffle label in several segments — e.g. a groupby replayed after a
+    #: degrade split — attributable per segment instead of smeared into
+    #: one row, which is what the skew detector and EXPLAIN ANALYZE need.
+    segment: Optional[int] = None
 
 
-def build_shuffle_records(pairs: Sequence[Tuple[str, Any]]
-                          ) -> List[ShuffleRecord]:
-    """Aggregate labeled (p, 3) stat arrays by label (summing across
-    repeated executions of the same plan node, e.g. one per morsel)."""
-    agg: Dict[str, np.ndarray] = {}
-    order: List[str] = []
-    for label, a in pairs:
+def build_shuffle_records(pairs: Sequence[Tuple]) -> List[ShuffleRecord]:
+    """Aggregate labeled (p, 3) stat arrays by (label, segment) — summing
+    across repeated executions of the same plan node, e.g. one per morsel.
+    ``pairs`` entries are ``(label, array)`` (in-core; segment None) or
+    ``(label, array, segment)`` (morsel executor)."""
+    agg: Dict[Tuple[str, Optional[int]], np.ndarray] = {}
+    order: List[Tuple[str, Optional[int]]] = []
+    for pair in pairs:
+        label, a = pair[0], pair[1]
+        seg = pair[2] if len(pair) > 2 else None
         a = np.asarray(a).reshape(-1, 3).astype(np.int64)
-        if label in agg:
-            agg[label] = agg[label] + a
+        key = (label, seg)
+        if key in agg:
+            agg[key] = agg[key] + a
         else:
-            agg[label] = a.copy()
-            order.append(label)
+            agg[key] = a.copy()
+            order.append(key)
     return [ShuffleRecord(
-        label, int(agg[label][:, 0].sum()), int(agg[label][:, 1].sum()),
-        int(agg[label][:, 2].sum()),
-        tuple(int(x) for x in agg[label][:, 0]),
-        tuple(int(x) for x in agg[label][:, 2])) for label in order]
+        label, int(agg[k][:, 0].sum()), int(agg[k][:, 1].sum()),
+        int(agg[k][:, 2].sum()),
+        tuple(int(x) for x in agg[k][:, 0]),
+        tuple(int(x) for x in agg[k][:, 2]),
+        segment=seg) for k in order for label, seg in [k]]
 
 
 def describe_drops(records: Sequence[ShuffleRecord], limit: int = 6) -> str:
@@ -285,7 +303,8 @@ def emit_shuffle_events(tracer, pairs: Sequence[Tuple[str, Any]],
     """Per-shuffle (and per all-to-all chunk) instant events under the
     currently open stage span.  Device-side op timing is invisible to the
     driver, so these carry data volumes, not durations."""
-    for label, a in pairs:
+    for pair in pairs:
+        label, a = pair[0], pair[1]
         a = np.asarray(a).reshape(-1, 3)
         rows, byts, dropped = (int(a[:, 0].sum()), int(a[:, 1].sum()),
                                int(a[:, 2].sum()))
@@ -311,11 +330,13 @@ def eval_node(node: LogicalNode, comm: Communicator,
               values: Dict[int, Table], tables: Dict[str, Table],
               shuffle_mode: str,
               stats_out: Optional[List[Tuple[str, jax.Array]]] = None,
-              shuffle_impl: str = "radix", a2a_chunks: int = 1
-              ) -> Table:
+              shuffle_impl: str = "radix", a2a_chunks: int = 1,
+              salt=None) -> Table:
     p = node.params
     ins = [values[i.nid] for i in node.inputs]
     shuffle_fn = df_shuffle if shuffle_mode == "direct" else shuffle_allgather
+    decision = salt.get(node.nid) if (salt and shuffle_mode == "direct") \
+        else None
 
     def run_shuffle(label: str, table: Table, **kw) -> Table:
         out, st = shuffle_fn(table, comm, label=label, **kw)
@@ -363,6 +384,10 @@ def eval_node(node: LogicalNode, comm: Communicator,
         jkw = {k: v for k, v in kw.items() if k != "out_capacity"}
         if "shuffle_out_capacity" in p:  # receive headroom for skewed keys
             jkw["out_capacity"] = p["shuffle_out_capacity"]
+        if decision is not None and not p.get("elide_left") \
+                and not p.get("elide_right"):
+            return _eval_join_salted(node, comm, l, r, decision, jkw,
+                                     stats_out)
         if not p.get("elide_left"):
             l = run_shuffle(f"join({on}):left", l, key_cols=[on], **jkw)
         if not p.get("elide_right"):
@@ -385,6 +410,10 @@ def eval_node(node: LogicalNode, comm: Communicator,
             # input already co-partitioned on the keys: local-only groupby
             final = ops_local.groupby_local(ins[0], keys, physical)
             return finalize_groupby(final, keys, post, nullable)
+        if (decision is not None and shuffle_mode == "direct"
+                and not p.get("pre_aggregate")):
+            return _eval_groupby_salted(node, comm, ins[0], decision, kw,
+                                        stats_out)
         if shuffle_mode == "direct":
             pre = bool(p.get("pre_aggregate", False))
             out, st = df_groupby(ins[0], comm, keys, aggs,
@@ -428,6 +457,97 @@ def eval_node(node: LogicalNode, comm: Communicator,
         return ops_local.sort_local(shuffled, by)
 
     raise ValueError(node.op)
+
+
+# ---------------------------------------------------------------------- #
+# Salted evaluation (repro.adapt; in-core, inside shard_map)
+# ---------------------------------------------------------------------- #
+def _hot_mask(h: jax.Array, hot_hashes) -> jax.Array:
+    """Rows whose key hash is one of the (static) hot constants."""
+    hot = jnp.zeros(h.shape, jnp.bool_)
+    for v in hot_hashes:
+        hot = hot | (h == jnp.uint32(v))
+    return hot
+
+
+def _eval_groupby_salted(node: LogicalNode, comm: Communicator,
+                         table: Table, decision, kw, stats_out) -> Table:
+    """Two-shuffle salted groupby: salted row shuffle + stage-1 partials,
+    then a tiny unsalted partial re-merge on each key's home rank.
+
+    Both shuffles get full-table bucket/out capacities: the whole point of
+    the decision is that one rank would otherwise receive ~everything, so
+    per-destination "balanced share" sizing is exactly what we can't
+    assume until the salt has done its job."""
+    from ..dataframe.groupby import groupby_salted
+    p = node.params
+    keys = list(p["keys"])
+    cap = table.capacity
+    label = f"groupby({','.join(keys)})"
+    skw = dict(kw, bucket_capacity=cap, label=label)
+    skw["out_capacity"] = skw.get("out_capacity") or cap
+    rkw = dict(kw, bucket_capacity=cap, out_capacity=cap,
+               label=f"{label}:remerge")
+    out, st1, st2 = groupby_salted(table, comm, keys, p["aggs"],
+                                   decision.hot_hashes, decision.k,
+                                   shuffle_kw=skw, remerge_kw=rkw)
+    if stats_out is not None:
+        physical, _ = _normalize(p["aggs"])
+        width = sum(table.columns[k].dtype.itemsize for k in keys)
+        for col, names in physical.items():
+            width += sum(4 if a == "count"
+                         else table.columns[col].dtype.itemsize
+                         for a in names)
+        stats_out.append((label, _stat_vec(st1, _row_bytes(table))))
+        stats_out.append((f"{label}:remerge", _stat_vec(st2, width)))
+    return out
+
+
+def _eval_join_salted(node: LogicalNode, comm: Communicator,
+                      l: Table, r: Table, decision, jkw, stats_out) -> Table:
+    """Skew-mitigated hash join: hot probe rows stay on their source rank,
+    hot build rows skip the hash shuffle (overflow bin, uncounted) and are
+    broadcast-appended to every rank's build table instead — so each hot
+    probe row meets every build row of its key locally, exactly once."""
+    from ..dataframe.shuffle import replicate_hot_rows
+    p = node.params
+    on = p["on"]
+    psize = comm.size()
+    rank = comm.rank()
+
+    hot_l = _hot_mask(hash_columns(l, [on]), decision.hot_hashes)
+    hot_r = _hot_mask(hash_columns(r, [on]), decision.hot_hashes)
+    base_l = (hash_columns(l, [on]) % jnp.uint32(psize)).astype(jnp.int32)
+    base_r = (hash_columns(r, [on]) % jnp.uint32(psize)).astype(jnp.int32)
+    dest_l = jnp.where(hot_l, jnp.asarray(rank, jnp.int32), base_l)
+    dest_r = jnp.where(hot_r, jnp.int32(psize), base_r)  # excluded
+
+    # probe: the self-bucket must hold every hot row this rank keeps, and
+    # the output every kept-hot + received-cold row
+    lkw = dict(jkw, bucket_capacity=l.capacity)
+    lkw["out_capacity"] = (lkw.get("out_capacity")
+                           or _round_up(2 * l.capacity, 8))
+    rkw = dict(jkw)
+    rkw["out_capacity"] = rkw.get("out_capacity") or r.capacity
+
+    l2, st_l = df_shuffle(l, comm, dest=dest_l,
+                          label=f"join({on}):left", **lkw)
+    r2, st_r = df_shuffle(r, comm, dest=dest_r,
+                          label=f"join({on}):right", **rkw)
+    r2, st_b = replicate_hot_rows(r, comm, hot_r, decision.hot_cap, r2)
+    if stats_out is not None:
+        stats_out.append((f"join({on}):left", _stat_vec(st_l, _row_bytes(l))))
+        stats_out.append((f"join({on}):right", _stat_vec(st_r, _row_bytes(r))))
+        stats_out.append((f"join({on}):broadcast",
+                          _stat_vec(st_b, _row_bytes(r))))
+        out, ov = ops_local.join_local(l2, r2, on,
+                                       out_capacity=p.get("out_capacity"),
+                                       with_overflow=True)
+        z = jnp.zeros((), jnp.int32)
+        stats_out.append((f"join({on}):overflow", jnp.stack([z, z, ov])))
+        return out
+    return ops_local.join_local(l2, r2, on,
+                                out_capacity=p.get("out_capacity"))
 
 
 # ---------------------------------------------------------------------- #
@@ -480,6 +600,15 @@ class ExecStats:
     retries: int = 0           # dispatch units replayed after a fault
     degraded: int = 0          # capacity-degrade re-executions (overflow)
     faults_injected: int = 0   # faults the active FaultPlan fired this query
+    # -- runtime skew mitigation (repro.adapt; docs/adaptive.md) ---------- #
+    adaptive: bool = False         # was the adaptive layer enabled
+    salted_shuffles: int = 0       # shuffle boundaries that got salted
+    splitter_refreshes: int = 0    # sort splitter re-samples that fired
+    autotune_steps: int = 0        # tuner-chosen degrade replans
+    #: one dict per fired mitigation ({"kind": "salted" | ...}) — the
+    #: machine-readable trail EXPLAIN ANALYZE renders as annotations
+    adapt_events: List[Dict[str, Any]] = \
+        dataclasses.field(default_factory=list)
 
 
 def check_scan_dictionaries(order: Sequence[LogicalNode],
@@ -563,7 +692,8 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                  shuffle_impl: str = "radix", a2a_chunks: int = 1,
                  morsel_rows: Optional[int] = None, tracer=None,
                  retries=None, timeout=None, overflow=None, faults=None,
-                 scan_capacity: Optional[int] = None, **morsel_kw):
+                 scan_capacity: Optional[int] = None, adaptive=None,
+                 **morsel_kw):
     """Execute a lowered plan against DistTables on a ``CylonEnv``.
 
     Returns a DistTable, or ``(DistTable, ExecStats)`` with
@@ -600,6 +730,12 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     ``REPRO_FAULTS``).  All of this is driver-side: with injection
     disabled, compile-cache keys are identical to a run without the
     harness.
+
+    ``adaptive`` (None | bool | dict | ``AdaptiveConfig``) gates runtime
+    skew mitigation (``repro.adapt``, ``docs/adaptive.md``): hot-key
+    salting at shuffle boundaries here, splitter refresh + morsel
+    autotuning in the out-of-core executor.  Default on; a run where no
+    mitigation fires uses exactly the ``adaptive=False`` cache keys.
     """
     if morsel_rows is not None:
         from .morsel import run_morsel
@@ -607,7 +743,8 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                           collect_stats=collect_stats,
                           shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
                           tracer=tracer, retries=retries, timeout=timeout,
-                          overflow=overflow, faults=faults, **morsel_kw)
+                          overflow=overflow, faults=faults,
+                          adaptive=adaptive, **morsel_kw)
     if morsel_kw:
         raise TypeError(f"unexpected kwargs without morsel_rows: "
                         f"{sorted(morsel_kw)}")
@@ -650,14 +787,27 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
     order = pplan.order
     fp = pplan.fingerprint
     shuffle_mode = "allgather" if mode == "amt" else "direct"
-    eval_kw = dict(shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks)
+    # -- runtime skew detection (repro.adapt) -- driver-side sampling of
+    # the (now device-resident) scan tables; an empty decision set leaves
+    # every compile-cache key below exactly as adaptive=False would.
+    # AMT shuffles are allgather-based (every rank sees all rows), which
+    # is skew-immune by construction, so salting is direct-mode only.
+    from ..adapt import resolve_adaptive
+    from ..adapt.hotkeys import plan_salt_decisions, salt_cache_token
+    acfg = resolve_adaptive(adaptive)
+    adapt_events: List[Dict[str, Any]] = []
+    salt = (plan_salt_decisions(order, tables, env.parallelism, acfg,
+                                adapt_events)
+            if shuffle_mode == "direct" else {})
+    eval_kw = dict(shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks,
+                   salt=salt)
     hits0, misses0 = env.cache_hits, env.cache_misses
     timing = collect_stats or tr.enabled
     stage_times: List[Tuple[str, float]] = []
     t_query0 = time.perf_counter() if timing else 0.0
 
     def mk_stats(dispatches: int, pairs) -> ExecStats:
-        rows, byts, dropped = _sum_stats([a for _, a in pairs])
+        rows, byts, dropped = _sum_stats([pr[1] for pr in pairs])
         rows_read, bytes_read = scan_read_stats(names, tables)
         stats = ExecStats(mode, pplan.num_stages, pplan.num_shuffles,
                           dispatches, rows, byts, pplan.shuffle_labels(),
@@ -672,7 +822,10 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                           stage_times=stage_times,
                           shuffle_records=build_shuffle_records(pairs),
                           retries=counters["retries"],
-                          faults_injected=fr.injected)
+                          faults_injected=fr.injected,
+                          adaptive=acfg.enabled,
+                          salted_shuffles=len(salt),
+                          adapt_events=list(adapt_events))
         record_exec(stats, fp, stats.wall_time_s)
         return stats
 
@@ -708,7 +861,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 pplan, env, tables, m0, mode="bsp", collect_stats=True,
                 shuffle_impl=shuffle_impl, a2a_chunks=a2a_chunks, tracer=tr,
                 retries=policy, timeout=token,
-                overflow=OverflowPolicy.DEGRADE, faults=fr)
+                overflow=OverflowPolicy.DEGRADE, faults=fr, adaptive=acfg)
         except ValueError as e:
             raise CapacityOverflow(
                 f"capacity pressure dropped {stats.rows_dropped} rows "
@@ -747,7 +900,8 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                         fr.check("a2a:chunk", token=token, stage=0, chunk=c)
                 return env.run(prog, *[tables[n] for n in names],
                                key=("bsp", fp, env.communicator_name,
-                                    collect_stats, shuffle_impl, a2a_chunks))
+                                    collect_stats, shuffle_impl, a2a_chunks)
+                                   + salt_cache_token(salt))
 
             res = run_with_retries(dispatch, policy=policy, token=token,
                                    tracer=tr, label="stage:program",
@@ -760,10 +914,11 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 stage_times.append(("program", time.perf_counter() - t0))
             if collect_stats and tr.enabled:
                 emit_shuffle_events(
-                    tr, pair_stat_labels(plan_stat_labels(order), res[1]),
+                    tr, pair_stat_labels(plan_stat_labels(order, salt),
+                                         res[1]),
                     a2a_chunks)
         if collect_stats:
-            pairs = pair_stat_labels(plan_stat_labels(order), res[1])
+            pairs = pair_stat_labels(plan_stat_labels(order, salt), res[1])
             return finish(attach_dictionaries(out, root), mk_stats(1, pairs))
         return attach_dictionaries(out, root)
 
@@ -822,8 +977,10 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 m0 = env.cache_misses
                 has_comm = any(n.is_comm() for n in unit)
 
+                unit_salt = salt_cache_token(salt, [n.nid for n in unit])
+
                 def dispatch(_uidx=uidx, _args=args, _prog=prog,
-                             _has_comm=has_comm):
+                             _has_comm=has_comm, _usalt=unit_salt):
                     token.check(unit_names[_uidx])
                     fr.check("stage:launch", token=token, stage=_uidx)
                     if _has_comm:
@@ -833,7 +990,8 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                     return env.run(
                         _prog, *_args,
                         key=(mode, fp, _uidx, env.communicator_name,
-                             collect_stats, shuffle_impl, a2a_chunks))
+                             collect_stats, shuffle_impl, a2a_chunks)
+                            + _usalt)
 
                 res = run_with_retries(dispatch, policy=policy, token=token,
                                        tracer=tr, label=unit_names[uidx],
@@ -842,7 +1000,7 @@ def run_physical(pplan: PhysicalPlan, env, tables: Dict[str, Any],
                 if collect_stats:
                     out_tuple, unit_stats = res
                     unit_pairs = pair_stat_labels(
-                        plan_stat_labels(unit), unit_stats)
+                        plan_stat_labels(unit, salt), unit_stats)
                     collected.extend(unit_pairs)
                 else:
                     out_tuple = res

@@ -1,0 +1,217 @@
+"""Shared adversarial-table generators for the test suite.
+
+One home for the randomized inputs that the pandas-oracle suites feed the
+engine, in two interchangeable tiers:
+
+* **hypothesis strategies** (``HAVE_HYPOTHESIS`` guards them — CI installs
+  hypothesis, minimal envs skip the property tests but still run every
+  fixed case), and
+* **fixed-seed fallbacks** built on ``np.random.Generator`` so the same
+  adversarial shapes are exercised deterministically with no extra deps.
+
+The adversarial shapes the skew work (``repro.adapt``, ``tests/test_skew``)
+cares about are first-class here: power-law / Zipf key draws, the
+99%-one-key table, all-rows-on-one-rank layouts, empty ranks, null-heavy
+frames, and string-keyed tables.  Import from tests as plain modules
+(pytest puts ``tests/`` on ``sys.path``)::
+
+    from strategies import one_key_table, zipf_table, HAVE_HYPOTHESIS
+"""
+
+import numpy as np
+
+try:
+    from hypothesis import HealthCheck, given, settings  # noqa: F401
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    st = None
+    HAVE_HYPOTHESIS = False
+
+__all__ = [
+    "HAVE_HYPOTHESIS", "st", "POOL",
+    "zipf_keys", "zipf_table", "one_key_table", "exact_table",
+    "string_table", "string_keyed_skew_table", "null_heavy_frame",
+    "random_nullable_frame", "all_rows_one_rank", "random_rank_tables",
+    "draw_rank_tables", "nullable_frame", "string_tables",
+]
+
+#: small sorted vocabulary for dictionary-encoded string columns
+POOL = ["ash", "birch", "cedar", "elm", "fir", "oak", "pine", "yew"]
+
+
+# --------------------------------------------------------------------- #
+# Fixed-seed adversarial tables (np.random.Generator based)
+# --------------------------------------------------------------------- #
+def zipf_keys(rng, n, a=1.5, vocab=1000):
+    """Power-law int32 keys: rank-frequency ~ 1/rank**a over ``vocab``
+    distinct values — the classic heavy-head shuffle-skew distribution."""
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    probs = ranks ** -a
+    probs /= probs.sum()
+    return rng.choice(vocab, size=n, p=probs).astype(np.int32)
+
+
+def zipf_table(rng, n, a=1.5, vocab=1000):
+    """Zipf-keyed table with an exact-sum float32 payload."""
+    return {"k": zipf_keys(rng, n, a, vocab),
+            "v": rng.integers(0, 100, n).astype(np.float32)}
+
+
+def one_key_table(rng, n, hot=7, frac=0.99, vocab=1000):
+    """``frac`` of all rows carry one hot key; the rest are uniform.
+    The worst case for hash partitioning: one rank receives ~everything."""
+    keys = np.where(rng.random(n) < frac, hot,
+                    rng.integers(0, vocab, n)).astype(np.int32)
+    return {"k": keys, "v": rng.integers(0, 100, n).astype(np.float32)}
+
+
+def exact_table(rng, n, keys=50):
+    """Integer-valued float32 payloads: float sums are exact, so morsel
+    re-aggregation order cannot perturb bits."""
+    return {"k": rng.integers(0, keys, n).astype(np.int32),
+            "v0": rng.integers(0, 100, n).astype(np.float32)}
+
+
+def string_table(rng, n=128, pool=POOL, value_col="v"):
+    """Dictionary-encodable string-keyed table over a small pool."""
+    return {"s": rng.choice(np.asarray(pool), n),
+            value_col: rng.integers(0, 16, n).astype(np.float32)}
+
+
+def string_keyed_skew_table(rng, n=256, hot="oak", frac=0.99, pool=POOL,
+                            value_col="v"):
+    """String-keyed twin of ``one_key_table``: ``frac`` of rows carry one
+    hot word, the rest draw uniformly from ``pool``."""
+    s = rng.choice(np.asarray(pool), n)
+    s[rng.random(n) < frac] = hot
+    return {"s": s, value_col: rng.integers(0, 16, n).astype(np.float32)}
+
+
+def null_heavy_frame(rng, n=64, names=("v",), null_frac=0.9, key_range=6):
+    """pandas frame where ``null_frac`` of every cell is null (float-NaN
+    encoding) — stresses valid-row sampling and null-key drop paths.
+    Needs pandas; import guarded at call sites."""
+    import pandas as pd
+    cols = {"k": np.where(rng.random(n) < null_frac, np.nan,
+                          rng.integers(0, key_range, n).astype(float))}
+    for nm in names:
+        cols[nm] = np.where(rng.random(n) < null_frac, np.nan,
+                            rng.integers(-30, 31, n).astype(float))
+    return pd.DataFrame(cols)
+
+
+def random_nullable_frame(rng, names=("v",), max_rows=40, null_frac=0.3):
+    """Moderately-null pandas frame (fixed-seed twin of the hypothesis
+    ``nullable_frame`` strategy below)."""
+    import pandas as pd
+    n = int(rng.integers(0, max_rows + 1))
+    cols = {"k": np.where(rng.random(n) < null_frac, np.nan,
+                          rng.integers(0, 6, n).astype(float))}
+    for nm in names:
+        cols[nm] = np.where(rng.random(n) < null_frac, np.nan,
+                            rng.integers(-30, 31, n).astype(float))
+    return pd.DataFrame(cols)
+
+
+def _value_columns(rng_or_vals, n, names):
+    """Shared column typing for the per-rank generators: v/w are float32,
+    u is uint32, anything else int32."""
+    rows = {}
+    for nm, vals in zip(names, rng_or_vals):
+        if nm in ("v", "w"):
+            rows[nm] = np.asarray(vals, np.float32)
+        elif nm == "u":
+            rows[nm] = (np.asarray(vals, np.int64) + 50).astype(np.uint32)
+        else:
+            rows[nm] = np.asarray(vals, np.int32)
+    return rows
+
+
+def all_rows_one_rank(rng, p, n, names=("v",), key_range=7, loaded=0):
+    """Per-rank row dicts (for the vmap rank harness) where rank
+    ``loaded`` holds every row and all other ranks are empty."""
+    ranks = [{} for _ in range(p)]
+    rows = {"k": rng.integers(0, key_range, n).astype(np.int32)}
+    rows.update(_value_columns(
+        [rng.integers(-50, 51, n) for _ in names], n, names))
+    ranks[loaded] = rows
+    return ranks
+
+
+def random_rank_tables(rng, p, names, cap=16, key_range=7):
+    """Fixed-seed twin of ``draw_rank_tables``: per-rank counts hit the
+    extremes (empty / one row / half / exact capacity) with duplicate-rich
+    small-range keys."""
+    ranks = []
+    for _ in range(p):
+        n = int(rng.choice([0, 1, cap // 2, cap]))
+        if n == 0:
+            ranks.append({})
+            continue
+        rows = {"k": rng.integers(0, key_range, n).astype(np.int32)}
+        rows.update(_value_columns(
+            [rng.integers(-50, 51, n) for _ in names], n, names))
+        ranks.append(rows)
+    return ranks
+
+
+# --------------------------------------------------------------------- #
+# Hypothesis strategies (guarded: None without hypothesis)
+# --------------------------------------------------------------------- #
+def draw_rank_tables(data, p, names, cap=16, key_range=7):
+    """Per-rank row dicts drawn interactively from ``st.data()``: counts
+    in {0, 1, cap/2, cap} including the extremes, keys from a small range
+    (duplicates + skew), integer-valued floats so aggregation results are
+    exact.  (Used by the join/groupby/sort property suites.)"""
+    ranks = []
+    for _ in range(p):
+        n = data.draw(st.sampled_from([0, 1, cap // 2, cap]))
+        if n == 0:
+            ranks.append({})
+            continue
+        keys = data.draw(st.lists(st.integers(0, key_range - 1),
+                                  min_size=n, max_size=n))
+        rows = {"k": np.asarray(keys, np.int32)}
+        rows.update(_value_columns(
+            [data.draw(st.lists(st.integers(-50, 50),
+                                min_size=n, max_size=n))
+             for _ in names], n, names))
+        ranks.append(rows)
+    return ranks
+
+
+def nullable_frame(draw, names=("v",), max_rows=40):
+    """A pandas frame: float key ``k`` in a small range (duplicates) and
+    float value columns, every cell independently nullable.  Integer-valued
+    floats keep aggregation sums exact in float32."""
+    import pandas as pd
+    n = draw(st.integers(0, max_rows))
+    cols = {}
+    kvals = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    knull = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    cols["k"] = np.where(knull, np.nan, np.asarray(kvals, float))
+    for nm in names:
+        vals = draw(st.lists(st.integers(-30, 30), min_size=n, max_size=n))
+        nulls = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        cols[nm] = np.where(nulls, np.nan, np.asarray(vals, float))
+    return pd.DataFrame(cols)
+
+
+if HAVE_HYPOTHESIS:
+    _words = st.text(alphabet="abcdef", min_size=0, max_size=5)
+    _pools = st.lists(_words, min_size=1, max_size=12, unique=True)
+
+    @st.composite
+    def string_tables(draw, value_col="v"):
+        """Random string pool + rows over it (forces fresh dictionaries,
+        including cross-table mismatches that must recode)."""
+        pool = draw(_pools)
+        n = draw(st.integers(1, 48))
+        idx = draw(st.lists(st.integers(0, len(pool) - 1),
+                            min_size=n, max_size=n))
+        vals = draw(st.lists(st.integers(0, 9), min_size=n, max_size=n))
+        return {"s": np.asarray([pool[i] for i in idx]),
+                value_col: np.asarray(vals, np.float32)}
+else:  # pragma: no cover - exercised in minimal envs
+    string_tables = None

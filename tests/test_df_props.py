@@ -26,6 +26,9 @@ from repro.dataframe import Table, join_local, shuffle  # noqa: E402
 from repro.dataframe.groupby import groupby as df_groupby  # noqa: E402
 from repro.dataframe.sort import sort as df_sort  # noqa: E402
 
+from strategies import (HAVE_HYPOTHESIS, all_rows_one_rank,  # noqa: E402
+                        draw_rank_tables, random_rank_tables)
+
 CAP = 16  # per-rank capacity; small so exact-capacity cases are cheap
 
 
@@ -228,57 +231,44 @@ def test_sort_empty_ranks_and_ties(rng):
     _check_sort(4, ranks)
 
 
+def test_all_rows_one_rank(rng):
+    # adversarial layout from tests/strategies: one rank holds every row
+    ranks = all_rows_one_rank(rng, 4, CAP, names=("v",))
+    _check_groupby(4, ranks)
+    _check_sort(4, ranks)
+
+
+def test_random_rank_tables_smoke(rng):
+    # fixed-seed twin of the hypothesis suites below (always runs)
+    for _ in range(3):
+        _check_join(2, random_rank_tables(rng, 2, ("v", "i"), cap=CAP),
+                    random_rank_tables(rng, 2, ("w", "u"), cap=CAP))
+        _check_groupby(4, random_rank_tables(rng, 4, ("v",), cap=CAP))
+        _check_sort(4, random_rank_tables(rng, 4, ("v",), cap=CAP))
+
+
 # ---------------------------------------------------------------------- #
-# Hypothesis property tests (pandas oracle).  Guarded with a plain import
-# (not importorskip) so the fixed-case tests above still run without
-# hypothesis; CI installs it via requirements-dev.txt.
+# Hypothesis property tests (pandas oracle).  Strategies live in
+# ``tests/strategies.py`` (shared with the nulls / strings / skew suites);
+# the guard keeps fixed-case tests running without hypothesis — CI
+# installs it via requirements-dev.txt.
 # ---------------------------------------------------------------------- #
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - exercised in minimal envs
-    HAVE_HYPOTHESIS = False
-
-
-def _rank_strategy(data, p, names):
-    """Per-rank row dicts: counts in {0, .., CAP} including the extremes,
-    keys from a small range (duplicates + skew), integer-valued floats so
-    aggregation results are exact."""
-    ranks = []
-    for _ in range(p):
-        n = data.draw(st.sampled_from([0, 1, CAP // 2, CAP]))
-        if n == 0:
-            ranks.append({})
-            continue
-        keys = data.draw(st.lists(st.integers(0, 6), min_size=n, max_size=n))
-        rows = {"k": np.asarray(keys, np.int32)}
-        for nm in names:
-            vals = data.draw(st.lists(st.integers(-50, 50),
-                                      min_size=n, max_size=n))
-            if nm in ("v", "w"):
-                rows[nm] = np.asarray(vals, np.float32)
-            elif nm == "u":
-                rows[nm] = (np.asarray(vals, np.int64) + 50).astype(np.uint32)
-            else:
-                rows[nm] = np.asarray(vals, np.int32)
-        ranks.append(rows)
-    return ranks
-
-
 if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
     @settings(max_examples=15, deadline=None)
     @given(data=st.data(), p=st.sampled_from([1, 2, 4]))
     def test_join_matches_pandas(data, p):
-        lranks = _rank_strategy(data, p, ("v", "i"))
-        rranks = _rank_strategy(data, p, ("w", "u"))
+        lranks = draw_rank_tables(data, p, ("v", "i"), cap=CAP)
+        rranks = draw_rank_tables(data, p, ("w", "u"), cap=CAP)
         _check_join(p, lranks, rranks)
 
     @settings(max_examples=15, deadline=None)
     @given(data=st.data(), p=st.sampled_from([1, 2, 4]))
     def test_groupby_matches_pandas(data, p):
-        _check_groupby(p, _rank_strategy(data, p, ("v",)))
+        _check_groupby(p, draw_rank_tables(data, p, ("v",), cap=CAP))
 
     @settings(max_examples=15, deadline=None)
     @given(data=st.data(), p=st.sampled_from([1, 2, 4]))
     def test_sort_matches_pandas(data, p):
-        _check_sort(p, _rank_strategy(data, p, ("v",)))
+        _check_sort(p, draw_rank_tables(data, p, ("v",), cap=CAP))

@@ -113,3 +113,8 @@ def test_serving_stress():
 @pytest.mark.multidevice
 def test_ingest_parity():
     _run("ingest_parity.py")
+
+
+@pytest.mark.multidevice
+def test_skew_parity():
+    _run("skew_parity.py")

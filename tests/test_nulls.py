@@ -182,43 +182,18 @@ def test_masks_survive_shuffle_and_out_of_core(env):
 
 
 # --------------------------------------------------------------------- #
-# Hypothesis property suite (pandas oracle).  Plain import guard so the
-# fixed cases above run in minimal envs; CI installs hypothesis.
+# Hypothesis property suite (pandas oracle).  Generators live in
+# ``tests/strategies.py`` (shared with the props / strings / skew
+# suites); its guard keeps the fixed cases running in minimal envs —
+# CI installs hypothesis.
 # --------------------------------------------------------------------- #
-try:
+from strategies import (HAVE_HYPOTHESIS, null_heavy_frame,  # noqa: E402
+                        nullable_frame as _nullable_frame,
+                        random_nullable_frame as _random_frame)
+
+if HAVE_HYPOTHESIS:
     from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - exercised in minimal envs
-    HAVE_HYPOTHESIS = False
-
-
-def _nullable_frame(draw, names=("v",), max_rows=40):
-    """A pandas frame: float key ``k`` in a small range (duplicates) and
-    float value columns, every cell independently nullable.  Integer-valued
-    floats keep aggregation sums exact in float32."""
-    n = draw(st.integers(0, max_rows))
-    cols = {}
-    kvals = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
-    knull = draw(st.lists(st.booleans(), min_size=n, max_size=n))
-    cols["k"] = np.where(knull, np.nan, np.asarray(kvals, float))
-    for nm in names:
-        vals = draw(st.lists(st.integers(-30, 30), min_size=n, max_size=n))
-        nulls = draw(st.lists(st.booleans(), min_size=n, max_size=n))
-        cols[nm] = np.where(nulls, np.nan, np.asarray(vals, float))
-    return pd.DataFrame(cols)
-
-
-def _random_frame(rng, names=("v",), max_rows=40):
-    """Random-module twin of ``_nullable_frame`` for the no-hypothesis
-    smoke variants below."""
-    n = int(rng.integers(0, max_rows + 1))
-    cols = {"k": np.where(rng.random(n) < 0.3, np.nan,
-                          rng.integers(0, 6, n).astype(float))}
-    for nm in names:
-        cols[nm] = np.where(rng.random(n) < 0.3, np.nan,
-                            rng.integers(-30, 31, n).astype(float))
-    return pd.DataFrame(cols)
 
 
 # -- oracle checkers (shared by hypothesis + fixed smoke variants) ------ #
@@ -293,6 +268,16 @@ def test_random_frames_smoke():
         _check_join(_random_frame(rng, names=("v",), max_rows=24),
                     _random_frame(rng, names=("w",), max_rows=24))
         _check_sort(_random_frame(rng), None if trial else 8)
+
+
+def test_null_heavy_frames():
+    # 90%-null cells: valid-row sampling, null-key drops, all-null groups
+    rng = np.random.default_rng(23)
+    pdf = null_heavy_frame(rng, n=64, null_frac=0.9)
+    _check_groupby(pdf)
+    _check_sort(pdf, None)
+    _check_join(null_heavy_frame(rng, n=24, null_frac=0.9),
+                null_heavy_frame(rng, n=24, names=("w",), null_frac=0.9))
 
 
 if HAVE_HYPOTHESIS:

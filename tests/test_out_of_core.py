@@ -17,11 +17,10 @@ from repro.expr import col
 from repro.dataframe.table import Table
 
 
-def _exact_data(rng, n, keys=50):
-    """Integer-valued float32 payloads: float sums are exact, so morsel
-    re-aggregation order cannot perturb bits."""
-    return {"k": rng.integers(0, keys, n).astype(np.int32),
-            "v0": rng.integers(0, 100, n).astype(np.float32)}
+# shared generators (tests/strategies.py): exact_table keeps float sums
+# exact so morsel re-aggregation order cannot perturb bits
+from strategies import exact_table as _exact_data  # noqa: E402
+from strategies import one_key_table, zipf_table  # noqa: E402
 
 
 # ---------------------------------------------------------------------- #
@@ -150,6 +149,26 @@ def test_morsel_groupby_only_matches(rng):
     ro, oo = np.argsort(ref["k"]), np.argsort(out["k"])
     for c in ref:
         np.testing.assert_array_equal(ref[c][ro], out[c][oo])
+
+
+def test_morsel_adversarial_keys_bit_identical(rng):
+    # Zipf(1.5) and 99%-one-key tables (tests/strategies) through the
+    # morsel path: adversarial key mass must not perturb results or drop
+    # rows even on the 1-device harness (salting is a no-op at p=1, so
+    # this pins the degenerate-gang behavior of the adaptive layer too)
+    env = CylonEnv()
+    for data in (zipf_table(rng, 500), one_key_table(rng, 500)):
+        data = {"k": data["k"], "v0": data["v"]}
+        plan = Plan.scan("l").groupby(["k"], {"v0": ["sum", "count"]})
+        ref = execute(plan, env, {"l": DistTable.from_numpy(data, 1)},
+                      optimize=False).to_numpy()
+        out, st = execute(plan, env, {"l": data}, optimize=False,
+                          morsel_rows=64, collect_stats=True)
+        assert st.rows_dropped == 0
+        o = out.to_numpy()
+        ro, oo = np.argsort(ref["k"]), np.argsort(o["k"])
+        for c in ref:
+            np.testing.assert_array_equal(ref[c][ro], o[c][oo])
 
 
 def test_morsel_respills_mismatched_parallelism(rng):

@@ -1,0 +1,413 @@
+"""The adaptive skew-mitigation layer (``repro.adapt``) under adversarial
+data, locked against a pandas oracle and against its own off-switch.
+
+Unit scope (1 CPU device): detection, tuning, and re-routing are all
+driver-side host logic, so the detector / tuner / splitter-estimator /
+respill contracts are pinned directly.  Salting itself is gated off at
+``p == 1`` by construction, which this suite also pins — ``adaptive=True``
+must be bit-identical to ``adaptive=False`` whenever no mitigation fires,
+with zero new compile-cache keys.  8-device salted execution lives in
+``tests/md_scripts/skew_parity.py``.
+
+Covered here:
+
+* hot-key detection: fires on the 99%-one-key table, stays silent on
+  uniform keys / tiny tables / small samples / ``p == 1``,
+* decision pass: raw groupbys and joins fire, pre-aggregated groupbys and
+  oversized build sides don't; cache token is empty iff nothing fired,
+* salted routing math: cold rows keep their hash home, hot rows fan out
+  over ``k`` ranks,
+* morsel autotuner: observed-peak jump, the salted no-double-split rule,
+  capacity growth at the morsel floor, expansion carry-over, and the
+  ``adaptive=False`` fallback being exactly the legacy blind halving,
+* splitter estimator: refresh on imbalance, give-up on identical
+  resample, disabled config,
+* ``respill_routed``: arbitrary host re-routing preserves every row,
+* end-to-end: adaptive on == adaptive off bitwise (in-core and morsel)
+  vs the pandas oracle, ``rows_dropped == 0`` under ``overflow="degrade"``
+  with autotune replanning, and the session/collect knob threading.
+"""
+
+import numpy as np
+import pytest
+
+pd = pytest.importorskip("pandas")
+
+import jax.numpy as jnp  # noqa: E402
+
+import repro.df as rdf  # noqa: E402
+from repro.adapt import (AdaptiveConfig, MorselTuner,  # noqa: E402
+                         SplitterEstimator, resolve_adaptive)
+from repro.adapt.config import DISABLED  # noqa: E402
+from repro.adapt.hotkeys import (SaltDecision, detect_hot_keys,  # noqa: E402
+                                 plan_salt_decisions, salt_cache_token,
+                                 sample_key_columns)
+from repro.comm import get_communicator  # noqa: E402
+from repro.core import CylonEnv, DistTable, Plan, SpillTable, execute  # noqa: E402
+from repro.core.store import respill_routed  # noqa: E402
+from repro.dataframe.groupby import salted_dest  # noqa: E402
+from repro.dataframe.ops_local import hash_columns_np  # noqa: E402
+from repro.dataframe.table import Table  # noqa: E402
+from repro.expr import col  # noqa: E402
+from repro.faults import default_degrade_step  # noqa: E402
+from repro.planner import compile_plan  # noqa: E402
+from repro.planner.explain import adapt_note  # noqa: E402
+
+from strategies import one_key_table, zipf_table  # noqa: E402
+
+P = 4  # simulated gang size for driver-side detection units
+
+
+@pytest.fixture
+def env():
+    e = CylonEnv()
+    rdf.set_default_env(e)
+    yield e
+    rdf.reset_default_env()
+
+
+# --------------------------------------------------------------------- #
+# Config resolution
+# --------------------------------------------------------------------- #
+def test_resolve_adaptive_forms():
+    assert resolve_adaptive(None).enabled
+    assert resolve_adaptive(True).enabled
+    off = resolve_adaptive(False)
+    assert not (off.enabled or off.salting or off.autotune
+                or off.splitter_refresh)
+    assert off == DISABLED
+    assert resolve_adaptive({"salt_k": 3}).salt_k == 3
+    cfg = AdaptiveConfig(max_hot_keys=2)
+    assert resolve_adaptive(cfg) is cfg
+    with pytest.raises(TypeError, match="unknown adaptive"):
+        resolve_adaptive({"salt_q": 3})
+    with pytest.raises(TypeError, match="adaptive="):
+        resolve_adaptive("yes")
+
+
+# --------------------------------------------------------------------- #
+# Hot-key detection
+# --------------------------------------------------------------------- #
+def test_detect_hot_keys_fires_on_one_key(rng):
+    data = one_key_table(rng, 4096)
+    cfg = AdaptiveConfig()
+    hot = detect_hot_keys(sample_key_columns(data, ["k"], cfg),
+                          ["k"], P, cfg)
+    assert len(hot) >= 1
+    # the detected hash is the hot key's hash
+    want = int(hash_columns_np({"k": np.array([7], np.int32)}, ["k"])[0])
+    assert want in hot
+
+
+def test_detect_hot_keys_silent_cases(rng):
+    cfg = AdaptiveConfig()
+    uniform = {"k": rng.integers(0, 10_000, 4096).astype(np.int32)}
+    assert detect_hot_keys(sample_key_columns(uniform, ["k"], cfg),
+                           ["k"], P, cfg) == ()
+    skewed = one_key_table(rng, 4096)
+    # p == 1: every rank is "the hot rank", salting is meaningless
+    assert detect_hot_keys(sample_key_columns(skewed, ["k"], cfg),
+                           ["k"], 1, cfg) == ()
+    # sample below the noise floor
+    tiny = {k: v[:16] for k, v in skewed.items()}
+    assert detect_hot_keys(sample_key_columns(tiny, ["k"], cfg),
+                           ["k"], P, cfg) == ()
+    # salting feature-toggled off
+    off = AdaptiveConfig(salting=False)
+    assert detect_hot_keys(sample_key_columns(skewed, ["k"], off),
+                           ["k"], P, off) == ()
+
+
+def test_detection_is_null_aware(rng):
+    # null-heavy keys: masked rows are excluded from the sample, so an
+    # all-null-but-one-key column still detects that one real key
+    from repro.nulls import mask_name
+    n = 2048
+    keys = np.full(n, 7, np.int32)
+    valid = rng.random(n) < 0.5
+    data = {"k": keys, mask_name("k"): valid,
+            "v": np.ones(n, np.float32)}
+    cfg = AdaptiveConfig()
+    sampled = sample_key_columns(data, ["k"], cfg)
+    assert len(sampled["k"]) == int(valid.sum())
+    assert len(detect_hot_keys(sampled, ["k"], P, cfg)) == 1
+
+
+# --------------------------------------------------------------------- #
+# The per-plan decision pass
+# --------------------------------------------------------------------- #
+def _lower(plan, tables):
+    return compile_plan(plan, tables, optimize_plan=False)
+
+
+def test_decisions_raw_groupby_fires_preagg_does_not(rng):
+    data = one_key_table(rng, 4096)
+    cfg = AdaptiveConfig()
+    raw = _lower(Plan.scan("t").groupby(["k"], {"v": ["sum"]},
+                                        pre_aggregate=False), {"t": data})
+    events = []
+    salt = plan_salt_decisions(raw.order, {"t": data}, P, cfg, events)
+    assert len(salt) == 1
+    (dec,) = salt.values()
+    assert dec.kind == "groupby" and dec.k == P and dec.keys == ("k",)
+    assert events and events[0]["kind"] == "salted"
+    assert adapt_note(events[0]) == f"salted[k:{P}, hot:{len(dec.hot_hashes)}]"
+    # pre-aggregation is itself the first-line mitigation: never salted
+    pre = _lower(Plan.scan("t").groupby(["k"], {"v": ["sum"]},
+                                        pre_aggregate=True), {"t": data})
+    assert plan_salt_decisions(pre.order, {"t": data}, P, cfg) == {}
+
+
+def test_decisions_chase_through_row_preserving_ops(rng):
+    # detection walks filter/project back to the scan: a filtered raw
+    # groupby over skewed input still fires
+    data = one_key_table(rng, 4096)
+    plan = (Plan.scan("t").with_columns({"v2": col("v") + 1.0})
+            .groupby(["k"], {"v": ["sum"]}, pre_aggregate=False))
+    low = _lower(plan, {"t": data})
+    salt = plan_salt_decisions(low.order, {"t": data}, P, AdaptiveConfig())
+    assert len(salt) == 1
+
+
+def test_decisions_join_broadcast_cap(rng):
+    probe = one_key_table(rng, 4096)
+    build = {"k": np.arange(64, dtype=np.int32),
+             "w": np.ones(64, np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k")
+    low = _lower(plan, {"l": probe, "r": build})
+    events = []
+    salt = plan_salt_decisions(low.order, {"l": probe, "r": build}, P,
+                               AdaptiveConfig(), events)
+    assert len(salt) == 1
+    (dec,) = salt.values()
+    assert dec.kind == "join" and dec.hot_cap >= 1 and dec.hot_cap % 8 == 0
+    assert adapt_note(events[0]).startswith("salted[broadcast")
+    # a build side with too many hot rows must NOT broadcast
+    fat = {"k": np.full(4096, 7, np.int32), "w": np.ones(4096, np.float32)}
+    stingy = AdaptiveConfig(max_broadcast_rows=100)
+    assert plan_salt_decisions(low.order, {"l": probe, "r": fat}, P,
+                               stingy) == {}
+
+
+def test_salt_cache_token_empty_iff_no_decisions(rng):
+    assert salt_cache_token({}) == ()
+    d = SaltDecision("groupby", ("k",), (123,), k=4, node_index=0)
+    tok = salt_cache_token({5: d})
+    assert tok and tok[0] == "salt"
+    assert salt_cache_token({5: d}, nids=[9]) == ()
+    assert salt_cache_token({5: d}, nids=[5]) == tok
+
+
+# --------------------------------------------------------------------- #
+# Salted routing math (pure jnp, no collectives)
+# --------------------------------------------------------------------- #
+def test_salted_dest_spreads_hot_keeps_cold(rng):
+    comm = get_communicator("xla", "skew")  # size 1 off-vmap; patch p via P
+    cap = 64
+    # contiguous hot block (a stride-P hot pattern would alias with the
+    # arange%k salt and collapse to one dest — position-dependent salting
+    # is fine for real skew, where hot rows are dense, not periodic)
+    keys = np.where(np.arange(cap) < 16, 7,
+                    rng.integers(100, 200, cap)).astype(np.int32)
+    t = Table({"k": jnp.asarray(keys)}, cap)
+    h = hash_columns_np({"k": keys}, ["k"])
+    hot_hash = int(hash_columns_np({"k": np.array([7], np.int32)}, ["k"])[0])
+
+    class _FakeComm:
+        def size(self):
+            return P
+
+    dest, is_hot = salted_dest(t, _FakeComm(), ["k"], (hot_hash,), P)
+    dest, is_hot = np.asarray(dest), np.asarray(is_hot)
+    np.testing.assert_array_equal(is_hot, keys == 7)
+    # cold rows: exactly the unsalted home
+    np.testing.assert_array_equal(dest[~is_hot],
+                                  (h[~is_hot] % P).astype(np.int32))
+    # hot rows land on every rank, not one
+    assert len(np.unique(dest[is_hot])) == P
+    assert comm is not None
+
+
+# --------------------------------------------------------------------- #
+# Morsel autotuner
+# --------------------------------------------------------------------- #
+def _drop_stats(p, worst):
+    a = np.zeros((p, 3), np.int64)
+    a[0, 2] = worst
+    return [a]
+
+
+def test_tuner_jumps_to_observed_peak():
+    ev = []
+    t = MorselTuner(AdaptiveConfig(), events=ev)
+    m, w = t.degrade(1024, 2048, _drop_stats(4, 6144))
+    # peak = 2048 + 6144 = 8192 -> M' ~ 1024 * (2048/8192) * 0.9 = 230
+    assert m == 232 and w == 2048
+    assert t.steps == 1 and ev[0]["how"] == "shrink-morsel"
+    # the jump beats blind halving: one step instead of three
+    assert m < 1024 // 2 // 2
+
+
+def test_tuner_salted_segment_never_double_splits():
+    # a salted segment that still overflows keeps its morsel size (the
+    # routing is already balanced) and grows capacity to the peak instead
+    ev = []
+    t = MorselTuner(AdaptiveConfig(), events=ev)
+    m, w = t.degrade(256, 512, _drop_stats(4, 100), salted=True)
+    assert m == 256                      # morsels untouched
+    assert w >= 612 and w % 8 == 0       # round8(612 * 1.25)
+    assert ev[0]["how"] == "grow-capacity"
+
+
+def test_tuner_floor_and_fit_miss():
+    t = MorselTuner(AdaptiveConfig())
+    # at the morsel floor the only lever left is capacity
+    assert t.degrade(8, 64, _drop_stats(2, 9)) == (8, 128)
+    # "estimate says it fits" (zero observed drop) still must shrink
+    m, w = t.degrade(64, 128, _drop_stats(2, 0))
+    assert m < 64 and w == 128
+
+
+def test_tuner_expansion_carry_over():
+    t = MorselTuner(AdaptiveConfig(), capacity_factor=2.0)
+    assert t.initial_morsel(512) == 512
+    t.observe_expansion(100, 800)        # 8x join blow-up
+    assert t.initial_morsel(512) == 128  # 512 * 2 / 8
+    # disabled tuner never pre-shrinks
+    t2 = MorselTuner(DISABLED, capacity_factor=2.0)
+    t2.observe_expansion(100, 800)
+    assert t2.initial_morsel(512) == 512
+
+
+def test_disabled_fallback_is_legacy_halving():
+    assert not MorselTuner(DISABLED).enabled
+    # PR 7's blind schedule, preserved verbatim for adaptive=False
+    assert default_degrade_step(1024, 2048) == (512, 2048)
+    assert default_degrade_step(16, 2048) == (8, 2048)
+    assert default_degrade_step(8, 2048) == (8, 4096)
+
+
+# --------------------------------------------------------------------- #
+# Splitter estimator
+# --------------------------------------------------------------------- #
+def _estimator(cfg, resample):
+    return SplitterEstimator(np.array([10, 20, 30]), resample, 8, cfg,
+                             events=[], label="sort(k)")
+
+
+def test_splitter_refresh_on_imbalance():
+    fresh = np.array([1, 2, 3])
+    est = _estimator(AdaptiveConfig(), lambda s: fresh)
+    # balanced counts: no refresh however many rows flow
+    assert not est.observe(np.array([100, 100, 100, 100]))
+    assert est.refreshes == 0
+    # one rank takes ~everything -> refresh with a boosted sample
+    assert est.observe(np.array([0, 4000, 0, 0]))
+    assert est.refreshes == 1
+    np.testing.assert_array_equal(est.splitters, fresh)
+
+
+def test_splitter_gives_up_on_identical_resample():
+    est = _estimator(AdaptiveConfig(),
+                     lambda s: np.array([10, 20, 30]))
+    assert not est.observe(np.array([0, 4000, 0, 0]))
+    # identical resample: the imbalance is the data; budget closed
+    assert est.refreshes == est._cfg.max_refreshes
+    assert not est.observe(np.array([0, 4000, 0, 0]))
+
+
+def test_splitter_disabled_never_refreshes():
+    est = _estimator(DISABLED, lambda s: np.array([1, 2, 3]))
+    assert not est.enabled
+    assert not est.observe(np.array([0, 40000, 0, 0]))
+    assert est.refreshes == 0
+
+
+# --------------------------------------------------------------------- #
+# Host re-routing primitive
+# --------------------------------------------------------------------- #
+def test_respill_routed_preserves_rows(rng):
+    data = {"k": rng.integers(0, 97, 300).astype(np.int32),
+            "v": rng.random(300).astype(np.float32)}
+    sp = SpillTable.from_numpy(data, 4, chunk_rows=32)
+    out = respill_routed(sp, lambda c: c["k"].astype(np.int64) % 4)
+    assert out.total_rows() == 300
+    for r in range(4):
+        cols = out.rank_concat(r)
+        assert (cols["k"] % 4 == r).all()
+    got = out.to_numpy()
+    np.testing.assert_array_equal(np.sort(got["v"]), np.sort(data["v"]))
+
+
+# --------------------------------------------------------------------- #
+# End-to-end: oracle parity + bit-identity with the off-switch (p = 1)
+# --------------------------------------------------------------------- #
+def _oracle_groupby(data):
+    return (pd.DataFrame(data).groupby("k")
+            .agg(v_sum=("v", "sum"), v_count=("v", "count"))
+            .reset_index().sort_values("k").reset_index(drop=True))
+
+
+@pytest.mark.parametrize("make", [one_key_table, zipf_table])
+def test_adaptive_on_off_bit_identical_vs_pandas(env, rng, make):
+    data = make(rng, 2048)
+    plan = (Plan.scan("t").groupby(["k"], {"v": ["sum", "count"]},
+                                   pre_aggregate=False).sort(["k"]))
+    t = DistTable.from_numpy(data, 1)
+    ref, st_off = execute(plan, env, {"t": t}, adaptive=False,
+                          collect_stats=True)
+    got, st_on = execute(plan, env, {"t": t}, adaptive=True,
+                         collect_stats=True)
+    assert st_off.adaptive is False and st_on.adaptive is True
+    # p == 1: nothing fires, and the cache keys must be shared
+    assert st_on.salted_shuffles == 0
+    assert st_on.cache_hits >= 1  # re-used the adaptive=False programs
+    ref_np, got_np = ref.to_numpy(), got.to_numpy()
+    for c in ref_np:
+        np.testing.assert_array_equal(ref_np[c], got_np[c])
+    want = _oracle_groupby(data)
+    np.testing.assert_array_equal(got_np["k"], want["k"])
+    np.testing.assert_array_equal(got_np["v_sum"],
+                                  want["v_sum"].astype(np.float32))
+    np.testing.assert_array_equal(got_np["v_count"], want["v_count"])
+
+
+def test_degrade_autotune_recovers_every_row(env):
+    # the exploding join from the PR 7 degrade test, now replanned by the
+    # tuner: zero drops, same rows, and the replay count is recorded
+    ld = {"k": np.zeros(64, np.int32), "v0": np.arange(64, dtype=np.float32)}
+    rd = {"k": np.zeros(8, np.int32), "w": np.arange(8, dtype=np.float32)}
+    plan = Plan.scan("l").join(Plan.scan("r"), on="k")
+    outs = {}
+    for adaptive in (False, True):
+        sp, st = execute(plan, env, {"l": ld, "r": rd}, optimize=False,
+                         morsel_rows=16, collect_stats=True,
+                         adaptive=adaptive)
+        assert st.rows_dropped == 0
+        assert st.degraded > 0
+        if adaptive:
+            assert st.autotune_steps == st.degraded
+            assert any(e["kind"] == "autotune" for e in st.adapt_events)
+        out = sp.to_numpy()
+        assert len(out["k"]) == 64 * 8
+        order = np.lexsort((out["w"], out["v0"]))
+        outs[adaptive] = {c: out[c][order] for c in out}
+    for c in outs[True]:
+        np.testing.assert_array_equal(outs[True][c], outs[False][c])
+
+
+def test_session_and_collect_knob_threading(env, rng):
+    data = one_key_table(rng, 512)
+    df = rdf.read_numpy(data)
+    q = df.groupby("k").agg({"v": ["sum"]})
+    _, st = q.collect(collect_stats=True)
+    assert st.adaptive is True           # default on
+    with rdf.session(env=env, adaptive=False):
+        _, st = q.collect(collect_stats=True)
+        assert st.adaptive is False
+        # per-call argument beats the session default
+        _, st = q.collect(collect_stats=True, adaptive=True)
+        assert st.adaptive is True
+    _, st = q.collect(collect_stats=True,
+                      adaptive={"salting": False})
+    assert st.adaptive is True

@@ -27,12 +27,16 @@ from repro.dataframe.schema import (DictTypeError, decode_codes,  # noqa: E402
                                     merge_dictionaries, recode_mapping)
 from repro.expr import col, lit  # noqa: E402
 
-try:
+# shared generators (tests/strategies.py): POOL, the string-table
+# fallbacks, and the hypothesis composites — the flag keeps the fixed
+# cases running in minimal envs, CI installs hypothesis
+from strategies import (HAVE_HYPOTHESIS, POOL,  # noqa: E402
+                        string_keyed_skew_table, string_table as _sdata,
+                        string_tables)
+
+if HAVE_HYPOTHESIS:
     from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - exercised in minimal envs
-    HAVE_HYPOTHESIS = False
 
 
 @pytest.fixture
@@ -41,14 +45,6 @@ def env():
     rdf.set_default_env(e)
     yield e
     rdf.reset_default_env()
-
-
-POOL = ["ash", "birch", "cedar", "elm", "fir", "oak", "pine", "yew"]
-
-
-def _sdata(rng, n=128, pool=POOL):
-    return {"s": rng.choice(np.asarray(pool), n),
-            "v": rng.integers(0, 16, n).astype(np.float32)}
 
 
 def _records(d, keys):
@@ -218,6 +214,16 @@ def test_string_groupby_vs_pandas(env, rng):
     want = (pd.DataFrame(data).groupby("s")
             .agg(v_sum=("v", "sum"), v_mean=("v", "mean"),
                  v_count=("v", "count")).reset_index())
+    _assert_same(out, {c: want[c].to_numpy() for c in want}, ["s"])
+
+
+def test_string_keyed_skew_groupby_vs_pandas(env, rng):
+    # 99% of rows on one hot word (tests/strategies adversarial shape)
+    data = string_keyed_skew_table(rng, n=256)
+    out = (rdf.read_numpy(data).groupby("s")
+           .agg({"v": ["sum", "count"]}).to_numpy())
+    want = (pd.DataFrame(data).groupby("s")
+            .agg(v_sum=("v", "sum"), v_count=("v", "count")).reset_index())
     _assert_same(out, {c: want[c].to_numpy() for c in want}, ["s"])
 
 
@@ -394,17 +400,6 @@ def test_explain_golden_recode():
 # ---------------------------------------------------------------------- #
 if HAVE_HYPOTHESIS:
     _words = st.text(alphabet="abcdef", min_size=0, max_size=5)
-    _pools = st.lists(_words, min_size=1, max_size=12, unique=True)
-
-    @st.composite
-    def string_tables(draw, value_col="v"):
-        pool = draw(_pools)
-        n = draw(st.integers(1, 48))
-        idx = draw(st.lists(st.integers(0, len(pool) - 1),
-                            min_size=n, max_size=n))
-        vals = draw(st.lists(st.integers(0, 9), min_size=n, max_size=n))
-        return {"s": np.asarray([pool[i] for i in idx]),
-                value_col: np.asarray(vals, np.float32)}
 
     @settings(max_examples=25, deadline=None,
               suppress_health_check=[HealthCheck.function_scoped_fixture])
